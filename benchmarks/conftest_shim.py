@@ -1,0 +1,15 @@
+"""Small shared fixtures for benchmarks (no pytest dependency)."""
+from __future__ import annotations
+
+from benchmarks.evolving import make_benchmark_graph
+from repro.core.bounds import compute_bounds
+from repro.core.qrs import build_qrs
+from repro.core.semiring import SEMIRINGS
+
+
+def make_small_qrs():
+    eg = make_benchmark_graph(num_vertices=2048, num_edges=16384,
+                              num_snapshots=8, batch_size=200)
+    sr = SEMIRINGS["sssp"]
+    b = compute_bounds(eg, sr, 0)
+    return build_qrs(eg, b.uvv, b.val_cap, sr), eg

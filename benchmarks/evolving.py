@@ -1,0 +1,53 @@
+"""Shared harness for the paper-validation benchmarks (CPU, real timings)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import BASELINES
+from repro.core.bounds import compute_bounds
+from repro.core.semiring import SEMIRINGS
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.structures import build_evolving_graph
+
+
+def make_benchmark_graph(
+    *, num_vertices=8192, num_edges=65536, num_snapshots=16, batch_size=600,
+    seed=7, readd_prob=0.25,
+):
+    src, dst = generate_rmat(num_vertices, num_edges, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    (bs, bd, bw), deltas = generate_evolving_stream(
+        src, dst, w, num_vertices, num_snapshots=num_snapshots,
+        batch_size=batch_size, readd_prob=readd_prob, seed=seed + 2,
+    )
+    return build_evolving_graph(bs, bd, bw, deltas, num_vertices)
+
+
+def time_method(eg, query: str, method: str, source=0, *, repeats=1):
+    """Median wall-clock seconds (post-warmup: first call includes compile)."""
+    sr = SEMIRINGS[query]
+    fn = BASELINES[method]
+    fn(eg, sr, source)  # warmup/compile
+    times = []
+    res = stats = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res, stats = fn(eg, sr, source)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), res, stats
+
+
+def uvv_stats(eg, query: str, source=0):
+    """(true UVV fraction, detected fraction, detected/true recall)."""
+    sr = SEMIRINGS[query]
+    full, _ = BASELINES["full"](eg, sr, source)
+    true_uvv = np.all(full == full[0:1, :], axis=0)
+    detected = np.asarray(compute_bounds(eg, sr, source).uvv)
+    recall = detected.sum() / max(1, true_uvv.sum())
+    return float(true_uvv.mean()), float(detected.mean()), float(recall)

@@ -1,0 +1,183 @@
+"""Benchmark suite — one entry per paper table/figure. CSV: name,us_per_call,derived.
+
+  table4   — KS / CG / QRS / CQRS wall-clock + speedups (paper Table 4)
+  fig9     — QRS edge/vertex reduction fractions        (paper Figure 9)
+  fig10    — true vs detected UVV fractions             (paper Figure 10)
+  fig12a   — sensitivity to number of snapshots         (paper Figure 12a)
+  fig12b   — sensitivity to update-batch size           (paper Figure 12b)
+  kernels  — vrelax / embedding_bag / ell_agg / flash-attn op timings
+  roofline — summary of dry-run-derived roofline terms (if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.evolving import make_benchmark_graph, time_method, uvv_stats  # noqa: E402
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------- table 4
+def bench_table4(fast: bool):
+    scale = dict(num_vertices=4096, num_edges=32768, num_snapshots=8, batch_size=400) \
+        if fast else dict(num_vertices=8192, num_edges=65536, num_snapshots=16, batch_size=600)
+    eg = make_benchmark_graph(**scale)
+    for query in (["sssp"] if fast else ["bfs", "sssp", "sswp"]):
+        t_ks, ref, _ = time_method(eg, query, "kickstarter")
+        emit(f"table4/{query}/kickstarter", t_ks * 1e6, "baseline")
+        for method in ("commongraph", "qrs", "cqrs", "cqrs_folded"):
+            t, res, stats = time_method(eg, query, method)
+            assert np.allclose(res, ref), f"{method} mismatch vs kickstarter"
+            emit(f"table4/{query}/{method}", t * 1e6,
+                 f"speedup_vs_ks={t_ks / t:.2f}x")
+
+
+# ---------------------------------------------------------------- fig 9/10
+def bench_fig9_10(fast: bool):
+    eg = make_benchmark_graph(
+        num_vertices=4096, num_edges=32768,
+        num_snapshots=8 if fast else 16, batch_size=400,
+    )
+    from repro.core.baselines import run_qrs
+    from repro.core.semiring import SEMIRINGS
+
+    for query in (["sssp"] if fast else ["bfs", "sssp", "sswp", "ssnp", "viterbi"]):
+        t0 = time.perf_counter()
+        _, stats = run_qrs(eg, SEMIRINGS[query], 0)
+        dt = time.perf_counter() - t0
+        emit(f"fig9/{query}/frac_edges_kept", dt * 1e6,
+             f"frac={stats['frac_edges_kept']:.4f}")
+        emit(f"fig9/{query}/frac_vertices_incremental", dt * 1e6,
+             f"frac={1.0 - stats['frac_uvv']:.4f}")
+        t0 = time.perf_counter()
+        true_f, det_f, recall = uvv_stats(eg, query)
+        dt = time.perf_counter() - t0
+        emit(f"fig10/{query}/uvv", dt * 1e6,
+             f"true={true_f:.4f};detected={det_f:.4f};recall={recall:.4f}")
+
+
+# ---------------------------------------------------------------- fig 12
+def bench_fig12(fast: bool):
+    snaps = [8, 16] if fast else [8, 16, 32]
+    for s in snaps:
+        eg = make_benchmark_graph(num_vertices=4096, num_edges=32768,
+                                  num_snapshots=s, batch_size=400)
+        t_ks, _, _ = time_method(eg, "sssp", "kickstarter")
+        t_c, _, _ = time_method(eg, "sssp", "cqrs")
+        emit(f"fig12a/snapshots={s}/cqrs", t_c * 1e6,
+             f"speedup_vs_ks={t_ks / t_c:.2f}x")
+    batches = [200, 800] if fast else [200, 400, 800, 1600]
+    for b in batches:
+        eg = make_benchmark_graph(num_vertices=4096, num_edges=32768,
+                                  num_snapshots=8, batch_size=b)
+        t_ks, _, _ = time_method(eg, "sssp", "kickstarter")
+        t_c, _, stats = time_method(eg, "sssp", "cqrs")
+        emit(f"fig12b/batch={b}/cqrs", t_c * 1e6,
+             f"speedup_vs_ks={t_ks / t_c:.2f}x;uvv={stats['frac_uvv']:.3f}")
+
+
+# ---------------------------------------------------------------- kernels
+def bench_kernels(fast: bool):
+    import jax
+    import jax.numpy as jnp
+
+    def timeit(fn, *args, n=3):
+        fn(*args)  # compile
+        jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    rng = np.random.default_rng(0)
+    # vrelax XLA-reference superstep (kernel path is interpret-mode on CPU)
+    from repro.core.concurrent import concurrent_fixpoint
+    from repro.core.semiring import SEMIRINGS
+    from benchmarks.conftest_shim import make_small_qrs
+
+    qrs, eg = make_small_qrs()
+    sr = SEMIRINGS["sssp"]
+    us = timeit(
+        lambda: concurrent_fixpoint(
+            qrs.bootstrap, qrs.src, qrs.dst, qrs.weight, qrs.presence,
+            qrs.valid, sr, eg.num_vertices, eg.num_snapshots,
+        )[0].block_until_ready()
+    )
+    emit("kernels/cqrs_fixpoint_xla", us, f"S={eg.num_snapshots}")
+
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    table = jnp.asarray(rng.normal(size=(10000, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 10000, (256, 32)).astype(np.int32))
+    us = timeit(lambda: embedding_bag(table, idx, use_kernel=False))
+    emit("kernels/embedding_bag_xla", us, "B=256,L=32,D=128")
+
+    from repro.kernels.ell_agg.ops import ell_multi_aggregate
+    feats = jnp.asarray(rng.normal(size=(512, 32, 128)).astype(np.float32))
+    valid = jnp.asarray(rng.random((512, 32)) > 0.3)
+    us = timeit(lambda: ell_multi_aggregate(feats, valid, use_kernel=False))
+    emit("kernels/ell_agg_xla", us, "R=512,D=32,F=128")
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jnp.asarray(rng.normal(size=(1, 4, 512, 64)).astype(np.float32))
+    us = timeit(lambda: flash_attention(q, q, q, use_kernel=False))
+    emit("kernels/attention_xla", us, "T=512,H=4,d=64")
+
+
+# ---------------------------------------------------------------- roofline
+def bench_roofline_summary(fast: bool):
+    pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
+    files = sorted(glob.glob(pat))
+    if not files:
+        emit("roofline/none", 0.0, "run launch.dryrun first")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r.get("roofline_fraction")
+        emit(
+            f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+            bound * 1e6,
+            f"dominant={r['dominant']};frac={frac if frac is None else round(frac, 4)}",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    benches = {
+        "table4": bench_table4,
+        "fig9_10": bench_fig9_10,
+        "fig12": bench_fig12,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline_summary,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        fn(args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""LM serving demo: prefill + batched decode with the request scheduler.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import TransformerConfig
+from repro.models.params import init_params
+from repro.models.transformer import cache_defs, decode_step, transformer_defs
+from repro.serving.scheduler import Request, RequestScheduler
+
+CFG = TransformerConfig(
+    name="serve-demo", num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+    head_dim=64, d_ff=1024, vocab_size=1024, remat=False,
+)
+BATCH = 4
+MAX_LEN = 128
+
+
+def main():
+    defs = transformer_defs(CFG)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    cache = init_params(cache_defs(CFG, BATCH, MAX_LEN), jax.random.PRNGKey(1))
+
+    # NOTE: the scheduler drives token-at-a-time decode over per-slot
+    # positions; each slot writes its own cache row at its own index.
+    state = {"cache": cache}
+
+    @jax.jit
+    def decode_at(params, cache, tokens, positions):
+        # per-slot positions: run decode per unique index via vmap-style
+        # masking — demo uses lockstep positions per wave for simplicity
+        logits, new_cache = decode_step(CFG, params, tokens, cache, positions[0])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    def decode_token(tokens, positions, mask):
+        nxt, state["cache"] = decode_at(params, state["cache"], tokens, positions)
+        return nxt
+
+    sched = RequestScheduler(batch_size=BATCH, eos_id=0, max_len=MAX_LEN)
+    for uid in range(8):
+        prompt = [1 + (uid * 7 + k) % (CFG.vocab_size - 1) for k in range(5)]
+        sched.submit(Request(uid=uid, prompt=prompt, max_new_tokens=8))
+
+    done = sched.run(decode_token, max_steps=200)
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"request {r.uid}: prompt={r.prompt} → generated={r.generated}")
+    print(f"served {len(done)} requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""GNN training demo: PNA node classification with the neighbor sampler.
+
+    PYTHONPATH=src python examples/train_gnn.py --steps 50
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graphs import sampled_block_batch
+from repro.graph.generators import generate_rmat
+from repro.graph.sampler import NeighborSampler
+from repro.graph.structures import CSR
+from repro.models.gnn.common import GNNConfig
+from repro.models.gnn.pna import pna_defs
+from repro.models.params import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.training.steps import build_gnn_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=50)
+    args = ap.parse_args()
+
+    # synthetic graph with community-correlated labels/features
+    n, e, d_feat, n_cls = 2000, 16000, 32, 5
+    rng = np.random.default_rng(0)
+    src, dst = generate_rmat(n, e, seed=0)
+    labels = rng.integers(0, n_cls, n)
+    feats = rng.normal(size=(n, d_feat)).astype(np.float32)
+    feats[:, :n_cls] += 2.0 * np.eye(n_cls)[labels]  # learnable signal
+
+    csr = CSR.from_edges(src, dst, np.ones(len(src), np.float32), n)
+    sampler = NeighborSampler(csr, fanouts=(10, 5))
+    features = jnp.asarray(feats)
+    labels_j = jnp.asarray(labels.astype(np.int32))
+
+    cfg = GNNConfig(name="pna-demo", arch="pna", num_layers=2, d_hidden=48,
+                    d_feat=d_feat, num_classes=n_cls)
+    params = init_params(pna_defs(cfg), jax.random.PRNGKey(0))
+    opt_state = adamw_init(params)
+    base_step = build_gnn_train_step(
+        cfg, AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=args.steps)
+    )
+
+    @jax.jit
+    def step(params, opt_state, seeds, key):
+        blocks = sampler.sample(key, seeds)
+        batch = sampled_block_batch(blocks, features, labels_j)
+        batch["label_mask"] = (
+            jnp.arange(batch["node_feat"].shape[0]) < batch.pop("num_seeds")
+        ).astype(jnp.float32)
+        batch.pop("node_ids")
+        return base_step(params, opt_state, batch)
+
+    losses = []
+    key = jax.random.PRNGKey(1)
+    for i in range(args.steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        seeds = jax.random.randint(k1, (256,), 0, n, dtype=jnp.int32)
+        params, opt_state, m = step(params, opt_state, seeds, k2)
+        losses.append(float(m["loss"]))
+        if i % 10 == 0:
+            print(f"step {i:4d} loss {losses[-1]:.4f}")
+    print(f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: Stable Vertex Values (UVV) evolving-graph query framework in JAX.
+
+Implements "Analysis of Stable Vertex Values: Fast Query Evaluation Over An
+Evolving Graph" as a production-grade, multi-pod JAX framework: the paper's
+intersection-union bound analysis / QRS / concurrent versioned evaluation as
+first-class features, plus the model zoo, distribution, checkpointing, and
+fault-tolerance substrate needed to run at pod scale.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,67 @@
+"""deepseek-v2-236b [arXiv:2405.04434]
+60L d_model=5120 128H; MLA kv_lora=512 (q_lora=1536, nope=128, rope=64,
+v=128); MoE: 160 routed top-6 (d_ff=1536) + 2 shared; first layer dense
+(d_ff=12288); vocab=102400."""
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.layers import TransformerConfig
+
+FULL = TransformerConfig(
+    name="deepseek-v2-236b",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,
+    d_ff=12288,  # the dense first layer
+    vocab_size=102400,
+    ffn_type="swiglu",
+    rope_theta=10_000.0,
+    attention_type="mla",
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    moe=True,
+    num_experts=160,
+    num_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1536,
+    first_k_dense=1,
+    capacity_factor=1.25,
+    remat=True,
+)
+
+SMOKE = TransformerConfig(
+    name="deepseek-v2-smoke",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=128,
+    ffn_type="swiglu",
+    attention_type="mla",
+    kv_lora_rank=32,
+    q_lora_rank=24,
+    qk_nope_dim=16,
+    qk_rope_dim=8,
+    v_head_dim=16,
+    moe=True,
+    num_experts=8,
+    num_shared_experts=2,
+    top_k=2,
+    moe_d_ff=32,
+    first_k_dense=1,
+    remat=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="deepseek-v2-236b",
+    family="lm",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(LM_SHAPES),
+    notes="MLA decode uses the absorbed-matrix latent-cache formulation.",
+)

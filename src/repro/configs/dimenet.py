@@ -1,0 +1,44 @@
+"""dimenet [arXiv:2003.03123]
+6 interaction blocks, d_hidden=128, n_bilinear=8, n_spherical=7, n_radial=6.
+Triplet regime: host-precomputed (and capped) triplet index lists."""
+from repro.configs import ArchSpec, GNN_SHAPES
+from repro.models.gnn.common import GNNConfig
+
+FULL = GNNConfig(
+    name="dimenet",
+    arch="dimenet",
+    num_layers=6,
+    d_hidden=128,
+    d_feat=16,
+    num_classes=1,
+    n_radial=6,
+    n_spherical=7,
+    n_bilinear=8,
+    cutoff=5.0,
+    num_atom_types=95,
+)
+
+SMOKE = GNNConfig(
+    name="dimenet-smoke",
+    arch="dimenet",
+    num_layers=2,
+    d_hidden=32,
+    d_feat=16,
+    num_classes=1,
+    n_radial=6,
+    n_spherical=7,
+    n_bilinear=8,
+    num_atom_types=16,
+)
+
+SPEC = ArchSpec(
+    arch_id="dimenet",
+    family="gnn",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(GNN_SHAPES),
+    notes=(
+        "Molecular model; on citation/product graphs positions are synthetic "
+        "inputs and triplets are sampled (cap K/edge) — DESIGN.md §8.7."
+    ),
+)

@@ -1,0 +1,33 @@
+"""dlrm-mlperf [arXiv:1906.00091] — MLPerf Criteo-1TB benchmark config.
+13 dense + 26 sparse features, embed_dim=128, bot 13-512-256-128,
+top 1024-1024-512-256-1, dot interaction."""
+from repro.configs import ArchSpec, RECSYS_SHAPES
+from repro.models.dlrm import CRITEO_TABLE_SIZES, DLRMConfig
+
+FULL = DLRMConfig(
+    name="dlrm-mlperf",
+    n_dense=13,
+    n_sparse=26,
+    embed_dim=128,
+    bot_mlp=(13, 512, 256, 128),
+    top_mlp=(1024, 1024, 512, 256, 1),
+    table_sizes=CRITEO_TABLE_SIZES,
+)
+
+SMOKE = DLRMConfig(
+    name="dlrm-smoke",
+    embed_dim=32,
+    bot_mlp=(13, 64, 32),
+    top_mlp=(64, 32, 1),
+    table_sizes=tuple([40, 17, 100, 3, 20, 9, 50, 11, 5, 30, 60, 8, 4, 12, 7,
+                       25, 13, 6, 19, 33, 21, 14, 10, 16, 22, 18]),
+)
+
+SPEC = ArchSpec(
+    arch_id="dlrm-mlperf",
+    family="recsys",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(RECSYS_SHAPES),
+    notes="Tables row-sharded over `model` via shard_map lookup + psum.",
+)

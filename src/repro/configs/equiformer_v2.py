@@ -1,0 +1,40 @@
+"""equiformer-v2 [arXiv:2306.12059]
+12 layers, d_hidden=128, l_max=6, m_max=2, 8 heads, SO(2)-eSCN convolutions."""
+from repro.configs import ArchSpec, GNN_SHAPES
+from repro.models.gnn.common import GNNConfig
+
+FULL = GNNConfig(
+    name="equiformer-v2",
+    arch="equiformer_v2",
+    num_layers=12,
+    d_hidden=128,
+    d_feat=16,
+    num_classes=1,
+    l_max=6,
+    m_max=2,
+    num_heads=8,
+    n_radial=6,
+    cutoff=5.0,
+    edge_chunk=0,  # per-shape override for the 61M/114M-edge graphs
+)
+
+SMOKE = GNNConfig(
+    name="equiformer-v2-smoke",
+    arch="equiformer_v2",
+    num_layers=2,
+    d_hidden=16,
+    d_feat=12,
+    num_classes=4,
+    l_max=3,
+    m_max=2,
+    num_heads=4,
+)
+
+SPEC = ArchSpec(
+    arch_id="equiformer-v2",
+    family="gnn",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(GNN_SHAPES),
+    notes="eSCN SO(2) trick via wigner.py; gate activation in lieu of S2 grids.",
+)

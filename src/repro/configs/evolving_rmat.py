@@ -1,0 +1,40 @@
+"""The paper's own workload: evolving-graph queries over RMAT social graphs.
+
+Full shapes mirror Table 3/4 scale points (LiveJournal, Twitter) with 64
+snapshots and 150K-edge update batches; the smoke config is the CPU-runnable
+regime every correctness test and benchmark uses.
+"""
+import dataclasses
+
+from repro.configs import ArchSpec, EVOLVING_SHAPES
+
+
+@dataclasses.dataclass(frozen=True)
+class EvolvingConfig:
+    name: str
+    query: str = "sssp"  # bfs | sssp | sswp | ssnp | viterbi
+    n_vertices: int = 4_800_512
+    n_edges: int = 72_000_000
+    n_snapshots: int = 64
+    batch_updates: int = 150_000
+    source: int = 0
+
+
+FULL = EvolvingConfig(name="evolving-lj")
+
+SMOKE = EvolvingConfig(
+    name="evolving-smoke",
+    n_vertices=256,
+    n_edges=1024,
+    n_snapshots=8,
+    batch_updates=32,
+)
+
+SPEC = ArchSpec(
+    arch_id="evolving-rmat",
+    family="evolving",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(EVOLVING_SHAPES),
+    notes="The paper's technique itself (UVV/QRS/CQRS) at pod scale.",
+)

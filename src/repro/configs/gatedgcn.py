@@ -1,0 +1,32 @@
+"""gatedgcn [arXiv:2003.00982]
+16 layers, d_hidden=70, gated edge aggregation."""
+from repro.configs import ArchSpec, GNN_SHAPES
+from repro.models.gnn.common import GNNConfig
+
+FULL = GNNConfig(
+    name="gatedgcn",
+    arch="gatedgcn",
+    num_layers=16,
+    d_hidden=70,
+    d_feat=1433,
+    num_classes=7,
+    d_edge_feat=8,
+)
+
+SMOKE = GNNConfig(
+    name="gatedgcn-smoke",
+    arch="gatedgcn",
+    num_layers=3,
+    d_hidden=20,
+    d_feat=16,
+    num_classes=5,
+    d_edge_feat=8,
+)
+
+SPEC = ArchSpec(
+    arch_id="gatedgcn",
+    family="gnn",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(GNN_SHAPES),
+)

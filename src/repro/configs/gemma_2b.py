@@ -1,0 +1,44 @@
+"""gemma-2b [arXiv:2403.08295]
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000, GeGLU, head_dim=256,
+tied + scaled embeddings."""
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.layers import TransformerConfig
+
+FULL = TransformerConfig(
+    name="gemma-2b",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    ffn_type="geglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    remat=True,
+)
+
+SMOKE = TransformerConfig(
+    name="gemma-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=128,
+    ffn_type="geglu",
+    tie_embeddings=True,
+    scale_embeddings=True,
+    remat=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="gemma-2b",
+    family="lm",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(LM_SHAPES),
+)

@@ -1,0 +1,39 @@
+"""llama3-8b [arXiv:2407.21783]
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256, rope theta 500k."""
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.layers import TransformerConfig
+
+FULL = TransformerConfig(
+    name="llama3-8b",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    ffn_type="swiglu",
+    rope_theta=500_000.0,
+    remat=True,
+)
+
+SMOKE = TransformerConfig(
+    name="llama3-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=224,
+    vocab_size=128,
+    ffn_type="swiglu",
+    remat=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="llama3-8b",
+    family="lm",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(LM_SHAPES),
+)

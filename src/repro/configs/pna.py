@@ -1,0 +1,31 @@
+"""pna [arXiv:2004.05718]
+4 layers, d_hidden=75, aggregators mean-max-min-std, scalers id-amp-atten."""
+from repro.configs import ArchSpec, GNN_SHAPES
+from repro.models.gnn.common import GNNConfig
+
+FULL = GNNConfig(
+    name="pna",
+    arch="pna",
+    num_layers=4,
+    d_hidden=75,
+    d_feat=1433,  # per-shape override via launch/specs
+    num_classes=7,
+)
+
+SMOKE = GNNConfig(
+    name="pna-smoke",
+    arch="pna",
+    num_layers=2,
+    d_hidden=24,
+    d_feat=16,
+    num_classes=5,
+)
+
+SPEC = ArchSpec(
+    arch_id="pna",
+    family="gnn",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(GNN_SHAPES),
+    notes="12 aggregator x scaler views; fused 4-stat kernel = kernels/ell_agg.",
+)

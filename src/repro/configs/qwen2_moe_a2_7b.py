@@ -1,0 +1,53 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B]
+24L d_model=2048 16H (MHA kv=16) vocab=151936; MoE: 60 routed top-4 experts
+of d_ff=1408 + 4 shared experts (shared intermediate 4×1408=5632)."""
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.layers import TransformerConfig
+
+FULL = TransformerConfig(
+    name="qwen2-moe-a2.7b",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=5632,  # shared-expert intermediate (dense path unused: all-MoE)
+    vocab_size=151936,
+    ffn_type="swiglu",
+    rope_theta=1_000_000.0,
+    moe=True,
+    num_experts=60,
+    num_shared_experts=4,
+    top_k=4,
+    moe_d_ff=1408,
+    first_k_dense=0,
+    remat=True,
+)
+
+SMOKE = TransformerConfig(
+    name="qwen2-moe-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=176,
+    vocab_size=128,
+    ffn_type="swiglu",
+    moe=True,
+    num_experts=8,
+    num_shared_experts=2,
+    top_k=4,
+    moe_d_ff=44,
+    first_k_dense=0,
+    remat=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="qwen2-moe-a2.7b",
+    family="lm",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(LM_SHAPES),
+    notes="4 shared experts modeled as one fused shared FFN of 4x1408.",
+)

@@ -1,0 +1,39 @@
+"""stablelm-1.6b [hf:stabilityai/stablelm-2-1_6b]
+24L d_model=2048 32H (MHA kv=32) d_ff=5632 vocab=100352, head_dim=64."""
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.layers import TransformerConfig
+
+FULL = TransformerConfig(
+    name="stablelm-1.6b",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100352,
+    ffn_type="swiglu",
+    rope_theta=10_000.0,
+    remat=True,
+)
+
+SMOKE = TransformerConfig(
+    name="stablelm-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=8,
+    d_ff=176,
+    vocab_size=128,
+    ffn_type="swiglu",
+    remat=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="stablelm-1.6b",
+    family="lm",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=dict(LM_SHAPES),
+)

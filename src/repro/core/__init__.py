@@ -1,0 +1,23 @@
+from repro.core.semiring import Semiring, SEMIRINGS, get_semiring
+from repro.core.engine import compute_fixpoint, incremental_fixpoint, compute_parents
+from repro.core.bounds import compute_bounds, detect_uvv, BoundsResult
+from repro.core.qrs import build_qrs, QRS
+from repro.core.concurrent import concurrent_fixpoint
+from repro.core.api import EvolvingQuery, evaluate_evolving_query
+
+__all__ = [
+    "Semiring",
+    "SEMIRINGS",
+    "get_semiring",
+    "compute_fixpoint",
+    "incremental_fixpoint",
+    "compute_parents",
+    "compute_bounds",
+    "detect_uvv",
+    "BoundsResult",
+    "build_qrs",
+    "QRS",
+    "concurrent_fixpoint",
+    "EvolvingQuery",
+    "evaluate_evolving_query",
+]

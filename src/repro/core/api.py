@@ -1,0 +1,105 @@
+"""User-facing evolving-graph query API (the paper §5 programming interface).
+
+Vertex-centric usage::
+
+    from repro.core import EvolvingQuery
+    q = EvolvingQuery(evolving_graph, "sssp", source=0)
+    results = q.evaluate(method="cqrs")        # (S, V) values
+    q.stats                                     # UVV %, QRS size, timings
+
+Users pick the query (one of the five registered monotone path algorithms, or
+a custom :class:`~repro.core.semiring.Semiring`), the source, and the window
+of snapshots of interest; the engine handles bounds → UVV → QRS → concurrent
+incremental evaluation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import baselines as _baselines
+from repro.core.bounds import compute_bounds
+from repro.core.qrs import build_qrs
+from repro.core.semiring import Semiring, get_semiring
+from repro.graph.structures import EvolvingGraph
+
+
+class EvolvingQuery:
+    """A vertex-specific monotone query over an evolving graph window."""
+
+    def __init__(
+        self,
+        graph: EvolvingGraph,
+        query: Union[str, Semiring],
+        source: int,
+        snapshots: Optional[Sequence[int]] = None,
+    ):
+        self.graph = graph
+        self.semiring = get_semiring(query) if isinstance(query, str) else query
+        self.source = int(source)
+        if snapshots is not None:
+            # snapshot scheduler: users may pick a sub-window of interest;
+            # we narrow the graph's bitmask view accordingly.
+            self.graph = _select_snapshots(graph, list(snapshots))
+        self.stats: dict = {}
+        self._bounds = None
+        self._qrs = None
+
+    # -- staged accessors ---------------------------------------------------
+    @property
+    def bounds(self):
+        if self._bounds is None:
+            self._bounds = compute_bounds(self.graph, self.semiring, self.source)
+        return self._bounds
+
+    @property
+    def qrs(self):
+        if self._qrs is None:
+            b = self.bounds
+            self._qrs = build_qrs(self.graph, b.uvv, b.val_cap, self.semiring)
+        return self._qrs
+
+    # -- evaluation ----------------------------------------------------------
+    def evaluate(self, method: str = "cqrs") -> np.ndarray:
+        """Evaluate on every snapshot. ``method`` ∈ full|kickstarter|
+        commongraph|qrs|cqrs."""
+        fn = _baselines.BASELINES.get(method)
+        if fn is None:
+            raise KeyError(f"unknown method {method!r}; options: {sorted(_baselines.BASELINES)}")
+        results, stats = fn(self.graph, self.semiring, self.source)
+        self.stats = stats
+        return results
+
+
+def evaluate_evolving_query(
+    graph: EvolvingGraph,
+    query: str,
+    source: int,
+    method: str = "cqrs",
+    snapshots: Optional[Sequence[int]] = None,
+):
+    """One-shot functional wrapper. Returns ``(results (S,V), stats)``."""
+    q = EvolvingQuery(graph, query, source, snapshots)
+    res = q.evaluate(method)
+    return res, q.stats
+
+
+def _select_snapshots(eg: EvolvingGraph, snaps: list[int]) -> EvolvingGraph:
+    """Narrow an evolving graph to a snapshot sub-window (bitmask re-pack)."""
+    import jax.numpy as jnp
+
+    from repro.graph.structures import pack_presence
+
+    dense = np.asarray(eg.presence_dense())  # (S, E)
+    sub = dense[np.asarray(snaps, int)]
+    packed = pack_presence(sub)
+    return EvolvingGraph(
+        src=eg.src,
+        dst=eg.dst,
+        weight_min=eg.weight_min,
+        weight_max=eg.weight_max,
+        presence=jnp.asarray(packed),
+        num_vertices=eg.num_vertices,
+        num_snapshots=len(snaps),
+    )

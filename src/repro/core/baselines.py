@@ -1,0 +1,201 @@
+"""The paper's comparison points, implemented in the same engine substrate.
+
+* ``run_full``        — Fig. 2(a): from-scratch solve per snapshot.
+* ``run_kickstarter`` — Fig. 2(b): incremental chain with deletion trimming
+                        (KickStarter-style parent invalidation; DESIGN.md §8.2).
+* ``run_commongraph`` — Fig. 2(c): solve on G∩ once, stream per-snapshot
+                        additions (direct-hop).
+* ``run_qrs``         — paper §3: bounds → UVV → QRS, sequential per-snapshot
+                        incremental over the reduced graph.
+* ``run_cqrs``        — paper §4: QRS + concurrent all-snapshot evaluation.
+
+Every entry returns ``(results (S, V) np.ndarray, stats dict)``; agreement of
+all five is the core correctness property tested in ``tests/``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bounds import compute_bounds
+from repro.core.concurrent import concurrent_fixpoint
+from repro.core.engine import (
+    compute_fixpoint,
+    compute_parents,
+    incremental_fixpoint,
+    invalidate_from_deletions,
+)
+from repro.core.qrs import build_qrs
+from repro.core.semiring import Semiring
+from repro.graph.structures import EvolvingGraph
+
+
+def _weights_for(eg: EvolvingGraph, sr: Semiring) -> jax.Array:
+    # Per-snapshot exact evaluation needs one weight per edge; the stream
+    # generator keeps weights stable per (src,dst) so min==max.  (The bound
+    # machinery still handles min!=max; see Semiring.*_weight.)
+    return sr.intersection_weight(eg.weight_min, eg.weight_max)
+
+
+def run_full(eg: EvolvingGraph, sr: Semiring, source: int):
+    """Naive baseline: independent from-scratch solve per snapshot."""
+    w = _weights_for(eg, sr)
+    t0 = time.perf_counter()
+    outs, iters = [], 0
+    for i in range(eg.num_snapshots):
+        vals, it = compute_fixpoint(
+            eg.src, eg.dst, w, eg.snapshot_valid(i), sr, jnp.int32(source), eg.num_vertices
+        )
+        outs.append(vals)
+        iters += int(it)
+    res = np.stack([np.asarray(v) for v in outs])
+    return res, {"method": "full", "seconds": time.perf_counter() - t0, "supersteps": iters}
+
+
+def run_kickstarter(eg: EvolvingGraph, sr: Semiring, source: int):
+    """Streaming incremental chain with KickStarter-style deletion trimming."""
+    w = _weights_for(eg, sr)
+    source_j = jnp.int32(source)
+    t0 = time.perf_counter()
+
+    valid = eg.snapshot_valid(0)
+    values, iters0 = compute_fixpoint(
+        eg.src, eg.dst, w, valid, sr, source_j, eg.num_vertices
+    )
+    parent = compute_parents(values, eg.src, eg.dst, w, valid, sr, source_j, eg.num_vertices)
+    outs = [values]
+    supersteps = int(iters0)
+    for i in range(1, eg.num_snapshots):
+        valid_new = eg.snapshot_valid(i)
+        deleted = valid & ~valid_new
+        # trim: reset every vertex whose dependence chain used a deleted edge
+        values, _invalid = invalidate_from_deletions(
+            values, parent, deleted, eg.src, sr, source_j, eg.num_vertices
+        )
+        # re-relax over the new snapshot (covers additions + re-derivations)
+        values, it = incremental_fixpoint(
+            values, eg.src, eg.dst, w, valid_new, sr, eg.num_vertices
+        )
+        parent = compute_parents(
+            values, eg.src, eg.dst, w, valid_new, sr, source_j, eg.num_vertices
+        )
+        outs.append(values)
+        supersteps += int(it)
+        valid = valid_new
+    res = np.stack([np.asarray(v) for v in outs])
+    return res, {
+        "method": "kickstarter",
+        "seconds": time.perf_counter() - t0,
+        "supersteps": supersteps,
+    }
+
+
+def run_commongraph(eg: EvolvingGraph, sr: Semiring, source: int):
+    """CommonGraph direct-hop: solve G∩ once, stream additions per snapshot."""
+    w = _weights_for(eg, sr)
+    t0 = time.perf_counter()
+    val_cap, it0 = compute_fixpoint(
+        eg.src, eg.dst, w, eg.intersection_valid(), sr, jnp.int32(source), eg.num_vertices
+    )
+    outs, supersteps = [], int(it0)
+    for i in range(eg.num_snapshots):
+        vals, it = incremental_fixpoint(
+            val_cap, eg.src, eg.dst, w, eg.snapshot_valid(i), sr, eg.num_vertices
+        )
+        outs.append(vals)
+        supersteps += int(it)
+    res = np.stack([np.asarray(v) for v in outs])
+    return res, {
+        "method": "commongraph",
+        "seconds": time.perf_counter() - t0,
+        "supersteps": supersteps,
+    }
+
+
+def _prepare_qrs(eg: EvolvingGraph, sr: Semiring, source: int):
+    bounds = compute_bounds(eg, sr, source)
+    jax.block_until_ready(bounds.uvv)
+    qrs = build_qrs(eg, bounds.uvv, bounds.val_cap, sr)
+    return bounds, qrs
+
+
+def run_qrs(eg: EvolvingGraph, sr: Semiring, source: int):
+    """Paper §3: QRS generation + sequential per-snapshot incremental."""
+    t0 = time.perf_counter()
+    bounds, qrs = _prepare_qrs(eg, sr, source)
+    t_gen = time.perf_counter() - t0
+    outs, supersteps = [], int(bounds.iters_cap) + int(bounds.iters_cup)
+    for i in range(eg.num_snapshots):
+        vals, it = incremental_fixpoint(
+            qrs.bootstrap, qrs.src, qrs.dst, qrs.weight, qrs.snapshot_valid(i),
+            sr, eg.num_vertices,
+        )
+        outs.append(vals)
+        supersteps += int(it)
+    res = np.stack([np.asarray(v) for v in outs])
+    stats = {
+        "method": "qrs",
+        "seconds": time.perf_counter() - t0,
+        "qrs_generation_seconds": t_gen,
+        "supersteps": supersteps,
+    }
+    stats.update(qrs.stats_dict)
+    return res, stats
+
+
+def run_cqrs(eg: EvolvingGraph, sr: Semiring, source: int):
+    """Paper §4: QRS + concurrent all-snapshot evaluation (the full system)."""
+    t0 = time.perf_counter()
+    bounds, qrs = _prepare_qrs(eg, sr, source)
+    t_gen = time.perf_counter() - t0
+    values, it = concurrent_fixpoint(
+        qrs.bootstrap, qrs.src, qrs.dst, qrs.weight, qrs.presence, qrs.valid,
+        sr, eg.num_vertices, eg.num_snapshots,
+    )
+    res = np.asarray(jax.block_until_ready(values))
+    stats = {
+        "method": "cqrs",
+        "seconds": time.perf_counter() - t0,
+        "qrs_generation_seconds": t_gen,
+        "supersteps": int(bounds.iters_cap) + int(bounds.iters_cup) + int(it),
+    }
+    stats.update(qrs.stats_dict)
+    return res, stats
+
+
+def run_cqrs_folded(eg: EvolvingGraph, sr: Semiring, source: int):
+    """Beyond-paper (§Perf A1): CQRS with UVV *source* folding — edges from
+    UVV vertices contribute constants, applied once; the iteration runs on
+    the compacted active↔active subgraph with a (S, V_active) state."""
+    from repro.core.qrs import fold_qrs
+
+    t0 = time.perf_counter()
+    bounds, qrs = _prepare_qrs(eg, sr, source)
+    folded = fold_qrs(qrs, sr)
+    t_gen = time.perf_counter() - t0
+    values, it = concurrent_fixpoint(
+        folded.bootstrap, folded.src, folded.dst, folded.weight,
+        folded.presence, folded.valid, sr, folded.num_active, eg.num_snapshots,
+    )
+    res = folded.expand(np.asarray(jax.block_until_ready(values)))
+    stats = {
+        "method": "cqrs_folded",
+        "seconds": time.perf_counter() - t0,
+        "qrs_generation_seconds": t_gen,
+        "supersteps": int(bounds.iters_cap) + int(bounds.iters_cup) + int(it),
+    }
+    stats.update(folded.stats_dict)
+    return res, stats
+
+
+BASELINES = {
+    "full": run_full,
+    "kickstarter": run_kickstarter,
+    "commongraph": run_commongraph,
+    "qrs": run_qrs,
+    "cqrs": run_cqrs,
+    "cqrs_folded": run_cqrs_folded,
+}

@@ -1,0 +1,152 @@
+"""Fixpoint relaxation engine for path-semiring vertex queries.
+
+TPU-native formulation of the paper's pull/push traversal: each *superstep*
+relaxes every (valid) edge at once —
+
+    cand[e]  = extend(values[src[e]], w[e])        # gather + edge function
+    upd[v]   = segment_reduce_{e: dst[e]=v} cand   # scatter-combine (CASMIN/…)
+    values'  = improve(values, upd)
+
+— iterated in a ``lax.while_loop`` until no value changes.  Dense supersteps
+replace RisGraph's sparse frontiers (DESIGN.md §8.1); the QRS reduction (the
+paper's contribution) is what keeps the edge set small enough for this to be
+work-efficient.
+
+All functions are jit-compiled with the semiring closed over statically, so
+each (semiring, shape) pair compiles exactly once per process.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "num_vertices", "max_iters"))
+def compute_fixpoint(
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    valid: jax.Array,
+    sr: Semiring,
+    source: jax.Array,
+    num_vertices: int,
+    max_iters: Optional[int] = None,
+):
+    """Solve the query from scratch.  Returns ``(values (V,), iters)``."""
+    values0 = jnp.full((num_vertices,), sr.identity, jnp.float32)
+    values0 = values0.at[source].set(jnp.float32(sr.source))
+    return _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "num_vertices", "max_iters"))
+def incremental_fixpoint(
+    values0: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    valid: jax.Array,
+    sr: Semiring,
+    num_vertices: int,
+    max_iters: Optional[int] = None,
+):
+    """Monotone incremental relaxation from ``values0`` (addition-only).
+
+    Correct whenever ``values0`` is *feasible* (every finite value is realized
+    by a path in the current graph) — the CommonGraph/QRS/KickStarter
+    bootstrap states all satisfy this.
+    """
+    return _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters)
+
+
+def _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters):
+    limit = num_vertices + 1 if max_iters is None else max_iters
+    identity = jnp.float32(sr.identity)
+
+    def relax(values):
+        cand = sr.extend(values[src], weight)
+        cand = jnp.where(valid, cand, identity)
+        upd = sr.segment_reduce(cand, dst, num_vertices, indices_are_sorted=True)
+        return sr.improve(values, upd)
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < limit)
+
+    def body(state):
+        values, _, it = state
+        new = relax(values)
+        changed = jnp.any(new != values)
+        return new, changed, it + 1
+
+    values, _, iters = jax.lax.while_loop(
+        cond, body, (values0, jnp.bool_(True), jnp.int32(0))
+    )
+    return values, iters
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "num_vertices"))
+def compute_parents(
+    values: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    valid: jax.Array,
+    sr: Semiring,
+    source: jax.Array,
+    num_vertices: int,
+) -> jax.Array:
+    """Per-vertex parent edge id achieving the converged value (-1 if none).
+
+    The parent edge is the dependence the KickStarter baseline trims on
+    deletion: a vertex value is trusted only while its parent chain survives.
+    """
+    num_edges = src.shape[0]
+    cand = sr.extend(values[src], weight)
+    achieving = valid & (cand == values[dst]) & (values[dst] != jnp.float32(sr.identity))
+    eid = jnp.where(achieving, jnp.arange(num_edges, dtype=jnp.int32), num_edges)
+    parent = jax.ops.segment_min(eid, dst, num_vertices, indices_are_sorted=True)
+    # empty segments fill with INT32_MAX; the explicit sentinel is num_edges
+    parent = jnp.where(parent >= num_edges, -1, parent)
+    # the source never depends on an edge
+    return parent.at[source].set(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "num_vertices"))
+def invalidate_from_deletions(
+    values: jax.Array,
+    parent: jax.Array,
+    deleted: jax.Array,
+    src: jax.Array,
+    sr: Semiring,
+    source: jax.Array,
+    num_vertices: int,
+):
+    """KickStarter-style trim: reset every vertex whose parent chain broke.
+
+    ``deleted`` is an ``(E,) bool`` mask over the edge universe.  A vertex is
+    invalid if its parent edge was deleted, or (transitively) if its parent
+    edge's source became invalid.  Returns ``(values', invalid)``.
+    """
+    has_parent = parent >= 0
+    pidx = jnp.maximum(parent, 0)
+    invalid0 = has_parent & deleted[pidx]
+    parent_src = src[pidx]
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        invalid, _ = state
+        nxt = invalid | (has_parent & invalid[parent_src])
+        return nxt, jnp.any(nxt != invalid)
+
+    invalid, _ = jax.lax.while_loop(cond, body, (invalid0, jnp.bool_(True)))
+    new_values = jnp.where(invalid, jnp.float32(sr.identity), values)
+    new_values = new_values.at[source].set(jnp.float32(sr.source))
+    return new_values, invalid

@@ -1,0 +1,87 @@
+"""Path-semirings for the five monotonic vertex queries (paper Table 2).
+
+A *path-based monotonic algorithm* is defined by:
+
+* ``extend(val_u, w)`` — extend a path ending at ``u`` across edge ``(u,v,w)``
+  (the paper's EdgeFunction body);
+* ``improve(a, b)``    — keep the better value (the paper's CASMIN/CASMAX);
+* ``identity``         — the "no path" value, absorbing under ``extend``;
+* ``source``           — the initial value at the query source.
+
+Monotonicity: repeated ``improve(old, extend(...))`` converges without
+regressing, which is exactly what Theorem 1/2 and the snapshot-oblivious
+frontier rely on.
+
++---------+-------------------------------+----------+--------+----------+
+| name    | extend                        | improve  | ident  | source   |
++---------+-------------------------------+----------+--------+----------+
+| bfs     | val_u + 1                     | min      | +inf   | 0        |
+| sssp    | val_u + w                     | min      | +inf   | 0        |
+| sswp    | min(val_u, w)                 | max      | 0      | +inf     |
+| ssnp    | max(val_u, w)                 | min      | +inf   | -inf     |
+| viterbi | val_u * w   (w in (0,1])      | max      | 0      | 1        |
++---------+-------------------------------+----------+--------+----------+
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    identity: float
+    source: float
+    minimize: bool  # True → improve = min (CASMIN); False → max (CASMAX)
+    extend: Callable  # (val_u, w) -> candidate value at v
+
+    def improve(self, a, b):
+        return jnp.minimum(a, b) if self.minimize else jnp.maximum(a, b)
+
+    def segment_reduce(self, data, segment_ids, num_segments, **kw):
+        import jax
+
+        if self.minimize:
+            return jax.ops.segment_min(data, segment_ids, num_segments, **kw)
+        return jax.ops.segment_max(data, segment_ids, num_segments, **kw)
+
+    def init_values(self, num_vertices: int, source: int):
+        vals = jnp.full((num_vertices,), self.identity, jnp.float32)
+        return vals.at[source].set(jnp.float32(self.source))
+
+    def union_weight(self, weight_min, weight_max):
+        """Safe G∪ weight for flip-flopping edges (paper §3 Step 1 rule)."""
+        return weight_min if self.minimize else weight_max
+
+    def intersection_weight(self, weight_min, weight_max):
+        """Safe G∩ weight when an always-present edge changes weight."""
+        return weight_max if self.minimize else weight_min
+
+    def is_better(self, a, b):
+        """True where ``a`` is strictly better than ``b``."""
+        return a < b if self.minimize else a > b
+
+
+SEMIRINGS: dict[str, Semiring] = {
+    "bfs": Semiring("bfs", float("inf"), 0.0, True, lambda v, w: v + 1.0),
+    "sssp": Semiring("sssp", float("inf"), 0.0, True, lambda v, w: v + w),
+    "sswp": Semiring("sswp", 0.0, float("inf"), False, lambda v, w: jnp.minimum(v, w)),
+    "ssnp": Semiring("ssnp", float("inf"), float("-inf"), True, lambda v, w: jnp.maximum(v, w)),
+    "viterbi": Semiring("viterbi", 0.0, 1.0, False, lambda v, w: v * w),
+}
+
+
+def get_semiring(name: str) -> Semiring:
+    try:
+        return SEMIRINGS[name]
+    except KeyError:
+        raise KeyError(f"unknown semiring {name!r}; options: {sorted(SEMIRINGS)}")
+
+
+def viterbi_weights(weight: jnp.ndarray) -> jnp.ndarray:
+    """Map arbitrary positive weights into (0, 1] probabilities for Viterbi."""
+    wmax = jnp.maximum(jnp.max(weight), 1e-30)
+    return jnp.clip(weight / wmax, 1e-6, 1.0)

@@ -1,0 +1,19 @@
+from repro.data.synthetic import TokenPipeline, synthetic_lm_batch
+from repro.data.graphs import (
+    random_graph_batch,
+    molecule_batch,
+    build_triplets,
+    sampled_block_batch,
+)
+from repro.data.recsys import recsys_batch, retrieval_batch
+
+__all__ = [
+    "TokenPipeline",
+    "synthetic_lm_batch",
+    "random_graph_batch",
+    "molecule_batch",
+    "build_triplets",
+    "sampled_block_batch",
+    "recsys_batch",
+    "retrieval_batch",
+]

@@ -1,0 +1,147 @@
+"""GNN batch builders: full-graph, batched molecules, sampled blocks.
+
+Every builder returns a dict of static-shape arrays matching the model
+forward contracts (see repro.models.gnn.*) — including host-precomputed
+triplet index lists for DimeNet (capped at K per edge on non-molecular
+graphs; the cap is logged, not silent — see DESIGN.md §8.7).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.generators import generate_rmat
+
+
+def build_triplets(
+    src: np.ndarray, dst: np.ndarray, *, cap_per_edge: int = 0, seed: int = 0
+):
+    """For each target edge (j→i), list incoming edges (k→j), k≠i.
+
+    Returns ``(t_kj, t_ji, valid)`` — indices into the edge arrays, padded to
+    a static size.  ``cap_per_edge>0`` uniformly samples at most K triplets
+    per target edge (required for power-law graphs where Σ deg² explodes).
+    """
+    rng = np.random.default_rng(seed)
+    e = len(src)
+    in_edges: dict[int, list[int]] = {}
+    for eid, d in enumerate(dst):
+        in_edges.setdefault(int(d), []).append(eid)
+    t_kj, t_ji = [], []
+    for eid in range(e):
+        j, i = int(src[eid]), int(dst[eid])
+        incoming = in_edges.get(j, [])
+        cands = [k for k in incoming if int(src[k]) != i]
+        if cap_per_edge and len(cands) > cap_per_edge:
+            cands = list(rng.choice(cands, cap_per_edge, replace=False))
+        for k in cands:
+            t_kj.append(k)
+            t_ji.append(eid)
+    n = max(1, len(t_kj))
+    kj = np.zeros(n, np.int32)
+    ji = np.zeros(n, np.int32)
+    valid = np.zeros(n, bool)
+    kj[: len(t_kj)] = t_kj
+    ji[: len(t_ji)] = t_ji
+    valid[: len(t_kj)] = True
+    return jnp.asarray(kj), jnp.asarray(ji), jnp.asarray(valid)
+
+
+def random_graph_batch(
+    num_nodes: int,
+    num_edges: int,
+    d_feat: int,
+    num_classes: int,
+    *,
+    d_edge_feat: int = 8,
+    with_pos: bool = True,
+    with_triplets: bool = False,
+    triplet_cap: int = 8,
+    seed: int = 0,
+) -> dict:
+    """Full-graph batch (citation/products style) with synthetic features."""
+    rng = np.random.default_rng(seed)
+    src, dst = generate_rmat(num_nodes, num_edges, seed=seed)
+    batch = {
+        "node_feat": jnp.asarray(rng.normal(size=(num_nodes, d_feat)).astype(np.float32)),
+        "edge_feat": jnp.asarray(rng.normal(size=(len(src), d_edge_feat)).astype(np.float32)),
+        "edge_src": jnp.asarray(src.astype(np.int32)),
+        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, num_classes, num_nodes).astype(np.int32)),
+        "atom_type": jnp.asarray(rng.integers(0, 16, num_nodes).astype(np.int32)),
+        "graph_id": jnp.zeros(num_nodes, jnp.int32),
+    }
+    if with_pos:
+        batch["pos"] = jnp.asarray(rng.normal(size=(num_nodes, 3)).astype(np.float32) * 2.0)
+    if with_triplets:
+        kj, ji, tv = build_triplets(src, dst, cap_per_edge=triplet_cap, seed=seed)
+        batch.update({"triplet_kj": kj, "triplet_ji": ji, "triplet_valid": tv})
+    return batch
+
+
+def molecule_batch(
+    n_graphs: int,
+    nodes_per_graph: int,
+    edges_per_graph: int,
+    *,
+    num_atom_types: int = 16,
+    seed: int = 0,
+) -> dict:
+    """Block-diagonal batch of small molecules (the DimeNet habitat)."""
+    rng = np.random.default_rng(seed)
+    n = n_graphs * nodes_per_graph
+    srcs, dsts = [], []
+    for g in range(n_graphs):
+        # random geometric-ish connectivity within each molecule
+        s = rng.integers(0, nodes_per_graph, edges_per_graph)
+        d = (s + 1 + rng.integers(0, nodes_per_graph - 1, edges_per_graph)) % nodes_per_graph
+        srcs.append(s + g * nodes_per_graph)
+        dsts.append(d + g * nodes_per_graph)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    kj, ji, tv = build_triplets(src, dst, cap_per_edge=8, seed=seed)
+    pos = rng.normal(size=(n, 3)).astype(np.float32) * 1.5
+    return {
+        "atom_type": jnp.asarray(rng.integers(0, num_atom_types, n).astype(np.int32)),
+        "node_feat": jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32)),
+        "edge_feat": jnp.asarray(rng.normal(size=(len(src), 8)).astype(np.float32)),
+        "pos": jnp.asarray(pos),
+        "edge_src": jnp.asarray(src.astype(np.int32)),
+        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+        "triplet_kj": kj,
+        "triplet_ji": ji,
+        "triplet_valid": tv,
+        "graph_id": jnp.asarray(np.repeat(np.arange(n_graphs), nodes_per_graph).astype(np.int32)),
+        "num_graphs": n_graphs,
+        "energy": jnp.asarray(rng.normal(size=(n_graphs,)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, 8, n).astype(np.int32)),
+    }
+
+
+def sampled_block_batch(blocks, features: jax.Array, labels: jax.Array) -> dict:
+    """Convert NeighborSampler blocks into a flat subgraph batch.
+
+    Node 0..N0-1 are seeds; sampled edges point hop-(k+1) → hop-k nodes.
+    Local node ids are offsets into the concatenated per-hop node lists.
+    """
+    offsets = [0]
+    for nd in blocks.nodes:
+        offsets.append(offsets[-1] + nd.shape[0])
+    all_nodes = jnp.concatenate(blocks.nodes)
+    srcs, dsts, valids = [], [], []
+    for k in range(len(blocks.parents)):
+        dsts.append(blocks.parents[k] + offsets[k])
+        srcs.append(jnp.arange(blocks.neighbors[k].shape[0], dtype=jnp.int32) + offsets[k + 1])
+        valids.append(blocks.valid[k])
+    return {
+        "node_ids": all_nodes,
+        "node_feat": features[all_nodes],
+        "edge_src": jnp.concatenate(srcs),
+        "edge_dst": jnp.concatenate(dsts),
+        "edge_valid": jnp.concatenate(valids),
+        "labels": labels[all_nodes],
+        "num_seeds": blocks.nodes[0].shape[0],
+    }

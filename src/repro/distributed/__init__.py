@@ -1,0 +1,13 @@
+from repro.distributed.partitioning import (
+    LOGICAL_RULES,
+    logical_to_spec,
+    shard_logical,
+    sharding_for,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_to_spec",
+    "shard_logical",
+    "sharding_for",
+]

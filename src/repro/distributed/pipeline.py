@@ -1,0 +1,87 @@
+"""Pipeline parallelism over the ``pod`` axis (GPipe schedule, shard_map).
+
+The layer stack (already scanned on a leading L axis) is split across pipeline
+stages: stage s owns layers [s·L/S, (s+1)·L/S).  Microbatches stream through
+stages with ``collective_permute`` carrying activations; the classic GPipe
+timeline runs T = M + S − 1 ticks, each tick processing one microbatch on
+each busy stage, so bubbles are the usual (S−1)/(M+S−1) fraction.
+
+This is the selectable ``--pp`` strategy for multi-pod runs (default multi-pod
+strategy is pod-as-data-parallel); it exists to prove the activation-permute
+sharding composes with the in-pod (data, model) layout, and is exercised by
+the dry-run as an alternative config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe_apply(
+    stage_fn: Callable,  # (stage_params, x) -> y   (one stage's layers)
+    stage_params,  # leading dim = num_stages, sharded over `pod`
+    x_microbatches: jax.Array,  # (M, mb, ...) microbatched inputs
+    mesh: Mesh,
+    *,
+    axis: str = "pod",
+):
+    """Run the GPipe schedule. Returns (M, mb, ...) final-stage outputs.
+
+    Inside shard_map each pod sees its own stage's params. Tick t: stage s
+    processes microbatch (t - s); activations advance one stage per tick via
+    collective_permute. Outputs are collected on the last stage and
+    broadcast back (psum over one-hot) so every pod returns the same value.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    num_stages = mesh.shape[axis]
+    m = x_microbatches.shape[0]
+    ticks = m + num_stages - 1
+    perm = [(i, i + 1) for i in range(num_stages - 1)]
+
+    def per_pod(params_local, xs):
+        # params_local: (1, ...) this pod's stage params; xs: full (M, mb, ...)
+        stage = jax.lax.axis_index(axis)
+        p = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        mb_shape = xs.shape[1:]
+
+        def tick(carry, t):
+            incoming, outputs = carry
+            # stage 0 injects microbatch t (if valid); others use the permuted
+            mb_idx = jnp.clip(t, 0, m - 1)
+            first_in = xs[mb_idx]
+            x_in = jnp.where(stage == 0, first_in, incoming)
+            y = stage_fn(p, x_in)
+            # collect on the final stage: microbatch (t - (S-1))
+            out_idx = t - (num_stages - 1)
+            is_final = stage == num_stages - 1
+            valid = (out_idx >= 0) & (out_idx <= m - 1)
+            outputs = jax.lax.cond(
+                valid & is_final,
+                lambda o: o.at[jnp.clip(out_idx, 0, m - 1)].set(y),
+                lambda o: o,
+                outputs,
+            )
+            nxt = jax.lax.ppermute(y, axis, perm)
+            return (nxt, outputs), None
+
+        init = (
+            jnp.zeros(mb_shape, xs.dtype),
+            jnp.zeros((m,) + mb_shape, xs.dtype),
+        )
+        (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(ticks))
+        # broadcast final-stage outputs to every pod
+        one_hot = (jax.lax.axis_index(axis) == num_stages - 1).astype(outputs.dtype)
+        return jax.lax.psum(outputs * one_hot, axis)
+
+    in_specs = (
+        jax.tree_util.tree_map(lambda _: P(axis), stage_params),
+        P(),
+    )
+    return shard_map(
+        per_pod, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False
+    )(stage_params, x_microbatches)

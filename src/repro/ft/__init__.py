@@ -1,0 +1,5 @@
+from repro.ft.straggler import StragglerDetector
+from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.recovery import TrainSupervisor
+
+__all__ = ["StragglerDetector", "HeartbeatMonitor", "TrainSupervisor"]

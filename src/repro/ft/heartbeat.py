@@ -1,0 +1,45 @@
+"""Worker heartbeat monitor: liveness + failure detection.
+
+Workers post monotonic timestamps; a worker is declared dead after
+``timeout`` without a beat.  The supervisor (ft/recovery.py) polls
+``dead_workers`` each step and triggers checkpoint-restart / elastic
+rescale when membership changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    num_workers: int
+    timeout: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self.last_beat = {w: now for w in range(self.num_workers)}
+        self.declared_dead: set[int] = set()
+
+    def beat(self, worker: int, at: float | None = None):
+        if worker in self.declared_dead:
+            # a returning worker must rejoin via the supervisor (elastic path)
+            return
+        self.last_beat[worker] = self.clock() if at is None else at
+
+    def dead_workers(self) -> set[int]:
+        now = self.clock()
+        for w, t in self.last_beat.items():
+            if w not in self.declared_dead and now - t > self.timeout:
+                self.declared_dead.add(w)
+        return set(self.declared_dead)
+
+    def alive_count(self) -> int:
+        return self.num_workers - len(self.dead_workers())
+
+    def readmit(self, worker: int):
+        """Supervisor-controlled rejoin after recovery."""
+        self.declared_dead.discard(worker)
+        self.last_beat[worker] = self.clock()

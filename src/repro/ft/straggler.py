@@ -1,0 +1,76 @@
+"""Straggler detection & mitigation (deadline-based, MTTR-aware).
+
+At pod scale the slowest worker sets the step time.  The detector keeps a
+robust running estimate (median + MAD) of per-worker step durations and
+flags workers exceeding ``median × deadline_factor``.  Mitigation policy is
+pluggable; the built-ins are the two standard ones:
+
+* ``skip``       — drop the straggler's microbatch this step (gradient is
+                   renormalized by the surviving fraction);
+* ``redistribute`` — reassign the straggler's shard to the fastest worker
+                   (work-stealing; doubles that worker's microbatch).
+
+On a real deployment the timings come from the collective runtime; here the
+interface accepts them directly, which is also what the chaos tests drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    num_workers: int
+    deadline_factor: float = 2.5
+    window: int = 32
+    min_history: int = 4
+
+    def __post_init__(self):
+        self.history: list[list[float]] = [[] for _ in range(self.num_workers)]
+
+    def record_step(self, durations: list[float]):
+        if len(durations) != self.num_workers:
+            raise ValueError("one duration per worker required")
+        for w, d in enumerate(durations):
+            h = self.history[w]
+            h.append(float(d))
+            if len(h) > self.window:
+                del h[0]
+
+    def _median_all(self) -> Optional[float]:
+        allv = [d for h in self.history for d in h]
+        if len(allv) < self.min_history * self.num_workers:
+            return None
+        return statistics.median(allv)
+
+    def deadline(self) -> Optional[float]:
+        med = self._median_all()
+        return None if med is None else med * self.deadline_factor
+
+    def stragglers(self, durations: list[float]) -> list[int]:
+        """Workers whose CURRENT step exceeds the deadline."""
+        dl = self.deadline()
+        if dl is None:
+            return []
+        return [w for w, d in enumerate(durations) if d > dl]
+
+    def plan(self, durations: list[float], policy: str = "redistribute") -> dict:
+        """Mitigation plan for this step. Returns worker → action mapping."""
+        slow = self.stragglers(durations)
+        if not slow:
+            return {}
+        if policy == "skip":
+            return {w: {"action": "skip"} for w in slow}
+        if policy == "redistribute":
+            fast = sorted(
+                (w for w in range(self.num_workers) if w not in slow),
+                key=lambda w: durations[w],
+            )
+            plan = {}
+            for i, w in enumerate(slow):
+                target = fast[i % len(fast)] if fast else w
+                plan[w] = {"action": "redistribute", "to": target}
+            return plan
+        raise ValueError(f"unknown policy {policy!r}")

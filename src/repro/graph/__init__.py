@@ -1,0 +1,20 @@
+from repro.graph.structures import EdgeList, EvolvingGraph, CSR
+from repro.graph.generators import (
+    generate_rmat,
+    generate_evolving_stream,
+    generate_uniform_weights,
+)
+from repro.graph.ell import EllPack, pack_ell
+from repro.graph.sampler import NeighborSampler
+
+__all__ = [
+    "EdgeList",
+    "EvolvingGraph",
+    "CSR",
+    "generate_rmat",
+    "generate_evolving_stream",
+    "generate_uniform_weights",
+    "EllPack",
+    "pack_ell",
+    "NeighborSampler",
+]

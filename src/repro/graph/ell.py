@@ -1,0 +1,107 @@
+"""ELL packing with row splitting — the dense layout behind the TPU kernels.
+
+Power-law graphs have wildly skewed in-degrees; a plain ELL layout (one row of
+``max_degree`` slots per vertex) would waste nearly all slots.  We use
+*row-split ELL*: each vertex's incoming edges are split into rows of at most
+``slot_width`` slots; ``row2vertex`` maps packed rows back to their vertex so
+a final (cheap, XLA-side) segment-reduce combines split rows.  ``slot_width``
+is chosen as a lane multiple (128) so a packed row is one VPU vector row.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import register_static_dataclass
+from repro.utils.padding import round_up
+
+
+@register_static_dataclass(meta_fields=("num_vertices", "slot_width"))
+@dataclasses.dataclass(frozen=True)
+class EllPack:
+    """Row-split ELL packing of incoming edges.
+
+    Attributes:
+      src:    ``(R, D) int32`` source vertex per slot (0 for empty slots).
+      weight: ``(R, D) float32`` edge weight per slot.
+      slot_valid: ``(R, D) bool``.
+      edge_id: ``(R, D) int32`` index into the original edge array (-1 empty);
+        lets callers fetch per-edge side data (e.g. presence bitmasks).
+      row2vertex: ``(R,) int32`` destination vertex per packed row (padding
+        rows point at vertex 0 with all-empty slots).
+      num_vertices, slot_width: static.
+    """
+
+    src: jax.Array
+    weight: jax.Array
+    slot_valid: jax.Array
+    edge_id: jax.Array
+    row2vertex: jax.Array
+    num_vertices: int
+    slot_width: int
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.src.shape[0])
+
+
+def pack_ell(
+    src: np.ndarray,
+    dst: np.ndarray,
+    weight: np.ndarray,
+    num_vertices: int,
+    *,
+    slot_width: int = 128,
+    row_align: int = 8,
+) -> EllPack:
+    """Pack (src→dst, w) incoming edges into row-split ELL (host side)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    e = src.shape[0]
+    order = np.argsort(dst, kind="stable")
+    s, d, w = src[order], dst[order], weight[order]
+    eid = np.arange(e, dtype=np.int64)[order]
+
+    deg = np.bincount(d, minlength=num_vertices)
+    rows_per_vertex = np.maximum(1, (deg + slot_width - 1) // slot_width)
+    # vertices with zero degree get no row at all
+    rows_per_vertex = np.where(deg == 0, 0, rows_per_vertex)
+    n_rows = int(rows_per_vertex.sum())
+    n_rows_pad = round_up(max(n_rows, 1), row_align)
+
+    row2vertex = np.zeros(n_rows_pad, np.int32)
+    out_src = np.zeros((n_rows_pad, slot_width), np.int32)
+    out_w = np.zeros((n_rows_pad, slot_width), np.float32)
+    out_valid = np.zeros((n_rows_pad, slot_width), bool)
+    out_eid = np.full((n_rows_pad, slot_width), -1, np.int64)
+
+    # positions of each edge within its destination's run
+    starts = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(deg, out=starts[1:])
+    pos_in_run = np.arange(e) - starts[d]
+    row_base = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(rows_per_vertex, out=row_base[1:])
+    row_idx = row_base[d] + pos_in_run // slot_width
+    col_idx = pos_in_run % slot_width
+
+    out_src[row_idx, col_idx] = s.astype(np.int32)
+    out_w[row_idx, col_idx] = w
+    out_valid[row_idx, col_idx] = True
+    out_eid[row_idx, col_idx] = eid
+    # fill row2vertex for real rows
+    v_ids = np.repeat(np.arange(num_vertices, dtype=np.int32), rows_per_vertex)
+    row2vertex[: len(v_ids)] = v_ids
+
+    return EllPack(
+        src=jnp.asarray(out_src),
+        weight=jnp.asarray(out_w),
+        slot_valid=jnp.asarray(out_valid),
+        edge_id=jnp.asarray(out_eid.astype(np.int32)),
+        row2vertex=jnp.asarray(row2vertex),
+        num_vertices=int(num_vertices),
+        slot_width=int(slot_width),
+    )

@@ -1,0 +1,159 @@
+"""Synthetic graph + evolving-stream generators (host side, numpy).
+
+The paper evaluates on LiveJournal/Orkut/Wikipedia/Twitter/Friendster with
+100K–150K edge updates per snapshot (50% additions / 50% deletions).  We
+reproduce that regime at laptop scale with RMAT power-law graphs: same
+degree-skew family as the social graphs, parameterized (a,b,c,d) as in the
+Graph500 reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def generate_rmat(
+    num_vertices: int,
+    num_edges: int,
+    *,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    dedup: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate a power-law directed graph via recursive-matrix sampling.
+
+    Returns ``(src, dst)`` int64 arrays (deduplicated, self-loop-free).
+    """
+    rng = np.random.default_rng(seed)
+    scale = max(1, int(np.ceil(np.log2(max(2, num_vertices)))))
+    n_target = num_edges
+    srcs, dsts = [], []
+    got = 0
+    while got < n_target:
+        n = int((n_target - got) * 1.3) + 1024
+        src = np.zeros(n, np.int64)
+        dst = np.zeros(n, np.int64)
+        for _ in range(scale):
+            # quadrant probs: a=(0,0), b=(0,1), c=(1,0), d=(1,1)
+            q = rng.random(n)
+            src_bit = (q >= a + b).astype(np.int64)
+            dst_bit = (((q >= a) & (q < a + b)) | (q >= a + b + c)).astype(np.int64)
+            src = (src << 1) | src_bit
+            dst = (dst << 1) | dst_bit
+        src %= num_vertices
+        dst %= num_vertices
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if dedup:
+            k = src * np.int64(num_vertices) + dst
+            _, idx = np.unique(k, return_index=True)
+            src, dst = src[idx], dst[idx]
+        srcs.append(src)
+        dsts.append(dst)
+        got = sum(len(s) for s in srcs)
+        if dedup:
+            cat_s = np.concatenate(srcs)
+            cat_d = np.concatenate(dsts)
+            k = cat_s * np.int64(num_vertices) + cat_d
+            _, idx = np.unique(k, return_index=True)
+            srcs, dsts = [cat_s[idx]], [cat_d[idx]]
+            got = len(idx)
+    src = np.concatenate(srcs)[:n_target]
+    dst = np.concatenate(dsts)[:n_target]
+    return src, dst
+
+
+def generate_uniform_weights(
+    n: int, *, seed: int = 0, low: float = 1.0, high: float = 64.0, grid: int = 0
+) -> np.ndarray:
+    """Positive float32 weights; if ``grid>0`` snap to 1/grid multiples.
+
+    Grid-snapped weights keep path sums exactly representable, which makes
+    the bound-equality test in UVV detection exact (a nicety, not a
+    requirement — see DESIGN.md §8).
+    """
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(low, high, n)
+    if grid:
+        w = np.round(w * grid) / grid
+    return w.astype(np.float32)
+
+
+def generate_evolving_stream(
+    src: np.ndarray,
+    dst: np.ndarray,
+    weight: np.ndarray,
+    num_vertices: int,
+    *,
+    num_snapshots: int,
+    batch_size: int,
+    frac_deletions: float = 0.5,
+    readd_prob: float = 0.25,
+    seed: int = 0,
+):
+    """Produce the paper's update stream: per-snapshot batches of edge updates.
+
+    Each delta batch contains ``batch_size`` updates, ``frac_deletions`` of
+    which delete currently-present edges and the rest add edges.  With
+    probability ``readd_prob`` an addition re-adds a previously deleted edge
+    (possibly with a new weight) — this creates the "flip-flopping" edges the
+    paper's safe-weight rule exists for.
+
+    Returns ``(base, deltas)`` where ``base=(src,dst,w)`` numpy arrays and
+    ``deltas`` is a list of ``(add_src, add_dst, add_w, del_src, del_dst)``.
+    """
+    rng = np.random.default_rng(seed)
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+
+    present = {}
+    weight_of = {}  # weight is stable per (src,dst) pair across the stream
+    for s, d, w in zip(src.tolist(), dst.tolist(), weight.tolist()):
+        present[(s, d)] = w
+        weight_of[(s, d)] = w
+    deleted_pool: list[tuple[int, int]] = []
+
+    deltas = []
+    n_del = int(batch_size * frac_deletions)
+    n_add = batch_size - n_del
+    for _ in range(num_snapshots - 1):
+        # deletions: sample without replacement from present edges
+        keys = list(present.keys())
+        del_idx = rng.choice(len(keys), size=min(n_del, len(keys)), replace=False)
+        del_edges = [keys[i] for i in del_idx]
+        for e in del_edges:
+            del present[e]
+        deleted_pool.extend(del_edges)
+
+        # additions: mix of re-adds and fresh random edges
+        add_edges = []
+        add_ws = []
+        while len(add_edges) < n_add:
+            if deleted_pool and rng.random() < readd_prob:
+                i = rng.integers(len(deleted_pool))
+                e = deleted_pool.pop(int(i))
+                if e in present:
+                    continue
+            else:
+                e = (int(rng.integers(num_vertices)), int(rng.integers(num_vertices)))
+                if e[0] == e[1] or e in present:
+                    continue
+            w = weight_of.get(e)
+            if w is None:
+                w = float(np.round(rng.uniform(1.0, 64.0) * 16) / 16)
+                weight_of[e] = w
+            present[e] = w
+            add_edges.append(e)
+            add_ws.append(w)
+        deltas.append(
+            (
+                np.array([e[0] for e in add_edges], np.int64),
+                np.array([e[1] for e in add_edges], np.int64),
+                np.array(add_ws, np.float32),
+                np.array([e[0] for e in del_edges], np.int64),
+                np.array([e[1] for e in del_edges], np.int64),
+            )
+        )
+    return (src, dst, weight), deltas

@@ -1,0 +1,275 @@
+"""Graph data structures: static-shape edge lists, CSR, evolving graphs.
+
+Design notes (TPU adaptation of the paper's RisGraph adjacency structures):
+
+* Everything is a fixed-shape array so the relax/aggregate fast paths compile
+  once.  Invalid/padded edges are encoded with ``valid=False`` (engine treats
+  them as absorbing-identity contributions).
+* An :class:`EvolvingGraph` stores the *edge universe* (the union of every
+  edge that ever exists across the snapshot window) plus a packed ``uint32``
+  presence bitmask per edge — the paper's Figure-7 version words, generalized
+  beyond 64 snapshots via ``ceil(S/32)`` words.
+* Edges are kept **sorted by destination**.  That makes the per-superstep
+  scatter (segment-reduce by dst) contiguous, and under a dst-range sharding
+  of the vertex space the scatter is shard-local (only the source-value
+  gather communicates).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import register_static_dataclass
+from repro.utils.padding import pad_to_multiple
+
+PAD_ALIGN = 128  # lane alignment for padded edge arrays
+
+
+@register_static_dataclass(meta_fields=("num_vertices",))
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """A padded, dst-sorted directed edge list.
+
+    Attributes:
+      src, dst: ``(E,) int32`` endpoints (padding rows hold 0).
+      weight:   ``(E,) float32`` edge weight (padding rows hold 0).
+      valid:    ``(E,) bool`` True for real edges.
+      num_vertices: static vertex count.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    weight: jax.Array
+    valid: jax.Array
+    num_vertices: int
+
+    @property
+    def num_edges_padded(self) -> int:
+        return int(self.src.shape[0])
+
+    def num_edges(self) -> int:
+        return int(np.asarray(self.valid).sum())
+
+    @staticmethod
+    def from_numpy(
+        src: np.ndarray,
+        dst: np.ndarray,
+        weight: np.ndarray,
+        num_vertices: int,
+        *,
+        align: int = PAD_ALIGN,
+        sort_by_dst: bool = True,
+    ) -> "EdgeList":
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        weight = np.asarray(weight, np.float32)
+        if sort_by_dst:
+            order = np.lexsort((src, dst))
+            src, dst, weight = src[order], dst[order], weight[order]
+        valid = np.ones(src.shape[0], bool)
+        return EdgeList(
+            src=jnp.asarray(pad_to_multiple(src, align, 0)),
+            dst=jnp.asarray(pad_to_multiple(dst, align, 0)),
+            weight=jnp.asarray(pad_to_multiple(weight, align, 0.0)),
+            valid=jnp.asarray(pad_to_multiple(valid, align, False)),
+            num_vertices=int(num_vertices),
+        )
+
+
+@register_static_dataclass(meta_fields=("num_vertices", "num_snapshots"))
+@dataclasses.dataclass(frozen=True)
+class EvolvingGraph:
+    """Edge universe + per-edge snapshot-presence bitmask (+ weight bounds).
+
+    Attributes:
+      src, dst: ``(E,) int32`` universe endpoints, dst-sorted, padded.
+      weight_min, weight_max: per-edge weight extrema across the snapshots in
+        which the edge occurs (the paper's safe-weight rule for edges that are
+        added/deleted repeatedly, generalized to both bound directions).
+      presence: ``(E, W) uint32`` with ``W = ceil(S/32)``; bit ``s`` of the
+        packed words is 1 iff the edge is present in snapshot ``s``.  Padding
+        rows are all-zero (present in no snapshot).
+      num_vertices, num_snapshots: static sizes.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    weight_min: jax.Array
+    weight_max: jax.Array
+    presence: jax.Array
+    num_vertices: int
+    num_snapshots: int
+
+    @property
+    def num_edges_padded(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_words(self) -> int:
+        return int(self.presence.shape[1])
+
+    def presence_dense(self) -> jax.Array:
+        """Unpack presence bits to a ``(S, E) bool`` matrix."""
+        return unpack_presence(self.presence, self.num_snapshots)
+
+    def popcount(self) -> jax.Array:
+        """Per-edge count of snapshots containing the edge, ``(E,) int32``."""
+        bits = self.presence
+        # Kernighan-free vectorized popcount on uint32 words.
+        x = bits - ((bits >> 1) & np.uint32(0x55555555))
+        x = (x & np.uint32(0x33333333)) + ((x >> 2) & np.uint32(0x33333333))
+        x = (x + (x >> 4)) & np.uint32(0x0F0F0F0F)
+        counts = (x * np.uint32(0x01010101)) >> 24
+        return counts.astype(jnp.int32).sum(axis=1)
+
+    def intersection_valid(self) -> jax.Array:
+        """``(E,) bool`` — edges present in *all* snapshots (the G∩ mask)."""
+        return self.popcount() == self.num_snapshots
+
+    def union_valid(self) -> jax.Array:
+        """``(E,) bool`` — edges present in *any* snapshot (the G∪ mask)."""
+        return self.popcount() > 0
+
+    def snapshot_valid(self, i: int) -> jax.Array:
+        """``(E,) bool`` — edges present in snapshot ``i``."""
+        word, bit = divmod(int(i), 32)
+        return ((self.presence[:, word] >> np.uint32(bit)) & np.uint32(1)).astype(bool)
+
+
+def pack_presence(dense: np.ndarray) -> np.ndarray:
+    """Pack a ``(S, E) bool`` presence matrix into ``(E, ceil(S/32)) uint32``."""
+    dense = np.asarray(dense, bool)
+    s, e = dense.shape
+    w = (s + 31) // 32
+    out = np.zeros((e, w), np.uint32)
+    for snap in range(s):
+        word, bit = divmod(snap, 32)
+        out[:, word] |= dense[snap].astype(np.uint32) << np.uint32(bit)
+    return out
+
+
+def unpack_presence(packed: jax.Array, num_snapshots: int) -> jax.Array:
+    """Unpack ``(E, W) uint32`` words into ``(S, E) bool``."""
+    snaps = jnp.arange(num_snapshots, dtype=jnp.uint32)
+    word_idx = (snaps // 32).astype(jnp.int32)  # (S,)
+    bit_idx = snaps % 32  # (S,)
+    words = packed.T[word_idx]  # (S, E) uint32
+    return ((words >> bit_idx[:, None]) & np.uint32(1)).astype(bool)
+
+
+@register_static_dataclass(meta_fields=("num_vertices",))
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row adjacency (out-edges), for sampling/traversal.
+
+    Attributes:
+      indptr:  ``(V+1,) int32``.
+      indices: ``(E,) int32`` neighbor ids.
+      weights: ``(E,) float32``.
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    weights: jax.Array
+    num_vertices: int
+
+    @staticmethod
+    def from_edges(
+        src: np.ndarray, dst: np.ndarray, weight: np.ndarray, num_vertices: int
+    ) -> "CSR":
+        src = np.asarray(src, np.int64)
+        order = np.argsort(src, kind="stable")
+        s, d, w = src[order], np.asarray(dst)[order], np.asarray(weight)[order]
+        counts = np.bincount(s, minlength=num_vertices)
+        indptr = np.zeros(num_vertices + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSR(
+            indptr=jnp.asarray(indptr.astype(np.int32)),
+            indices=jnp.asarray(d.astype(np.int32)),
+            weights=jnp.asarray(w.astype(np.float32)),
+            num_vertices=int(num_vertices),
+        )
+
+
+def build_evolving_graph(
+    base_src: np.ndarray,
+    base_dst: np.ndarray,
+    base_weight: np.ndarray,
+    deltas,
+    num_vertices: int,
+    *,
+    align: int = PAD_ALIGN,
+) -> EvolvingGraph:
+    """Construct an :class:`EvolvingGraph` from a base snapshot + delta batches.
+
+    Args:
+      base_*: snapshot ``G_0`` edges (numpy, host side).
+      deltas: sequence of ``(add_src, add_dst, add_w, del_src, del_dst)``
+        batches; applying batch ``i`` to snapshot ``i`` yields snapshot
+        ``i+1``.  ``len(deltas) + 1`` snapshots total.
+      num_vertices: vertex-count (all vertices present in all snapshots, per
+        the paper's setting).
+    """
+    num_snapshots = len(deltas) + 1
+
+    def key(s, d):
+        return s.astype(np.int64) * np.int64(num_vertices) + d.astype(np.int64)
+
+    # --- build the universe -------------------------------------------------
+    all_src = [np.asarray(base_src, np.int64)]
+    all_dst = [np.asarray(base_dst, np.int64)]
+    all_w = [np.asarray(base_weight, np.float64)]
+    for add_src, add_dst, add_w, _ds, _dd in deltas:
+        all_src.append(np.asarray(add_src, np.int64))
+        all_dst.append(np.asarray(add_dst, np.int64))
+        all_w.append(np.asarray(add_w, np.float64))
+    cat_src = np.concatenate(all_src)
+    cat_dst = np.concatenate(all_dst)
+    cat_w = np.concatenate(all_w)
+    cat_key = key(cat_src, cat_dst)
+    uniq_key, inv = np.unique(cat_key, return_inverse=True)
+    n_uniq = uniq_key.shape[0]
+    # weight extrema across every occurrence of the edge (safe-weight rule)
+    w_min = np.full(n_uniq, np.inf)
+    w_max = np.full(n_uniq, -np.inf)
+    np.minimum.at(w_min, inv, cat_w)
+    np.maximum.at(w_max, inv, cat_w)
+    u_src = (uniq_key // num_vertices).astype(np.int32)
+    u_dst = (uniq_key % num_vertices).astype(np.int32)
+
+    # --- replay deltas to get per-snapshot presence -------------------------
+    lookup = {k: i for i, k in enumerate(uniq_key.tolist())}
+    present = np.zeros(n_uniq, bool)
+    base_idx = np.searchsorted(uniq_key, key(np.asarray(base_src, np.int64), np.asarray(base_dst, np.int64)))
+    present[base_idx] = True
+    dense = np.zeros((num_snapshots, n_uniq), bool)
+    dense[0] = present
+    for i, (add_src, add_dst, _aw, del_src, del_dst) in enumerate(deltas):
+        if len(del_src):
+            di = np.searchsorted(uniq_key, key(np.asarray(del_src, np.int64), np.asarray(del_dst, np.int64)))
+            present[di] = False
+        if len(add_src):
+            ai = np.searchsorted(uniq_key, key(np.asarray(add_src, np.int64), np.asarray(add_dst, np.int64)))
+            present[ai] = True
+        dense[i + 1] = present
+    del lookup
+
+    # --- dst-sort + pad ------------------------------------------------------
+    order = np.lexsort((u_src, u_dst))
+    u_src, u_dst = u_src[order], u_dst[order]
+    w_min, w_max = w_min[order], w_max[order]
+    dense = dense[:, order]
+    packed = pack_presence(dense)
+
+    return EvolvingGraph(
+        src=jnp.asarray(pad_to_multiple(u_src, align, 0)),
+        dst=jnp.asarray(pad_to_multiple(u_dst, align, 0)),
+        weight_min=jnp.asarray(pad_to_multiple(w_min.astype(np.float32), align, 0.0)),
+        weight_max=jnp.asarray(pad_to_multiple(w_max.astype(np.float32), align, 0.0)),
+        presence=jnp.asarray(pad_to_multiple(packed, align, 0, axis=0)),
+        num_vertices=int(num_vertices),
+        num_snapshots=num_snapshots,
+    )

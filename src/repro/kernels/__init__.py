@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel subpackage ships three layers:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (chooses kernel vs XLA path, host plumbing)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels are validated with ``interpret=True``; on TPU
+the same ``pallas_call`` lowers natively.  ``repro.kernels.common.default_interpret``
+picks the mode from the backend.
+"""
+from repro.kernels.common import default_interpret
+
+__all__ = ["default_interpret"]

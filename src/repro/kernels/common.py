@@ -1,0 +1,20 @@
+"""Shared kernel helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Static map from semiring name → (extend-op, minimize, identity); kernels are
+# specialized per entry (hashable static args → one compile per semiring).
+EXTEND_OPS = {
+    "bfs": (lambda v, w: v + 1.0, True, float("inf")),
+    "sssp": (lambda v, w: v + w, True, float("inf")),
+    "sswp": (lambda v, w: jnp.minimum(v, w), False, 0.0),
+    "ssnp": (lambda v, w: jnp.maximum(v, w), True, float("inf")),
+    "viterbi": (lambda v, w: v * w, False, 0.0),
+}
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU backend."""
+    return jax.default_backend() != "tpu"

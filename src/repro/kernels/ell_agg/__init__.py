@@ -1,0 +1,3 @@
+from repro.kernels.ell_agg.ops import ell_multi_aggregate
+
+__all__ = ["ell_multi_aggregate"]

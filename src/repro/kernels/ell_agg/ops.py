@@ -1,0 +1,49 @@
+"""Public fused neighbor-statistics op with mean/std epilogue."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.ell_agg.kernel import (
+    F_BLOCK,
+    R_BLOCK,
+    ell_multi_aggregate_pallas,
+)
+from repro.kernels.ell_agg.ref import ell_multi_aggregate_ref
+from repro.utils.padding import round_up
+
+
+def ell_multi_aggregate(
+    feats: jax.Array,  # (R, D, F) gathered neighbor messages
+    valid: jax.Array,  # (R, D) bool
+    *,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+    eps: float = 1e-5,
+):
+    """Returns ``(mean, std, maxv, minv)`` each ``(R, F)``; empty rows → 0."""
+    interpret = default_interpret() if interpret is None else interpret
+    r, d, f = feats.shape
+    if use_kernel:
+        r_pad, f_pad = round_up(r, R_BLOCK), round_up(f, F_BLOCK)
+        fp = jnp.pad(feats, ((0, r_pad - r), (0, 0), (0, f_pad - f)))
+        vp = jnp.pad(valid, ((0, r_pad - r), (0, 0)))
+        s, sq, mx, mn = ell_multi_aggregate_pallas(fp, vp, interpret=interpret)
+        s, sq, mx, mn = s[:r, :f], sq[:r, :f], mx[:r, :f], mn[:r, :f]
+    else:
+        s, sq, mx, mn = ell_multi_aggregate_ref(feats, valid)
+
+    cnt = valid.sum(axis=1, keepdims=True).astype(feats.dtype)  # (R, 1)
+    denom = jnp.maximum(cnt, 1.0)
+    mean = s / denom
+    var = jnp.maximum(sq / denom - mean * mean, 0.0)
+    std = jnp.sqrt(var + eps)
+    empty = cnt == 0
+    mean = jnp.where(empty, 0.0, mean)
+    std = jnp.where(empty, 0.0, std)
+    mx = jnp.where(empty, 0.0, mx)
+    mn = jnp.where(empty, 0.0, mn)
+    return mean, std, mx, mn

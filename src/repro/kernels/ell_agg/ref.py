@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for fused multi-statistic aggregation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ell_agg.kernel import NEG, POS
+
+
+def ell_multi_aggregate_ref(feats, valid):
+    v = valid[:, :, None]
+    xz = jnp.where(v, feats, 0.0)
+    return (
+        jnp.sum(xz, axis=1),
+        jnp.sum(xz * xz, axis=1),
+        jnp.max(jnp.where(v, feats, NEG), axis=1),
+        jnp.min(jnp.where(v, feats, POS), axis=1),
+    )

@@ -1,0 +1,54 @@
+"""Fused weighted-bag reduction for embedding lookups (DLRM hot path).
+
+JAX has no native ``nn.EmbeddingBag``; the framework implements it as
+``jnp.take`` (XLA gather — efficient on TPU) followed by this kernel, which
+fuses {per-sample weighting, validity masking, bag reduction} so the gathered
+``(B, L, F)`` rows are read from HBM once and only the ``(B, F)`` bag outputs
+are written (unfused XLA materializes the weighted intermediate).
+
+Tiling: F blocks of 128 lanes; B blocks of 8 sublanes; the full multi-hot
+length L rides the reduce axis inside a tile → VMEM per step is
+``8·L·128·4 B`` (L=64 → 256 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_BLOCK = 8
+F_BLOCK = 128
+
+
+def _bag_kernel(rows_ref, w_ref, out_ref):
+    rows = rows_ref[...]  # (B_blk, L, F_blk)
+    w = w_ref[...]  # (B_blk, L)
+    out_ref[...] = jnp.sum(rows * w[:, :, None], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "b_block", "f_block"))
+def bag_reduce_pallas(
+    rows: jax.Array,  # (B, L, F) gathered embedding rows
+    weights: jax.Array,  # (B, L) per-sample weights (0 for invalid slots)
+    *,
+    interpret: bool = True,
+    b_block: int = B_BLOCK,
+    f_block: int = F_BLOCK,
+) -> jax.Array:
+    b, l, f = rows.shape
+    if b % b_block or f % f_block:
+        raise ValueError(f"B={b} must be {b_block}-aligned, F={f} {f_block}-aligned")
+    grid = (b // b_block, f // f_block)
+    return pl.pallas_call(
+        _bag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_block, l, f_block), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((b_block, l), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_block, f_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, f), rows.dtype),
+        interpret=interpret,
+    )(rows, weights)

@@ -1,0 +1,52 @@
+"""Public EmbeddingBag op (gather + fused bag reduce)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.embedding_bag.kernel import B_BLOCK, F_BLOCK, bag_reduce_pallas
+from repro.utils.padding import round_up
+
+
+def embedding_bag(
+    table: jax.Array,  # (N, F)
+    indices: jax.Array,  # (B, L) int32
+    weights: Optional[jax.Array] = None,  # (B, L)
+    valid: Optional[jax.Array] = None,  # (B, L) bool
+    mode: str = "sum",
+    *,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: per-bag weighted sum/mean.
+
+    ``use_kernel=False`` falls back to the pure-XLA path (used for sharded
+    tables inside ``shard_map``, where the kernel runs per shard).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, l = indices.shape
+    if weights is None:
+        weights = jnp.ones((b, l), table.dtype)
+    if valid is None:
+        valid = jnp.ones((b, l), bool)
+    w = jnp.where(valid, weights, 0.0).astype(table.dtype)
+
+    rows = table[indices]  # (B, L, F) — XLA gather
+    if not use_kernel:
+        out = jnp.sum(rows * w[:, :, None], axis=1)
+    else:
+        f = table.shape[1]
+        b_pad, f_pad = round_up(b, B_BLOCK), round_up(f, F_BLOCK)
+        rows_p = jnp.pad(rows, ((0, b_pad - b), (0, 0), (0, f_pad - f)))
+        w_p = jnp.pad(w, ((0, b_pad - b), (0, 0)))
+        out = bag_reduce_pallas(rows_p, w_p, interpret=interpret)[:b, :f]
+
+    if mode == "mean":
+        denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(table.dtype)
+        out = out / denom
+    elif mode != "sum":
+        raise ValueError(f"unknown mode {mode!r}")
+    return out

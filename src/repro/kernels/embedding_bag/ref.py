@@ -1,0 +1,23 @@
+"""Pure-jnp EmbeddingBag oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,  # (N, F)
+    indices: jax.Array,  # (B, L) int32
+    weights: jax.Array,  # (B, L)
+    valid: jax.Array,  # (B, L) bool
+    mode: str = "sum",
+) -> jax.Array:
+    rows = table[indices]  # (B, L, F)
+    w = jnp.where(valid, weights, 0.0).astype(rows.dtype)
+    out = jnp.sum(rows * w[:, :, None], axis=1)
+    if mode == "mean":
+        denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(rows.dtype)
+        out = out / denom
+    elif mode != "sum":
+        raise ValueError(f"unknown mode {mode!r}")
+    return out

@@ -1,0 +1,111 @@
+"""Blocked online-softmax attention (FlashAttention-style) for the LM cells.
+
+Grid = (batch·heads, q-blocks, kv-blocks); the kv axis is the innermost
+(sequential) dimension, accumulating into VMEM scratch {m, l, acc} with the
+standard online-softmax rescaling.  MXU work is the two (q_blk × d)·(d ×
+kv_blk) / (q_blk × kv_blk)·(kv_blk × d) matmuls per step; block sizes default
+to 128 so both matmuls are MXU-native 128×128 tiles and the score tile is one
+(128, 128) VMEM buffer.
+
+Causal masking is positional (global indices derived from the grid step), so
+fully-masked kv blocks cost one masked matmul rather than a branch — on TPU
+the sequential kv grid cannot skip steps without scalar prefetch, and the
+masked-matmul cost is what the roofline counts anyway.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 128
+KV_BLOCK = 128
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, kv_blocks
+):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (q_blk, d)
+    k = k_ref[0]  # (kv_blk, d)
+    v = v_ref[0]  # (kv_blk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (q_blk, kv_blk)
+
+    if causal:
+        q_idx = pl.program_id(1)
+        q_pos = q_idx * q.shape[0] + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0
+        )
+        k_pos = kv_idx * k.shape[0] + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1
+        )
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (q_blk, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (q_blk, kv_blk)
+    alpha = jnp.exp(m_prev - m_new)  # (q_blk, 1)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kv_idx == kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "interpret", "q_block", "kv_block")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Tq, d)
+    k: jax.Array,  # (BH, Tk, d)
+    v: jax.Array,  # (BH, Tk, d)
+    *,
+    causal: bool = True,
+    interpret: bool = True,
+    q_block: int = Q_BLOCK,
+    kv_block: int = KV_BLOCK,
+) -> jax.Array:
+    bh, tq, d = q.shape
+    tk = k.shape[1]
+    if tq % q_block or tk % kv_block:
+        raise ValueError(f"Tq={tq} needs {q_block}-align, Tk={tk} needs {kv_block}-align")
+    grid = (bh, tq // q_block, tk // kv_block)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, kv_blocks=tk // kv_block
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

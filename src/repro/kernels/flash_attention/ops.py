@@ -1,0 +1,32 @@
+"""Public flash-attention wrapper over (B, H, T, d) layouts."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Tq, d)
+    k: jax.Array,  # (B, H, Tk, d)
+    v: jax.Array,  # (B, H, Tk, d)
+    *,
+    causal: bool = True,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    b, h, tq, d = q.shape
+    qf = q.reshape(b * h, tq, d)
+    kf = k.reshape(b * h, k.shape[2], d)
+    vf = v.reshape(b * h, v.shape[2], d)
+    if use_kernel:
+        out = flash_attention_pallas(qf, kf, vf, causal=causal, interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, causal=causal)
+    return out.reshape(b, h, tq, d)

@@ -1,0 +1,18 @@
+"""Pure-jnp attention oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """(BH, Tq, d) x (BH, Tk, d) → (BH, Tq, d), fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (d ** 0.5)
+    if causal:
+        tq, tk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(tq)[:, None] >= jnp.arange(tk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

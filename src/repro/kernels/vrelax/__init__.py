@@ -1,0 +1,11 @@
+from repro.kernels.vrelax.ops import (
+    vrelax_partial,
+    concurrent_fixpoint_ell,
+    build_presence_ell,
+)
+
+__all__ = [
+    "vrelax_partial",
+    "concurrent_fixpoint_ell",
+    "build_presence_ell",
+]

@@ -1,0 +1,97 @@
+"""Versioned multi-snapshot edge relaxation — the paper's hot loop, on TPU.
+
+One CQRS superstep evaluates, for every (snapshot s, packed ELL row r,
+slot d):  ``extend(values[s, src[r,d]], w[r,d])`` masked by the snapshot
+presence bit, then reduces over the slot axis.  Unfused XLA materializes the
+``(S, R, D)`` candidate + mask intermediates in HBM three times; this kernel
+streams each gathered tile through VMEM exactly once and writes only the
+``(S, R)`` per-row reductions — the op is bandwidth-bound, so that ~3×
+traffic cut is the win (see EXPERIMENTS.md §Perf for the measured term).
+
+TPU mapping:
+  * slot axis D = 128 → one VPU lane row per (s, r); the reduce over D is an
+    in-register lane reduction.
+  * S_BLOCK = 8 sublanes; an (8, R_BLOCK, 128) f32 tile is 8·R_BLOCK·512 B —
+    R_BLOCK = 8 keeps {values tile, weight tile, word tile, out tile} well
+    under VMEM (~290 KB total).
+  * version bits: 8 consecutive snapshots always share one packed uint32
+    word (S_BLOCK | 32), so the word plane for a grid step is a single
+    ``(R_BLOCK, D)`` uint32 tile selected by the BlockSpec index map — the
+    bit-test is two VPU ops, the paper's per-edge "ownership check".
+  * the value gather ``values[:, src]`` stays in XLA (TPU gathers are
+    efficient there; fusing it into Pallas would force an HBM-resident
+    values ref with per-slot dynamic addressing — slower than XLA's gather
+    on current TPUs).  See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import EXTEND_OPS
+
+S_BLOCK = 8
+R_BLOCK = 8
+
+
+def _vrelax_kernel(vals_ref, w_ref, words_ref, out_ref, *, semiring: str, s_block: int):
+    extend, minimize, identity = EXTEND_OPS[semiring]
+    s_idx = pl.program_id(0)
+
+    vals = vals_ref[...]  # (S_blk, R_blk, D) f32 — gathered source values
+    w = w_ref[...]  # (R_blk, D) f32
+    words = words_ref[...][:, :, 0]  # (R_blk, D) uint32 — presence word plane
+
+    # snapshot bit positions within the shared word
+    bit0 = (s_idx * s_block) % 32
+    bits = (
+        jax.lax.broadcasted_iota(jnp.uint32, (s_block, 1, 1), 0)
+        + jnp.uint32(bit0)
+    )
+    present = ((words[None, :, :] >> bits) & jnp.uint32(1)).astype(jnp.bool_)
+
+    cand = extend(vals, w[None, :, :])
+    cand = jnp.where(present, cand, jnp.float32(identity))
+    red = jnp.min(cand, axis=-1) if minimize else jnp.max(cand, axis=-1)
+    out_ref[...] = red  # (S_blk, R_blk)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("semiring", "interpret", "s_block", "r_block")
+)
+def vrelax_partial_pallas(
+    gathered: jax.Array,  # (S, R, D) f32 — values[:, ell.src]
+    weights: jax.Array,  # (R, D) f32
+    words: jax.Array,  # (R, D, W) uint32 presence words (slot-aligned)
+    *,
+    semiring: str,
+    interpret: bool = True,
+    s_block: int = S_BLOCK,
+    r_block: int = R_BLOCK,
+) -> jax.Array:
+    """Per-(snapshot, packed-row) reduction ``(S, R)`` of the masked relax."""
+    s, r, d = gathered.shape
+    if s % s_block or r % r_block:
+        raise ValueError(f"S={s} must be {s_block}-aligned and R={r} {r_block}-aligned")
+    if 32 % s_block:
+        raise ValueError("s_block must divide 32 (shared presence word)")
+    grid = (s // s_block, r // r_block)
+
+    kernel = functools.partial(_vrelax_kernel, semiring=semiring, s_block=s_block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_block, r_block, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((r_block, d), lambda i, j: (j, 0)),
+            pl.BlockSpec(
+                (r_block, d, 1), lambda i, j, _sb=s_block: (j, 0, (i * _sb) // 32)
+            ),
+        ],
+        out_specs=pl.BlockSpec((s_block, r_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, r), jnp.float32),
+        interpret=interpret,
+    )(gathered, weights, words)

@@ -1,0 +1,104 @@
+"""Public vrelax ops: kernel-backed CQRS superstep + fixpoint driver.
+
+``concurrent_fixpoint_ell`` is the kernel-backed twin of
+``repro.core.concurrent.concurrent_fixpoint`` (flat-edge XLA path); tests
+assert they agree bit-for-bit with each other and with per-snapshot full
+recompute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import Semiring
+from repro.graph.ell import EllPack
+from repro.kernels.common import default_interpret
+from repro.kernels.vrelax.kernel import S_BLOCK, vrelax_partial_pallas
+from repro.utils.padding import round_up
+
+
+def build_presence_ell(presence: jax.Array, ell: EllPack) -> jax.Array:
+    """Scatter per-edge presence words ``(E, W)`` into ELL slots ``(R, D, W)``.
+
+    Empty slots (edge_id == -1) get all-zero words → masked in-kernel.
+    """
+    eid = np.asarray(ell.edge_id)
+    pres = np.asarray(presence)
+    w = pres.shape[1]
+    out = np.zeros((eid.shape[0], eid.shape[1], w), np.uint32)
+    valid = eid >= 0
+    out[valid] = pres[eid[valid]]
+    return jnp.asarray(out)
+
+
+def vrelax_partial(
+    values: jax.Array,  # (S, V)
+    ell: EllPack,
+    presence_ell: jax.Array,  # (R, D, W)
+    semiring: str,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Gather + kernel: per-(snapshot, row) masked reduction ``(S, R)``."""
+    interpret = default_interpret() if interpret is None else interpret
+    s = values.shape[0]
+    s_pad = round_up(s, S_BLOCK)
+    if s_pad != s:
+        values = jnp.pad(values, ((0, s_pad - s), (0, 0)))
+    gathered = values[:, ell.src]  # (S_pad, R, D) — XLA gather (see kernel.py)
+    partial = vrelax_partial_pallas(
+        gathered, ell.weight, presence_ell, semiring=semiring, interpret=interpret
+    )
+    return partial[:s]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters", "interpret"),
+)
+def concurrent_fixpoint_ell(
+    bootstrap: jax.Array,  # (V,)
+    ell: EllPack,
+    presence_ell: jax.Array,  # (R, D, W)
+    sr: Semiring,
+    num_vertices: int,
+    num_snapshots: int,
+    max_iters: Optional[int] = None,
+    interpret: bool = True,
+):
+    """Kernel-backed concurrent evaluation of all snapshots. → ((S,V), iters)."""
+    values0 = jnp.broadcast_to(bootstrap[None, :], (num_snapshots, num_vertices))
+    limit = num_vertices + 1 if max_iters is None else max_iters
+    row2vertex = ell.row2vertex
+
+    def relax(values):
+        partial = vrelax_partial(
+            values, ell, presence_ell, sr.name, interpret=interpret
+        )  # (S, R)
+        # combine split rows → vertices (tiny XLA segment reduce)
+        seg = functools.partial(
+            sr.segment_reduce,
+            segment_ids=row2vertex,
+            num_segments=num_vertices,
+            indices_are_sorted=True,
+        )
+        upd = jax.vmap(seg)(partial)
+        return sr.improve(values, upd)
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < limit)
+
+    def body(state):
+        values, _, it = state
+        new = relax(values)
+        return new, jnp.any(new != values), it + 1
+
+    values, _, iters = jax.lax.while_loop(
+        cond, body, (values0, jnp.bool_(True), jnp.int32(0))
+    )
+    return values, iters

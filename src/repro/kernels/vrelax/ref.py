@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the vrelax kernel (and the full superstep)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import EXTEND_OPS
+
+
+def vrelax_partial_ref(
+    gathered: jax.Array,  # (S, R, D)
+    weights: jax.Array,  # (R, D)
+    words: jax.Array,  # (R, D, W)
+    *,
+    semiring: str,
+) -> jax.Array:
+    """Reference per-row reduction, identical math to the kernel."""
+    extend, minimize, identity = EXTEND_OPS[semiring]
+    s = gathered.shape[0]
+    snaps = jnp.arange(s, dtype=jnp.uint32)
+    word_idx = (snaps // 32).astype(jnp.int32)
+    bit_idx = snaps % 32
+    sel = jnp.moveaxis(words, -1, 0)[word_idx]  # (S, R, D)
+    present = ((sel >> bit_idx[:, None, None]) & jnp.uint32(1)).astype(bool)
+    cand = extend(gathered, weights[None, :, :])
+    cand = jnp.where(present, cand, jnp.float32(identity))
+    return jnp.min(cand, axis=-1) if minimize else jnp.max(cand, axis=-1)

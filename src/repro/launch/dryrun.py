@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# CI-scale override must also land before jax initializes:
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
+    )
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+# For each cell: build abstract inputs (ShapeDtypeStruct, zero allocation),
+# ``jax.jit(fn, in_shardings=...).lower(...).compile()``, print/record
+# ``memory_analysis()`` (fits-per-chip proof) and ``cost_analysis()`` +
+# collective bytes (→ §Roofline).  Results land as JSON under
+# ``experiments/dryrun/`` for benchmarks and EXPERIMENTS.md.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#   REPRO_DRYRUN_DEVICES=8 ... --debug-mesh   (CI-scale smoke of the machinery)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.distributed.partitioning import active_mesh
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline.analysis import HW_V5E, roofline_report
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(m.argument_size_in_bytes),
+            "output_bytes": int(m.output_size_in_bytes),
+            "temp_bytes": int(m.temp_size_in_bytes),
+            "alias_bytes": int(m.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                m.argument_size_in_bytes + m.output_size_in_bytes
+                + m.temp_size_in_bytes - m.alias_size_in_bytes
+            ),
+        }
+    except Exception as e:  # backend without memory stats
+        return {"error": str(e)}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str, *, out_dir: str):
+    spec = get_arch(arch_id)
+    t0 = time.time()
+    cell = build_cell(spec, shape_name, mesh)
+    with mesh, active_mesh(mesh):
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(*cell.args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_stats(compiled)
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost if isinstance(cost, dict) else cost[0]
+    except Exception as e:
+        cost = {"error": str(e)}
+    hlo = compiled.as_text()
+    n_chips = mesh.devices.size
+    report = roofline_report(
+        {k: v for k, v in cost.items() if isinstance(v, (int, float))},
+        hlo,
+        num_chips=n_chips,
+        model_flops=cell.model_flops,
+        scan_factor=cell.scan_factor,
+        coll_scan_factor=cell.coll_scan_factor,
+        analytic_bytes=cell.analytic_bytes,
+        memory_stats=mem,
+    )
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "num_chips": int(n_chips),
+        "description": cell.description,
+        "compile_seconds": round(t_compile, 2),
+        "memory": mem,
+        "cost": {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        "roofline": report.to_dict(),
+        "fits_hbm": (
+            mem.get("peak_estimate_bytes", 0) < HW_V5E["hbm_bytes"]
+            if "peak_estimate_bytes" in mem else None
+        ),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    frac = report.roofline_fraction
+    print(
+        f"[OK] {arch_id:18s} {shape_name:14s} {mesh_name:9s} "
+        f"compile={t_compile:6.1f}s "
+        f"args/chip={mem.get('argument_bytes', 0)/2**30:6.2f}GiB "
+        f"flops/chip={report.flops_per_chip:.3e} "
+        f"coll/chip={report.collective_bytes_per_chip:.3e}B "
+        f"dom={report.dominant:10s} "
+        f"frac={frac if frac is None else round(frac, 3)}",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="use the small 8-device mesh (with REPRO_DRYRUN_DEVICES=8)")
+    ap.add_argument("--include-evolving", action="store_true", default=True)
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    make = make_debug_mesh if args.debug_mesh else make_production_mesh
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod", make(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod", make(multi_pod=True)))
+
+    if args.all:
+        targets = [
+            (a, s)
+            for a in list_archs(include_extra=args.include_evolving)
+            for s in get_arch(a).shapes
+        ]
+    else:
+        archs = [args.arch] if args.arch else list_archs()
+        targets = [
+            (a, s)
+            for a in archs
+            for s in ([args.shape] if args.shape else get_arch(a).shapes)
+        ]
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_name in targets:
+            try:
+                run_cell(arch_id, shape_name, mesh, mesh_name, out_dir=args.out)
+            except Exception as e:
+                failures.append((arch_id, shape_name, mesh_name, repr(e)))
+                print(f"[FAIL] {arch_id} {shape_name} {mesh_name}: {e!r}", flush=True)
+                traceback.print_exc()
+    print(f"\ndone: {len(targets) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

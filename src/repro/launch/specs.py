@@ -1,0 +1,584 @@
+"""Per-(arch × shape × mesh) cell builders for the dry-run and launchers.
+
+``build_cell`` returns the jit-able step function, abstract (ShapeDtypeStruct)
+inputs, matching in_shardings, and analytic MODEL_FLOPS — everything
+``launch/dryrun.py`` needs to ``lower().compile()`` a cell without touching
+device memory, and everything ``roofline`` needs to score it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec
+from repro.distributed.partitioning import sharding_for
+from repro.models.params import abstract_params, param_shardings
+from repro.optim.adamw import AdamWConfig, opt_state_defs
+from repro.utils.padding import round_up
+
+# per-arch gradient-accumulation (activation-memory control at full scale)
+ACCUM_STEPS = {
+    "deepseek-v2-236b": 32,
+    "llama3-8b": 8,
+    "qwen2-moe-a2.7b": 4,
+    "stablelm-1.6b": 4,
+    "gemma-2b": 4,
+}
+
+OPT = AdamWConfig()
+# 236B on 16 GiB chips: factored second moment + bf16 momentum + bf16
+# gradient accumulator (see EXPERIMENTS.md §Dry-run memory notes).
+ARCH_OPT = {
+    "deepseek-v2-236b": AdamWConfig(factored=True, momentum_dtype="bfloat16"),
+}
+ACCUM_DTYPE = {"deepseek-v2-236b": "bfloat16"}
+# §Perf iteration B1: bf16 weight gathers (see training/steps.py).  Off by
+# default so the paper-faithful fp32-gather baseline stays reproducible;
+# REPRO_BF16_GATHER=1 enables it for the hillclimb measurement.
+import os as _os
+BF16_GATHER = bool(int(_os.environ.get("REPRO_BF16_GATHER", "0")))
+# §Perf iteration B2: group-local MoE dispatch (default ON — beyond-paper
+# optimized path; REPRO_MOE_GROUPED=0 restores the global-sort baseline).
+MOE_GROUPED = bool(int(_os.environ.get("REPRO_MOE_GROUPED", "1")))
+# §Perf iteration B4: remat policy "dots" saves matmul outputs (less bwd
+# recompute, more activation memory). Off by default pending memory check.
+REMAT_POLICY = _os.environ.get("REPRO_REMAT_POLICY", "full")
+# §Perf iteration C1: edge-parallel GNN regime — replicate the node state,
+# shard only edges.  Gathers h[src] become chip-local; the per-layer
+# aggregate costs ONE (N, d) all-reduce instead of per-edge cross-chip
+# traffic.  Applied to pna/gatedgcn full-graph cells where the replicated
+# node state fits (N × d_hidden × 4B < 1.5 GiB/chip).
+GNN_EDGE_PARALLEL = bool(int(_os.environ.get("REPRO_GNN_EDGE_PARALLEL", "0")))
+# §Perf iteration C3: bf16 node/message state for big graphs — halves the
+# all-gather/all-reduce wire bytes that dominate full-graph GNN training.
+GNN_BF16 = bool(int(_os.environ.get("REPRO_GNN_BF16", "0")))
+# §Perf iteration A: folded-CQRS evolving cells (active-subgraph sizes)
+EVOLVE_FOLDED = bool(int(_os.environ.get("REPRO_EVOLVE_FOLDED", "0")))
+
+
+def opt_for(arch_id: str) -> AdamWConfig:
+    return ARCH_OPT.get(arch_id, OPT)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    model_flops: Optional[float] = None
+    description: str = ""
+    # product of enclosing scan trip counts for the dominant compute body —
+    # XLA cost_analysis counts while/scan bodies ONCE (verified; see
+    # EXPERIMENTS.md §Roofline methodology), so raw numbers are multiplied
+    # by this to estimate whole-step costs.
+    scan_factor: float = 1.0
+    # collectives often sit at a different loop level than the compute body
+    # (XLA hoists FSDP all-gathers out of the layer scan, so they run once
+    # per MICROBATCH, not per layer) — separate correction factor.
+    coll_scan_factor: Optional[float] = None
+    # analytic per-chip HBM traffic estimate (bytes); set where the scan
+    # correction would mis-scale once-per-step segments (LM optimizer etc.)
+    analytic_bytes: Optional[float] = None
+    static_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+def _sds(shape, dtype, mesh, logical):
+    return jax.ShapeDtypeStruct(shape, dtype), sharding_for(logical, mesh, shape=shape)
+
+
+def _abstract_and_shard(defs, mesh):
+    return abstract_params(defs), param_shardings(defs, mesh)
+
+
+# ===========================================================================
+# LM cells
+# ===========================================================================
+def _lm_model_flops(cfg, tokens: int, *, train: bool) -> float:
+    n_active = cfg.active_param_count()
+    mult = 6.0 if train else 2.0
+    return mult * n_active * tokens
+
+
+def _batch_shards(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]))
+
+
+def _lm_train_bytes(cfg, defs, opt_defs, mesh, b, s, accum) -> float:
+    """Per-chip HBM bytes per train step (documented in EXPERIMENTS.md):
+    params re-read per microbatch (fwd+bwd) + optimizer read/write +
+    activations ~12 passes per layer per microbatch token + logits."""
+    from repro.models.params import param_bytes
+
+    chips = mesh.devices.size
+    pb = param_bytes(defs) / chips
+    ob = param_bytes(opt_defs) / chips
+    tokens_chip = b * s / _batch_shards(mesh)
+    acts = tokens_chip * cfg.d_model * 4 * cfg.num_layers * 12
+    model_size = mesh.shape.get("model", 1)
+    logits = accum * (tokens_chip / accum) * cfg.vocab_size * 4 / model_size * 3
+    return 2 * accum * pb + pb + 2 * ob + acts + logits
+
+
+def _lm_infer_bytes(cfg, defs, mesh, tokens_chip, cache_bytes_chip=0.0) -> float:
+    from repro.models.params import param_bytes
+
+    chips = mesh.devices.size
+    pb = param_bytes(defs) / chips
+    acts = tokens_chip * cfg.d_model * 4 * cfg.num_layers * 8
+    return pb + acts + 2 * cache_bytes_chip
+
+
+def _lm_train_cell(spec, shape, mesh, cfg) -> Cell:
+    from repro.models.transformer import transformer_defs
+    from repro.training.steps import build_lm_train_step
+
+    opt_cfg = opt_for(spec.arch_id)
+    if cfg.moe and MOE_GROUPED:
+        # §Perf B2: group-local MoE dispatch — one group per data shard
+        cfg = dataclasses.replace(cfg, moe_groups=_batch_shards(mesh))
+    if REMAT_POLICY != "full":
+        cfg = dataclasses.replace(cfg, remat_policy=REMAT_POLICY)
+    defs = transformer_defs(cfg)
+    params, pshard = _abstract_and_shard(defs, mesh)
+    opt, oshard = _abstract_and_shard(opt_state_defs(defs, opt_cfg), mesh)
+    b, s = shape["batch"], shape["seq"]
+    tok, tok_sh = _sds((b, s), jnp.int32, mesh, ("batch", "seq"))
+    batch = {"tokens": tok, "targets": tok}
+    bshard = {"tokens": tok_sh, "targets": tok_sh}
+    accum = ACCUM_STEPS.get(spec.arch_id, 1)
+    fn = build_lm_train_step(
+        cfg, opt_cfg, accum_steps=accum,
+        accum_dtype=ACCUM_DTYPE.get(spec.arch_id),
+        cast_params_once=BF16_GATHER,
+    )
+    odefs = opt_state_defs(defs, opt_cfg)
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=fn,
+        args=(params, opt, batch), in_shardings=(pshard, oshard, bshard),
+        model_flops=_lm_model_flops(cfg, b * s, train=True),
+        description=f"train_step accum={accum}",
+        scan_factor=float(cfg.num_layers * accum),
+        coll_scan_factor=float(accum),  # FSDP gathers hoisted per microbatch
+        analytic_bytes=_lm_train_bytes(cfg, defs, odefs, mesh, b, s, accum),
+    )
+
+
+def _lm_prefill_cell(spec, shape, mesh, cfg) -> Cell:
+    from repro.models.transformer import transformer_defs
+    from repro.serving.steps import build_prefill_step
+
+    defs = transformer_defs(cfg)
+    params, pshard = _abstract_and_shard(defs, mesh)
+    b, s = shape["batch"], shape["seq"]
+    tok, tok_sh = _sds((b, s), jnp.int32, mesh, ("batch", "seq"))
+    fn = build_prefill_step(cfg)
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=fn,
+        args=(params, tok), in_shardings=(pshard, tok_sh),
+        model_flops=_lm_model_flops(cfg, b * s, train=False),
+        description="prefill_step",
+        scan_factor=float(cfg.num_layers),
+        coll_scan_factor=1.0,  # weight gathers hoisted out of the layer scan
+        analytic_bytes=_lm_infer_bytes(cfg, defs, mesh, b * s / _batch_shards(mesh)),
+    )
+
+
+def _lm_decode_cell(spec, shape, mesh, cfg) -> Cell:
+    from repro.models.transformer import cache_defs, transformer_defs
+    from repro.serving.steps import build_decode_step
+
+    defs = transformer_defs(cfg)
+    params, pshard = _abstract_and_shard(defs, mesh)
+    b, cache_len = shape["batch"], shape["cache_len"]
+    big = shape.get("big_seq", False)
+    cdefs = cache_defs(cfg, b, cache_len, big_seq=big)
+    cache, cshard = _abstract_and_shard(cdefs, mesh)
+    tok, tok_sh = _sds((b,), jnp.int32, mesh, ("batch",))
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    idx_sh = NamedSharding(mesh, P())
+    fn = build_decode_step(cfg)
+    from repro.models.params import param_bytes as _pb
+
+    cache_chip = _pb(cdefs) / mesh.devices.size
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=fn,
+        args=(params, tok, cache, idx),
+        in_shardings=(pshard, tok_sh, cshard, idx_sh),
+        model_flops=_lm_model_flops(cfg, b, train=False),
+        description=f"decode_step cache={cache_len}",
+        scan_factor=float(cfg.num_layers),
+        coll_scan_factor=1.0,
+        analytic_bytes=_lm_infer_bytes(cfg, defs, mesh, float(b), cache_chip),
+    )
+
+
+# ===========================================================================
+# GNN cells
+# ===========================================================================
+def _gnn_batch_specs(cfg, mesh, n, e, d_feat, *, with_triplets, triplet_cap,
+                     edge_chunk, replicate_nodes=False):
+    # vertex/edge spaces take the whole mesh — pad so every axis divides
+    n = round_up(n, 512)
+    e_pad = round_up(e, max(512, edge_chunk or 512))
+    batch, bshard = {}, {}
+    vax = None if replicate_nodes else "vertices"
+
+    def add(name, shape, dtype, logical):
+        logical = tuple(vax if a == "vertices" else a for a in logical)
+        batch[name], bshard[name] = _sds(shape, dtype, mesh, logical)
+
+    add("node_feat", (n, d_feat), jnp.float32, ("vertices", None))
+    add("edge_src", (e_pad,), jnp.int32, ("edges",))
+    add("edge_dst", (e_pad,), jnp.int32, ("edges",))
+    add("edge_valid", (e_pad,), jnp.bool_, ("edges",))
+    add("labels", (n,), jnp.int32, ("vertices",))
+    add("label_mask", (n,), jnp.float32, ("vertices",))
+    if cfg.arch == "gatedgcn":
+        add("edge_feat", (e_pad, cfg.d_edge_feat), jnp.float32, ("edges", None))
+    if cfg.arch in ("dimenet", "equiformer_v2"):
+        add("pos", (n, 3), jnp.float32, ("vertices", None))
+    if cfg.arch == "dimenet":
+        add("atom_type", (n,), jnp.int32, ("vertices",))
+        add("graph_id", (n,), jnp.int32, ("vertices",))
+        add("energy", (1,), jnp.float32, (None,))
+        t = round_up(e_pad * triplet_cap, max(512, cfg.triplet_chunk or 512))
+        add("triplet_kj", (t,), jnp.int32, ("edges",))
+        add("triplet_ji", (t,), jnp.int32, ("edges",))
+        add("triplet_valid", (t,), jnp.bool_, ("edges",))
+    return batch, bshard, e_pad
+
+
+def _gnn_full_cell(spec, shape, mesh, cfg) -> Cell:
+    from repro.models.gnn.dimenet import dimenet_defs
+    from repro.models.gnn.equiformer_v2 import equiformer_defs
+    from repro.models.gnn.gatedgcn import gatedgcn_defs
+    from repro.models.gnn.pna import pna_defs
+    from repro.training.steps import build_gnn_train_step
+
+    n, e = shape["n_nodes"], shape["n_edges"]
+    # big-graph memory control: chunk eSCN edges / DimeNet triplets
+    edge_chunk = 0
+    triplet_chunk = 0
+    triplet_cap = 4
+    if cfg.arch == "equiformer_v2" and e > 10_000_000:
+        edge_chunk = 131_072
+    if e > 10_000_000:
+        triplet_cap = 2
+        triplet_chunk = 1_048_576
+    cfg = dataclasses.replace(
+        cfg, d_feat=shape["d_feat"], num_classes=shape["num_classes"],
+        edge_chunk=edge_chunk, triplet_chunk=triplet_chunk,
+        dtype="bfloat16" if (GNN_BF16 and e > 10_000_000) else cfg.dtype,
+    )
+    defs = {
+        "pna": pna_defs, "gatedgcn": gatedgcn_defs, "dimenet": dimenet_defs,
+        "equiformer_v2": equiformer_defs,
+    }[cfg.arch](cfg)
+    params, pshard = _abstract_and_shard(defs, mesh)
+    opt, oshard = _abstract_and_shard(opt_state_defs(defs), mesh)
+    replicate_nodes = (
+        GNN_EDGE_PARALLEL
+        and cfg.arch in ("pna", "gatedgcn")
+        and n * cfg.d_hidden * 4 < 1.5 * 2**30
+    )
+    if replicate_nodes:
+        cfg = dataclasses.replace(cfg, edge_parallel=True)
+    batch, bshard, e_pad = _gnn_batch_specs(
+        cfg, mesh, n, e, shape["d_feat"],
+        with_triplets=cfg.arch == "dimenet", triplet_cap=triplet_cap,
+        edge_chunk=edge_chunk, replicate_nodes=replicate_nodes,
+    )
+    fn = build_gnn_train_step(cfg, OPT, num_graphs=1)
+    # message-passing "model flops": edges × per-edge MACs (arch-dependent)
+    per_edge = {
+        "pna": 2 * 2 * cfg.d_hidden * cfg.d_hidden + 13 * cfg.d_hidden * cfg.d_hidden * 2,
+        "gatedgcn": 2 * 5 * cfg.d_hidden * cfg.d_hidden,
+        "dimenet": 2 * (3 * cfg.d_hidden**2) + triplet_cap * 2 * cfg.n_bilinear * cfg.d_hidden**2,
+        "equiformer_v2": 2 * (cfg.m_max * 2 + 1) * ((cfg.l_max + 1) * cfg.d_hidden) ** 2,
+    }[cfg.arch]
+    mf = 3.0 * cfg.num_layers * e * per_edge  # fwd+bwd
+    sf = 1.0
+    if cfg.arch == "equiformer_v2" and edge_chunk:
+        sf = float(e_pad // edge_chunk)
+    elif cfg.arch == "dimenet" and triplet_chunk:
+        t_pad = round_up(e_pad * triplet_cap, max(512, triplet_chunk))
+        sf = float(t_pad // triplet_chunk)
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=fn,
+        args=(params, opt, batch), in_shardings=(pshard, oshard, bshard),
+        model_flops=mf,
+        description=(f"gnn_train n={n} e={e_pad} chunk={edge_chunk}"
+                     f"{' edge-parallel' if replicate_nodes else ''}"),
+        scan_factor=sf,
+    )
+
+
+def _gnn_minibatch_cell(spec, shape, mesh, cfg) -> Cell:
+    """Sampled-training cell. pna/gatedgcn/equiformer run the in-jit
+    fixed-fanout sampler from CSR inputs; dimenet (triplet lists are host
+    built) takes pre-sampled block arrays."""
+    from repro.training.steps import build_gnn_train_step
+
+    n_seed = shape["batch_nodes"]
+    fanout = shape["fanout"]
+    n_all, e_all = shape["n_nodes"], shape["n_edges"]
+    d_feat, n_cls = shape["d_feat"], shape["num_classes"]
+    # sampled-subgraph sizes (fixed fanout ⇒ static)
+    n_sub, e_sub, cur = n_seed, 0, n_seed
+    for f in fanout:
+        e_sub += cur * f
+        cur *= f
+        n_sub += cur
+    cfg = dataclasses.replace(cfg, d_feat=d_feat, num_classes=n_cls)
+
+    if cfg.arch == "dimenet":
+        shape2 = dict(shape, kind="gnn_full", n_nodes=n_sub, n_edges=e_sub)
+        cell = _gnn_full_cell(spec, shape2, mesh, cfg)
+        cell.description = f"gnn_minibatch(presampled) n={n_sub} e={e_sub}"
+        return cell
+
+    from repro.models.gnn.equiformer_v2 import equiformer_defs
+    from repro.models.gnn.gatedgcn import gatedgcn_defs
+    from repro.models.gnn.pna import pna_defs
+
+    defs = {
+        "pna": pna_defs, "gatedgcn": gatedgcn_defs,
+        "equiformer_v2": equiformer_defs,
+    }[cfg.arch](cfg)
+    params, pshard = _abstract_and_shard(defs, mesh)
+    opt, oshard = _abstract_and_shard(opt_state_defs(defs), mesh)
+
+    inputs, ishard = {}, {}
+
+    def add(name, shp, dtype, logical):
+        inputs[name], ishard[name] = _sds(shp, dtype, mesh, logical)
+
+    n_all_pad = round_up(n_all, 512)
+    e_all_pad = round_up(e_all, 512)
+    add("indptr", (n_all + 1,), jnp.int32, (None,))
+    add("indices", (e_all_pad,), jnp.int32, ("edges",))
+    add("features", (n_all_pad, d_feat), jnp.float32, ("vertices", None))
+    add("labels_all", (n_all_pad,), jnp.int32, ("vertices",))
+    add("seeds", (n_seed,), jnp.int32, (None,))
+    add("seed", (), jnp.int32, ())
+    if cfg.arch == "equiformer_v2":
+        add("pos_all", (n_all_pad, 3), jnp.float32, ("vertices", None))
+
+    base_step = build_gnn_train_step(cfg, OPT)
+    arch = cfg.arch
+
+    def step(params, opt_state, inputs):
+        from repro.data.graphs import sampled_block_batch
+        from repro.graph.sampler import NeighborSampler
+        from repro.graph.structures import CSR
+
+        csr = CSR(
+            indptr=inputs["indptr"], indices=inputs["indices"],
+            weights=jnp.ones_like(inputs["indices"], jnp.float32),
+            num_vertices=n_all,
+        )
+        sampler = NeighborSampler(csr, fanout)
+        rng = jax.random.PRNGKey(inputs["seed"])
+        blocks = sampler.sample(rng, inputs["seeds"])
+        batch = sampled_block_batch(blocks, inputs["features"], inputs["labels_all"])
+        batch["label_mask"] = (
+            jnp.arange(batch["node_feat"].shape[0]) < batch.pop("num_seeds")
+        ).astype(jnp.float32)
+        if arch == "equiformer_v2":
+            batch["pos"] = inputs["pos_all"][batch["node_ids"]]
+        if arch == "gatedgcn":
+            batch["edge_feat"] = jnp.ones(
+                (batch["edge_src"].shape[0], cfg.d_edge_feat), jnp.float32
+            )
+        batch.pop("node_ids")
+        return base_step(params, opt_state, batch)
+
+    per_edge = 2 * 5 * cfg.d_hidden * cfg.d_hidden
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=step,
+        args=(params, opt, inputs), in_shardings=(pshard, oshard, ishard),
+        model_flops=3.0 * cfg.num_layers * e_sub * per_edge,
+        description=f"gnn_minibatch sampler fanout={fanout} n_sub={n_sub}",
+    )
+
+
+def _gnn_molecule_cell(spec, shape, mesh, cfg) -> Cell:
+    n = shape["batch"] * shape["n_nodes"]
+    e = shape["batch"] * shape["n_edges"]
+    shape2 = dict(shape, kind="gnn_full", n_nodes=n, n_edges=e,
+                  d_feat=shape["d_feat"], num_classes=shape["num_classes"])
+    cfg2 = dataclasses.replace(cfg, d_feat=shape["d_feat"],
+                               num_classes=shape["num_classes"])
+    from repro.training.steps import build_gnn_train_step
+
+    cell = _gnn_full_cell(spec, shape2, mesh, cfg2)
+    if cfg.arch == "dimenet":
+        # per-graph energies for the batched molecules
+        from repro.models.gnn.dimenet import dimenet_defs
+
+        b = shape["batch"]
+        cell.args[2]["energy"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+        cell.in_shardings[2]["energy"] = sharding_for(("batch",), mesh, shape=(b,))
+        cell.fn = build_gnn_train_step(cfg2, OPT, num_graphs=b)
+    cell.description = f"gnn_molecule batch={shape['batch']}"
+    return cell
+
+
+# ===========================================================================
+# recsys cells
+# ===========================================================================
+def _dlrm_flops(cfg, batch: int, *, train: bool) -> float:
+    mlp = 0
+    dims = cfg.bot_mlp
+    for i in range(len(dims) - 1):
+        mlp += 2 * dims[i] * dims[i + 1]
+    tdims = (cfg.n_interactions + cfg.embed_dim,) + cfg.top_mlp
+    for i in range(len(tdims) - 1):
+        mlp += 2 * tdims[i] * tdims[i + 1]
+    inter = 2 * (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+    per_ex = mlp + inter
+    return batch * per_ex * (3.0 if train else 1.0)
+
+
+def _recsys_cell(spec, shape, mesh, cfg) -> Cell:
+    from repro.models.dlrm import dlrm_defs, dlrm_forward, dlrm_retrieval_scores
+    from repro.training.steps import build_dlrm_train_step
+
+    defs = dlrm_defs(cfg)
+    params, pshard = _abstract_and_shard(defs, mesh)
+    kind = shape["kind"]
+
+    if kind == "recsys_train":
+        opt, oshard = _abstract_and_shard(opt_state_defs(defs), mesh)
+        b = shape["batch"]
+        batch, bshard = {}, {}
+        for name, shp, dt, lg in (
+            ("dense", (b, cfg.n_dense), jnp.float32, ("batch", None)),
+            ("sparse", (b, cfg.n_sparse), jnp.int32, ("batch", None)),
+            ("labels", (b,), jnp.float32, ("batch",)),
+        ):
+            batch[name], bshard[name] = _sds(shp, dt, mesh, lg)
+        fn = build_dlrm_train_step(cfg, OPT, mesh)
+        return Cell(
+            arch_id=spec.arch_id, shape_name="", fn=fn,
+            args=(params, opt, batch), in_shardings=(pshard, oshard, bshard),
+            model_flops=_dlrm_flops(cfg, b, train=True),
+            description=f"dlrm_train b={b}",
+        )
+
+    if kind == "recsys_serve":
+        b = shape["batch"]
+        batch, bshard = {}, {}
+        for name, shp, dt, lg in (
+            ("dense", (b, cfg.n_dense), jnp.float32, ("batch", None)),
+            ("sparse", (b, cfg.n_sparse), jnp.int32, ("batch", None)),
+        ):
+            batch[name], bshard[name] = _sds(shp, dt, mesh, lg)
+        fn = lambda p, bb: dlrm_forward(cfg, p, bb, mesh)
+        return Cell(
+            arch_id=spec.arch_id, shape_name="", fn=fn,
+            args=(params, batch), in_shardings=(pshard, bshard),
+            model_flops=_dlrm_flops(cfg, b, train=False),
+            description=f"dlrm_serve b={b}",
+        )
+
+    # retrieval: 1 query vs n_candidates
+    nc = shape["n_candidates"]
+    batch, bshard = {}, {}
+    batch["dense"], bshard["dense"] = _sds((1, cfg.n_dense), jnp.float32, mesh, (None, None))
+    batch["cand_ids"], bshard["cand_ids"] = _sds((nc,), jnp.int32, mesh, ("edges",))
+    fn = lambda p, bb: dlrm_retrieval_scores(cfg, p, bb, mesh, top_k=100)
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=fn,
+        args=(params, batch), in_shardings=(pshard, bshard),
+        model_flops=2.0 * nc * cfg.embed_dim,
+        description=f"dlrm_retrieval nc={nc}",
+    )
+
+
+# ===========================================================================
+# evolving-graph cells (the paper's workload)
+# ===========================================================================
+def _evolving_cell(spec, shape, mesh, cfg) -> Cell:
+    from repro.core.semiring import get_semiring
+    from repro.distributed.evolve import distributed_concurrent_fixpoint
+
+    sr = get_semiring(cfg.query)
+    v, e, s = shape["n_vertices"], shape["n_edges"], shape["n_snapshots"]
+    if EVOLVE_FOLDED:
+        # §Perf A1/A3: UVV source-folding — iterate only the active↔active
+        # subgraph.  Sizes use the paper's own worst-case reductions (42% of
+        # vertices / 32% of edges, Fig. 9); our measured CPU-scale stats are
+        # smaller still (21.5% / 18.9%).
+        v = round_up(int(v * 0.42), 512 * 16)
+        e = int(e * 0.32)
+    model_shards = int(mesh.shape["model"])
+    snap_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    e_local = round_up(-(-e // model_shards), 128)
+    e_total = e_local * model_shards
+    w = (s + 31) // 32
+    fixed_iters = 8  # dry-run superstep count (cost scales linearly)
+
+    def fn(bootstrap, src, dst_local, weight, presence, valid):
+        sharded = {
+            "src": src, "dst_local": dst_local, "weight": weight,
+            "presence": presence, "valid": valid,
+            "v_local": v // model_shards, "e_local": e_local,
+        }
+        return distributed_concurrent_fixpoint(
+            bootstrap, sharded, sr, v, s, mesh,
+            fixed_iters=fixed_iters, snap_axes=snap_axes,
+        )
+
+    def sd(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    ns = NamedSharding
+    args = (
+        sd((v,), jnp.float32), sd((e_total,), jnp.int32), sd((e_total,), jnp.int32),
+        sd((e_total,), jnp.float32), sd((e_total, w), jnp.uint32), sd((e_total,), jnp.bool_),
+    )
+    shardings = (
+        ns(mesh, P("model")), ns(mesh, P("model")), ns(mesh, P("model")),
+        ns(mesh, P("model")), ns(mesh, P("model", None)), ns(mesh, P("model")),
+    )
+    # model "flops": S × E edge relaxations × ~4 flop-equivalents × iters
+    mf = float(fixed_iters) * s * e * 4.0
+    return Cell(
+        arch_id=spec.arch_id, shape_name="", fn=fn,
+        args=args, in_shardings=shardings, model_flops=mf,
+        description=f"cqrs_superstep x{fixed_iters} V={v} E={e} S={s}",
+        scan_factor=float(fixed_iters),
+    )
+
+
+# ===========================================================================
+# dispatcher
+# ===========================================================================
+def build_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *, smoke=False) -> Cell:
+    shape = spec.shapes[shape_name]
+    cfg = spec.smoke_config if smoke else spec.config
+    kind = shape["kind"]
+    builders = {
+        "train": _lm_train_cell,
+        "prefill": _lm_prefill_cell,
+        "decode": _lm_decode_cell,
+        "gnn_full": _gnn_full_cell,
+        "gnn_minibatch": _gnn_minibatch_cell,
+        "gnn_molecule": _gnn_molecule_cell,
+        "recsys_train": _recsys_cell,
+        "recsys_serve": _recsys_cell,
+        "recsys_retrieval": _recsys_cell,
+        "evolving": _evolving_cell,
+    }
+    cell = builders[kind](spec, shape, mesh, cfg)
+    cell.shape_name = shape_name
+    return cell

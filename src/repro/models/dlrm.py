@@ -1,0 +1,180 @@
+"""DLRM (MLPerf config) [arXiv:1906.00091] — Criteo-1TB recommendation.
+
+Huge sparse embedding tables (26 categorical fields, the canonical MLPerf
+row counts, ~187M rows × 128) → dot-product feature interaction → small MLPs.
+JAX has no native EmbeddingBag or CSR: the lookup is built from ``jnp.take``
++ the fused bag-reduce kernel (single-host) or a ``shard_map`` masked-local
+lookup + psum (row-sharded tables over the ``model`` axis — the EP-style
+pattern used by the pod-scale configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.params import ParamDef
+
+# MLPerf DLRM Criteo-1TB per-field row counts.
+CRITEO_TABLE_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple = (13, 512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    table_sizes: tuple = CRITEO_TABLE_SIZES
+    dtype: str = "float32"
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.table_sizes))
+
+    @property
+    def padded_rows(self) -> int:
+        """Row count padded so any mesh axis (≤4096-way) divides the table."""
+        n = self.total_rows
+        return ((n + 4095) // 4096) * 4096
+
+    @property
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.table_sizes)[:-1]]).astype(np.int64)
+
+    @property
+    def n_interactions(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def _mlp_defs(dims: Sequence[int], dtype):
+    defs = {}
+    for i in range(len(dims) - 1):
+        defs[f"w{i}"] = ParamDef((dims[i], dims[i + 1]), dtype, ("embed", "mlp"))
+        defs[f"b{i}"] = ParamDef((dims[i + 1],), dtype, (None,), "zeros")
+    return defs
+
+
+def _mlp_fwd(p, x, final_act=False):
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def dlrm_defs(cfg: DLRMConfig):
+    top_in = cfg.n_interactions + cfg.embed_dim
+    return {
+        # single concatenated table, row-sharded over `model` at pod scale
+        "table": ParamDef(
+            (cfg.padded_rows, cfg.embed_dim), cfg.cdt, ("table_rows", None), "embed"
+        ),
+        "bot": _mlp_defs(cfg.bot_mlp, cfg.cdt),
+        "top": _mlp_defs((top_in,) + cfg.top_mlp, cfg.cdt),
+    }
+
+
+# ---------------------------------------------------------------- lookup
+def embedding_lookup(
+    table: jax.Array,
+    flat_idx: jax.Array,
+    mesh: Optional[Mesh] = None,
+    axes: tuple = ("pod", "data", "model"),
+) -> jax.Array:
+    """Row lookup. With a mesh: shard_map masked-local gather + psum so the
+    row-sharded table never materializes (the all-reduce carries only the
+    (B·F, dim) results — the classic model-parallel embedding exchange).
+    The table is row-sharded over every available mesh axis in ``axes``."""
+    if mesh is not None:
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+    if mesh is None or not axes:
+        return jnp.take(table, flat_idx, axis=0)
+
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = 1
+    for a in axes:
+        n_shards *= int(mesh.shape[a])
+    rows_local = table.shape[0] // n_shards
+
+    def local_lookup(tbl, idx):
+        shard = jnp.int32(0)
+        for a in axes:
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        local = idx - shard * rows_local
+        ok = (local >= 0) & (local < rows_local)
+        rows = jnp.take(tbl, jnp.clip(local, 0, rows_local - 1), axis=0)
+        rows = jnp.where(ok[:, None], rows, 0.0)
+        return jax.lax.psum(rows, axes)
+
+    in_specs = (P(axes, None), P())
+    return shard_map(
+        local_lookup, mesh=mesh, in_specs=in_specs, out_specs=P(),
+        check_rep=False,
+    )(table, flat_idx)
+
+
+# ---------------------------------------------------------------- forward
+def dlrm_forward(cfg: DLRMConfig, params, batch, mesh: Optional[Mesh] = None):
+    """batch: dense (B, 13) float, sparse (B, 26) int32 per-field ids
+    → logits (B,)."""
+    b = batch["dense"].shape[0]
+    bot = _mlp_fwd(params["bot"], batch["dense"].astype(cfg.cdt), final_act=True)
+
+    offsets = jnp.asarray(cfg.field_offsets, jnp.int32)
+    flat_idx = (batch["sparse"] + offsets[None, :]).reshape(-1)  # (B*26,)
+    emb = embedding_lookup(params["table"], flat_idx, mesh).reshape(
+        b, cfg.n_sparse, cfg.embed_dim
+    )
+
+    # dot interaction over the 27 feature vectors (bottom output + fields)
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, 27, D)
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)  # (B, 27, 27)
+    f = cfg.n_sparse + 1
+    iu, ju = np.triu_indices(f, k=1)
+    inter = zz[:, iu, ju]  # (B, 351)
+
+    top_in = jnp.concatenate([bot, inter], axis=-1)
+    return _mlp_fwd(params["top"], top_in)[:, 0]
+
+
+def dlrm_loss(cfg: DLRMConfig, params, batch, mesh: Optional[Mesh] = None):
+    """Binary cross-entropy CTR loss. batch adds labels (B,) float."""
+    logits = dlrm_forward(cfg, params, batch, mesh)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"bce": loss}
+
+
+def dlrm_retrieval_scores(
+    cfg: DLRMConfig, params, batch, mesh: Optional[Mesh] = None, top_k: int = 100
+):
+    """Retrieval cell: one query vs n_candidates items.
+
+    batch: dense (1, 13), cand_ids (N_c,) int32 (global rows into the table).
+    Scores every candidate with a batched dot against the query tower output
+    (no per-candidate loop), returns (top-k scores, top-k ids).
+    """
+    q = _mlp_fwd(params["bot"], batch["dense"].astype(cfg.cdt), final_act=True)  # (1, D)
+    cand = embedding_lookup(params["table"], batch["cand_ids"], mesh)  # (N_c, D)
+    scores = (cand @ q[0]).astype(jnp.float32)  # (N_c,)
+    return jax.lax.top_k(scores, top_k)

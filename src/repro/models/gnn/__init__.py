@@ -1,0 +1,2 @@
+"""GNN zoo: PNA, GatedGCN (SpMM/segment regime), DimeNet (triplet regime),
+EquiformerV2 (eSCN irrep regime)."""

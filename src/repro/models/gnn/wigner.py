@@ -1,0 +1,143 @@
+"""Real-spherical-harmonic rotation (Wigner-D) machinery for eSCN layers.
+
+Strategy (e3nn-style, TPU-friendly):
+  * rotations about **z** in the real-SH basis have a closed form — ±m pairs
+    mix with cos/sin(mθ) (two VPU ops per edge);
+  * the constant change-of-basis ``J_l = D_l(R_x(π/2))`` is precomputed once
+    per ``l`` on the host by least-squares over a point grid of real SH
+    evaluations (exact to fp64 round-off; no scipy needed);
+  * any rotation then factors as  D(R_z(α)R_y(β)) = Dz(α) · Jᵀ · Dz(β) · J.
+
+Conventions: basis order within ``l`` is m = −l..l, with
+Y_{l,m>0} ∝ P_l^m cos(mφ), Y_{l,−m} ∝ P_l^m sin(mφ); all matrices are
+orthogonal, so rotate-back is a transpose.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- numpy SH
+def _assoc_legendre_np(l_max: int, x: np.ndarray) -> dict:
+    """P_l^m(x) for 0 <= m <= l <= l_max (no Condon-Shortley)."""
+    out = {}
+    somx2 = np.sqrt(np.maximum(1.0 - x * x, 0.0))
+    pmm = np.ones_like(x)
+    for m in range(l_max + 1):
+        out[(m, m)] = pmm.copy()
+        if m < l_max:
+            out[(m + 1, m)] = x * (2 * m + 1) * pmm
+        for l in range(m + 2, l_max + 1):
+            out[(l, m)] = (
+                (2 * l - 1) * x * out[(l - 1, m)] - (l + m - 1) * out[(l - 2, m)]
+            ) / (l - m)
+        pmm = pmm * -(2 * m + 1) * somx2  # CS phase folded; consistent either way
+    return out
+
+
+def real_sph_harm_np(l_max: int, pts: np.ndarray) -> np.ndarray:
+    """Real SH values Y_{l,m}(p) for unit vectors pts (n,3) → (n, (L+1)^2)."""
+    x, y, z = pts[:, 0], pts[:, 1], pts[:, 2]
+    phi = np.arctan2(y, x)
+    ct = np.clip(z, -1.0, 1.0)
+    P = _assoc_legendre_np(l_max, ct)
+    cols = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = np.sqrt(
+                (2 * l + 1)
+                / (4 * np.pi)
+                * float(math.factorial(l - am))
+                / float(math.factorial(l + am))
+            )
+            if m == 0:
+                cols.append(norm * P[(l, 0)])
+            elif m > 0:
+                cols.append(np.sqrt(2.0) * norm * P[(l, m)] * np.cos(m * phi))
+            else:
+                cols.append(np.sqrt(2.0) * norm * P[(l, am)] * np.sin(am * phi))
+    return np.stack(cols, axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def j_matrices(l_max: int) -> tuple:
+    """Constant ``J_l = D_l(R_x(π/2))`` per l, solved on a host point grid."""
+    rng = np.random.default_rng(12345)
+    pts = rng.normal(size=(max(512, 8 * (l_max + 1) ** 2), 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    # R_a = rotation about x by +π/2:  (x, y, z) → (x, −z, y);  R_a ŷ = ẑ.
+    ra = np.array([[1.0, 0.0, 0.0], [0.0, 0.0, -1.0], [0.0, 1.0, 0.0]])
+    # (D(R) Y)(p) = Y(R⁻¹ p)  ⇒  solve  Y(R_a⁻¹ p) = J · Y(p).
+    y_p = real_sph_harm_np(l_max, pts)
+    y_rp = real_sph_harm_np(l_max, pts @ ra)  # rows: Y(R_a⁻¹ p) = Y(p Rᵀ... )
+    js = []
+    off = 0
+    for l in range(l_max + 1):
+        k = 2 * l + 1
+        a = y_p[:, off : off + k]
+        b = y_rp[:, off : off + k]
+        j, *_ = np.linalg.lstsq(a, b, rcond=None)
+        j = j.T  # b_rows = a_rows @ j.T  ⇒  Y(R⁻¹p) = J Y(p)
+        # orthogonality check / cleanup
+        u, _, vt = np.linalg.svd(j)
+        js.append((u @ vt).astype(np.float32))
+        off += k
+    # NOTE: cache NUMPY constants — caching jnp arrays created inside a
+    # trace (e.g. under jax.checkpoint) leaks tracers across traces.
+    return tuple(js)
+
+
+# ------------------------------------------------------------- jax rotations
+def dz_matrix(l: int, theta: jax.Array) -> jax.Array:
+    """Closed-form rotation about z in the real-SH l-block. θ: (E,) → (E,k,k)."""
+    k = 2 * l + 1
+    m = jnp.arange(-l, l + 1)
+    c = jnp.cos(jnp.abs(m)[None, :] * theta[:, None])  # (E, k)
+    s = jnp.sin(jnp.abs(m)[None, :] * theta[:, None]) * jnp.sign(m)[None, :]
+    eye = jnp.eye(k)
+    flip = jnp.fliplr(eye)
+    return c[:, :, None] * eye[None] + s[:, :, None] * flip[None]
+
+
+def edge_wigner(l_max: int, edge_vec: jax.Array) -> list:
+    """Per-edge coefficient-rotation matrices into the edge-aligned frame.
+
+    R_e maps the edge direction n̂ (azimuth α, polar β) onto ẑ.  The
+    coefficient matrix — validated against the pointwise-SH delta property
+    (C·Y(n̂) = Y(ẑ)) in tests — factors as  C = J · Dz(β) · Jᵀ · Dz(α)
+    per l, with J the constant x-axis-π/2 change of basis.
+    ``rotate_blocks(C, x)`` aligns features; ``transpose=True`` rotates back.
+    """
+    n = edge_vec / jnp.maximum(
+        jnp.linalg.norm(edge_vec, axis=-1, keepdims=True), 1e-9
+    )
+    alpha = jnp.arctan2(n[:, 1], n[:, 0])
+    beta = jnp.arccos(jnp.clip(n[:, 2], -1.0, 1.0))
+    js = j_matrices(l_max)
+    out = []
+    for l in range(l_max + 1):
+        dz_a = dz_matrix(l, alpha)
+        dz_b = dz_matrix(l, beta)
+        j = js[l]
+        d = jnp.einsum("ij,ejk,kl,elm->eim", j, dz_b, j.T, dz_a)
+        out.append(d)
+    return out
+
+
+def rotate_blocks(d_list: list, x: jax.Array, transpose: bool = False) -> jax.Array:
+    """Apply block-diagonal per-edge rotation to (E, (L+1)^2, C) features."""
+    outs = []
+    off = 0
+    for l, d in enumerate(d_list):
+        k = 2 * l + 1
+        blk = x[:, off : off + k, :]
+        eq = "eji,ejc->eic" if transpose else "eij,ejc->eic"
+        outs.append(jnp.einsum(eq, d, blk))
+        off += k
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,265 @@
+"""Decoder-only LM: composable param defs, train forward, prefill, decode.
+
+Layers are stacked on a leading ``L`` axis and executed with ``lax.scan``
+(+ optional per-layer remat) so the 60-layer DeepSeek HLO stays compact and
+activation memory is one layer boundary per microbatch.  Dense-first layers
+(DeepSeek's ``first_k_dense``) form a second, smaller scan group.
+
+Three entry points (all pjit-able; shardings via logical axes):
+  ``lm_loss``       — training loss (tokens, targets) → scalar
+  ``prefill_step``  — (B, T) prompt → last-token logits + KV cache
+  ``decode_step``   — (B,) token + cache @ index → logits + cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    TransformerConfig,
+    ffn_defs,
+    ffn_fwd,
+    gqa_decode_fwd,
+    gqa_defs,
+    gqa_fwd,
+    mla_decode_fwd,
+    mla_defs,
+    mla_fwd,
+    moe_defs,
+    moe_fwd,
+    rmsnorm_defs,
+    rmsnorm_fwd,
+)
+from repro.distributed.partitioning import constrain
+from repro.models.params import ParamDef
+
+
+# --------------------------------------------------------------------------
+# parameter tree
+# --------------------------------------------------------------------------
+def _stack_defs(defs, n: int):
+    """Add a leading scanned-layer axis to every ParamDef in the tree."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, d.dtype, ("layers",) + d.logical_axes, d.init),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _block_defs(cfg: TransformerConfig, moe: bool):
+    attn = mla_defs(cfg) if cfg.attention_type == "mla" else gqa_defs(cfg)
+    blk = {
+        "attn_norm": rmsnorm_defs(cfg),
+        "attn": attn,
+        "ffn_norm": rmsnorm_defs(cfg),
+    }
+    if moe:
+        blk["moe"] = moe_defs(cfg)
+    else:
+        blk["ffn"] = ffn_defs(cfg)
+    return blk
+
+
+def transformer_defs(cfg: TransformerConfig):
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.num_layers
+    n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+    defs = {
+        "embed": ParamDef(
+            (cfg.vocab_size, cfg.d_model), cfg.pdtype, ("vocab", "embed"), "embed"
+        ),
+        "final_norm": rmsnorm_defs(cfg),
+    }
+    if n_dense:
+        defs["dense_blocks"] = _stack_defs(_block_defs(cfg, moe=False), n_dense)
+    if n_moe:
+        defs["moe_blocks"] = _stack_defs(_block_defs(cfg, moe=True), n_moe)
+    if not cfg.tie_embeddings:
+        defs["out"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), cfg.pdtype, ("embed", "vocab")
+        )
+    return defs
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _attn_fwd(cfg, p, x, positions):
+    if cfg.attention_type == "mla":
+        return mla_fwd(cfg, p, x, positions)
+    return gqa_fwd(cfg, p, x, positions)
+
+
+def _block_fwd(cfg: TransformerConfig, p, x, positions, moe: bool):
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = _attn_fwd(cfg, p["attn"], rmsnorm_fwd(p["attn_norm"], x), positions)
+    x = x + h
+    y_in = rmsnorm_fwd(p["ffn_norm"], x)
+    if moe:
+        y, aux = moe_fwd(cfg, p["moe"], y_in)
+    else:
+        y, aux = ffn_fwd(cfg, p["ffn"], y_in), jnp.float32(0.0)
+    return constrain(x + y, ("batch", "seq", "embed")), aux
+
+
+def _scan_blocks(cfg, stacked, x, positions, moe: bool):
+    def blk(lp, xx):
+        return _block_fwd(cfg, lp, xx, positions, moe)
+
+    if cfg.remat:
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        blk = jax.checkpoint(blk, prevent_cse=False, policy=policy)
+
+    def body(carry, lp):
+        xx, aux = carry
+        xx, a = blk(lp, xx)
+        return (xx, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def transformer_forward(cfg: TransformerConfig, params, tokens: jax.Array):
+    """tokens (B, T) → (logits (B, T, V) fp32, aux loss)."""
+    dt = cfg.compute_dtype
+    x = params["embed"][tokens].astype(dt)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    aux = jnp.float32(0.0)
+    if "dense_blocks" in params:
+        x, a = _scan_blocks(cfg, params["dense_blocks"], x, positions, moe=False)
+        aux += a
+    if "moe_blocks" in params:
+        x, a = _scan_blocks(cfg, params["moe_blocks"], x, positions, moe=True)
+        aux += a
+    x = rmsnorm_fwd(params["final_norm"], x)
+    out_w = params["out"] if "out" in params else params["embed"].T
+    logits = jnp.einsum("btd,dv->btv", x, out_w.astype(dt))
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits.astype(jnp.float32), aux
+
+
+def lm_loss(cfg: TransformerConfig, params, batch):
+    """Cross-entropy (+ MoE aux + z-loss). batch: tokens/targets (B, T)."""
+    logits, aux = transformer_forward(cfg, params, batch["tokens"])
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    nll = logz - tgt
+    mask = batch.get("mask")
+    if mask is None:
+        loss = nll.mean()
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zloss = 1e-4 * jnp.mean(logz * logz)
+    return loss + aux + zloss, {"nll": loss, "aux": aux, "zloss": zloss}
+
+
+# --------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+def cache_defs(cfg: TransformerConfig, batch: int, max_len: int, *, big_seq=False):
+    """ParamDef tree for the KV cache (lets the dry-run build abstract caches).
+
+    ``big_seq=True`` shards the cache length over (data×model) — the 500k
+    single-sequence regime where batch parallelism is unavailable.
+    """
+    seq_ax = "cache_seq_mp" if big_seq else "cache_seq"
+    bt_ax = None if big_seq else "batch"
+    cdt = jnp.dtype(cfg.dtype)
+
+    def one(n_layers):
+        if cfg.attention_type == "mla":
+            return {
+                "ckv": ParamDef(
+                    (n_layers, batch, max_len, cfg.kv_lora_rank), cdt,
+                    ("layers", bt_ax, seq_ax, None), "zeros",
+                ),
+                "krope": ParamDef(
+                    (n_layers, batch, max_len, cfg.qk_rope_dim), cdt,
+                    ("layers", bt_ax, seq_ax, None), "zeros",
+                ),
+            }
+        return {
+            "k": ParamDef(
+                (n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), cdt,
+                ("layers", bt_ax, seq_ax, "kv_heads", None), "zeros",
+            ),
+            "v": ParamDef(
+                (n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), cdt,
+                ("layers", bt_ax, seq_ax, "kv_heads", None), "zeros",
+            ),
+        }
+
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.num_layers
+    n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+    out = {}
+    if n_dense:
+        out["dense"] = one(n_dense)
+    if n_moe:
+        out["moe"] = one(n_moe)
+    return out
+
+
+def _attn_decode(cfg, p, x, cache, idx):
+    if cfg.attention_type == "mla":
+        return mla_decode_fwd(cfg, p["attn"], x, cache, idx)
+    return gqa_decode_fwd(cfg, p["attn"], x, cache, idx)
+
+
+def _block_decode(cfg, p, x, cache, idx, moe: bool):
+    h, new_cache = _attn_decode(cfg, p, rmsnorm_fwd(p["attn_norm"], x), cache, idx)
+    x = x + h
+    y_in = rmsnorm_fwd(p["ffn_norm"], x)
+    if moe:
+        y, _ = moe_fwd(cfg, p["moe"], y_in)
+    else:
+        y = ffn_fwd(cfg, p["ffn"], y_in)
+    return x + y, new_cache
+
+
+def _scan_decode(cfg, stacked, cache, x, idx, moe: bool):
+    def body(xx, inputs):
+        lp, lc = inputs
+        xx, nc = _block_decode(cfg, lp, xx, lc, idx, moe)
+        return xx, nc
+
+    x, new_cache = jax.lax.scan(body, x, (stacked, cache))
+    return x, new_cache
+
+
+def decode_step(cfg: TransformerConfig, params, tokens, cache, cache_index):
+    """One decode step. tokens (B,) int32 → (logits (B, V), new cache)."""
+    dt = cfg.compute_dtype
+    x = params["embed"][tokens][:, None, :].astype(dt)  # (B, 1, D)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    new_cache = {}
+    if "dense_blocks" in params:
+        x, new_cache["dense"] = _scan_decode(
+            cfg, params["dense_blocks"], cache["dense"], x, cache_index, moe=False
+        )
+    if "moe_blocks" in params:
+        x, new_cache["moe"] = _scan_decode(
+            cfg, params["moe_blocks"], cache["moe"], x, cache_index, moe=True
+        )
+    x = rmsnorm_fwd(params["final_norm"], x)
+    out_w = params["out"] if "out" in params else params["embed"].T
+    logits = jnp.einsum("btd,dv->btv", x, out_w.astype(dt))[:, 0]
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill_step(cfg: TransformerConfig, params, tokens: jax.Array):
+    """Prompt prefill: (B, T) → last-token logits (B, V).
+
+    (Cache population is a straightforward extension — the dry-run cells
+    lower the compute-dominant pass below; decode_step covers cache reads.)
+    """
+    logits, _ = transformer_forward(cfg, params, tokens)
+    return logits[:, -1]

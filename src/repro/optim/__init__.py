@@ -1,0 +1,10 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_state_defs
+from repro.optim.schedules import warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_defs",
+    "warmup_cosine",
+]

@@ -1,0 +1,145 @@
+"""AdamW with global-norm clipping; optimizer state mirrors param sharding.
+
+State layout: ``{"m": tree, "v": tree, "count": scalar}`` where m/v inherit
+each parameter's ParamDef logical axes — under the FSDP rules (``embed`` →
+``data``; heads/mlp/vocab/expert → ``model``) both the fp32 master moments
+and the params are fully sharded across the 256/512-chip mesh (ZeRO-style),
+which is what makes the 236B config fit 16 GiB chips (see EXPERIMENTS.md
+§Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # memory levers for 100B+ on 16 GiB chips (Adafactor heritage):
+    factored: bool = False  # rank-1 second moment for ndim≥2 params
+    momentum_dtype: str = "float32"  # bf16 halves the m buffer
+
+
+def _factored_shapes(shape):
+    """(row_shape, col_shape) for the rank-1 second-moment factorization."""
+    return shape[:-1], shape[:-2] + shape[-1:]
+
+
+def adamw_init(params, cfg: "AdamWConfig | None" = None):
+    cfg = cfg or AdamWConfig()
+    mdt = jnp.dtype(cfg.momentum_dtype)
+
+    def v_init(p):
+        if cfg.factored and p.ndim >= 2:
+            r, c = _factored_shapes(p.shape)
+            return {
+                "row": jnp.zeros(r, jnp.float32),
+                "col": jnp.zeros(c, jnp.float32),
+            }
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    return {
+        "m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+        "v": jax.tree_util.tree_map(v_init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_defs(param_defs, cfg: "AdamWConfig | None" = None):
+    """ParamDef tree for the optimizer state (dry-run abstract init)."""
+    cfg = cfg or AdamWConfig()
+    mdt = jnp.dtype(cfg.momentum_dtype)
+    isdef = lambda x: isinstance(x, ParamDef)
+
+    def m_def(d):
+        return ParamDef(d.shape, mdt, d.logical_axes, "zeros")
+
+    def v_def(d):
+        if cfg.factored and len(d.shape) >= 2:
+            r, c = _factored_shapes(d.shape)
+            return {
+                "row": ParamDef(r, jnp.float32, d.logical_axes[:-1], "zeros"),
+                "col": ParamDef(
+                    c, jnp.float32, d.logical_axes[:-2] + d.logical_axes[-1:], "zeros"
+                ),
+            }
+        return ParamDef(d.shape, jnp.float32, d.logical_axes, "zeros")
+
+    return {
+        "m": jax.tree_util.tree_map(m_def, param_defs, is_leaf=isdef),
+        "v": jax.tree_util.tree_map(v_def, param_defs, is_leaf=isdef),
+        "count": ParamDef((), jnp.int32, (), "zeros"),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_fn: Optional[Callable] = None):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    from repro.optim.schedules import warmup_cosine
+
+    count = state["count"] + 1
+    if lr_fn is None:
+        lr = warmup_cosine(
+            count, peak_lr=cfg.peak_lr, warmup_steps=cfg.warmup_steps,
+            total_steps=cfg.total_steps,
+        )
+    else:
+        lr = lr_fn(count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+        mhat = m_new / bc1
+        if isinstance(v, dict):  # factored second moment (Adafactor-style)
+            g2 = g * g
+            row = b2 * v["row"] + (1 - b2) * g2.mean(axis=-1)
+            col = b2 * v["col"] + (1 - b2) * g2.mean(axis=-2)
+            r_mean = row.mean(axis=-1, keepdims=True)
+            vhat = (
+                row[..., :, None] * col[..., None, :]
+                / jnp.maximum(r_mean[..., None], 1e-30)
+            ) / bc2
+            v_new = {"row": row, "col": col}
+        else:
+            v_full = b2 * v + (1 - b2) * g * g
+            vhat = v_full / bc2
+            v_new = v_full
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m_new.astype(m.dtype), v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

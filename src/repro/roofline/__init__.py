@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    collective_bytes_from_hlo,
+    roofline_report,
+)
+
+__all__ = ["HW_V5E", "collective_bytes_from_hlo", "roofline_report"]

@@ -1,0 +1,174 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_chip      / peak_FLOP/s          (197 TF bf16)
+    memory     = HLO_bytes_per_chip      / HBM_bw               (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw            (~50 GB/s)
+
+``compiled.cost_analysis()`` is per-device under SPMD (verified empirically:
+flops == global/num_devices), so all terms are per-chip consistently.
+Collective bytes are not in cost_analysis — we parse the optimized
+(post-SPMD-partitioning) HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+HW_V5E = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+    "hbm_bytes": 16 * 1024**3,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-chip collective bytes per type, from the optimized (post-SPMD) HLO.
+
+    The optimized module prints per-device shapes.  We sum the RESULT bytes
+    of each collective (operand refs are untyped in this dump):
+      all-reduce / all-to-all / collective-permute: result == operand size;
+      all-gather: result is the gathered buffer — (g−1)/g of it moves on the
+        wire, ≈ result for realistic group sizes;
+      reduce-scatter: result = operand/g, wire ≈ operand → scale by group
+        size parsed from replica_groups=[g,r].
+    ``*-start``/``*-done`` async pairs are counted once (on the start op).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"=\s*(?P<result>[^=]*?)\s(?P<op>" +
+        "|".join(_COLLECTIVES) + r")(?P<async>-start|-done)?\("
+    )
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = op_re.search(s)
+        if m is None:
+            continue
+        if m.group("async") == "-done":
+            continue
+        base = m.group("op")
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("result")):
+            if dt in _DTYPE_BYTES:
+                total += _shape_bytes(dt, dims)
+        if base == "reduce-scatter":
+            g = _GROUPS_RE.search(s)
+            if g:
+                total *= int(g.group(1))
+        out[base] += total
+        count[base] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    # raw per-chip numbers (XLA counts scan/while bodies ONCE — verified)
+    raw_flops_per_chip: float
+    raw_bytes_per_chip: float
+    raw_collective_bytes_per_chip: float
+    scan_factor: float
+    # scan-corrected per-chip estimates (raw × scan_factor)
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    # the three roofline terms in seconds (corrected)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # analytic (exact) model flops → MFU-at-bound = the perf score
+    model_flops: Optional[float] = None
+    model_compute_s: Optional[float] = None  # MODEL_FLOPS/chips/peak
+    useful_ratio: Optional[float] = None  # MODEL_FLOPS / (HLO_FLOPs × chips)
+    roofline_fraction: Optional[float] = None  # model_compute_s / bound_s
+    collective_detail: Optional[dict] = None
+    memory_stats: Optional[dict] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_report(
+    cost: dict,
+    hlo_text: str,
+    *,
+    num_chips: int,
+    model_flops: Optional[float] = None,
+    scan_factor: float = 1.0,
+    coll_scan_factor: Optional[float] = None,
+    analytic_bytes: Optional[float] = None,
+    hw: dict = HW_V5E,
+    memory_stats: Optional[dict] = None,
+) -> RooflineReport:
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(hlo_text)
+    raw_coll = float(coll["total"])
+
+    flops = raw_flops * scan_factor
+    # LM cells supply an analytic HBM estimate (scan correction would
+    # mis-scale the once-per-step optimizer/logits segments)
+    byts = analytic_bytes if analytic_bytes is not None else raw_bytes * scan_factor
+    csf = scan_factor if coll_scan_factor is None else coll_scan_factor
+    coll_b = raw_coll * csf
+
+    compute_s = flops / hw["peak_flops"]
+    memory_s = byts / hw["hbm_bw"]
+    collective_s = coll_b / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+
+    useful = model_compute_s = frac = None
+    if model_flops:
+        useful = model_flops / max(flops * num_chips, 1.0)
+        model_compute_s = model_flops / num_chips / hw["peak_flops"]
+        frac = model_compute_s / max(bound_s, 1e-30)
+    return RooflineReport(
+        raw_flops_per_chip=raw_flops,
+        raw_bytes_per_chip=raw_bytes,
+        raw_collective_bytes_per_chip=raw_coll,
+        scan_factor=scan_factor,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        collective_bytes_per_chip=coll_b,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        model_compute_s=model_compute_s,
+        useful_ratio=useful,
+        roofline_fraction=frac,
+        collective_detail=coll,
+        memory_stats=memory_stats,
+    )

@@ -1,0 +1,87 @@
+"""Render the §Dry-run / §Roofline markdown tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.roofline.report [--mesh single_pod]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+
+def load(mesh: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def roofline_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS | useful | frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        r = rec["roofline"]
+        mf = r.get("model_flops")
+        useful = r.get("useful_ratio")
+        frac = r.get("roofline_fraction")
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | "
+            f"{mf:.2e} | "
+            f"{'-' if useful is None else format(useful, '.2f')} | "
+            f"{'-' if frac is None else format(frac, '.3f')} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | compile | args/chip | raw flops/chip | raw bytes/chip |"
+        " coll bytes/chip (corr) | collective counts |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        r = rec["roofline"]
+        mem = rec["memory"]
+        counts = r["collective_detail"]["counts"]
+        cshort = ",".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in counts.items() if v)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compile_seconds']}s | "
+            f"{mem.get('argument_bytes', 0)/2**30:.2f}GiB | "
+            f"{r['raw_flops_per_chip']:.2e} | {r['raw_bytes_per_chip']:.2e} | "
+            f"{r['collective_bytes_per_chip']:.2e} | {cshort} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--table", choices=["roofline", "dryrun"], default="roofline")
+    args = ap.parse_args()
+    fn = roofline_table if args.table == "roofline" else dryrun_table
+    print(fn(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.serving.steps import build_decode_step, build_prefill_step
+from repro.serving.scheduler import RequestScheduler
+
+__all__ = ["build_decode_step", "build_prefill_step", "RequestScheduler"]

@@ -1,0 +1,94 @@
+"""Batched request scheduler for decode serving (continuous batching lite).
+
+Maintains a fixed pool of B decode slots over one shared KV cache; incoming
+requests claim free slots, finished sequences (EOS or length cap) release
+them.  The jitted decode step always runs the full (B,) batch with a slot
+mask — static shapes, no recompilation — which is the standard TPU serving
+pattern (orbit/vLLM-style without paging).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list
+    max_new_tokens: int = 32
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class RequestScheduler:
+    def __init__(self, batch_size: int, eos_id: int = 0, max_len: int = 2048):
+        self.batch_size = batch_size
+        self.eos_id = eos_id
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * batch_size
+        self.positions = np.zeros(batch_size, np.int32)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.batch_size):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.positions[i] = 0
+
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots) + len(self.queue)
+
+    def run(self, decode_token_fn: Callable, max_steps: int = 256) -> list:
+        """Drive decode until all requests finish.
+
+        ``decode_token_fn(tokens (B,), positions (B,), mask (B,)) → next (B,)``
+        wraps the jitted per-slot decode (prompt feeding + generation unified
+        as token-at-a-time for simplicity; prefill fast-path is separate).
+        """
+        finished = []
+        for _ in range(max_steps):
+            self._fill_slots()
+            if not any(self.slots):
+                break
+            tokens = np.zeros(self.batch_size, np.int32)
+            mask = np.zeros(self.batch_size, bool)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                pos = self.positions[i]
+                if pos < len(req.prompt):
+                    tokens[i] = req.prompt[pos]
+                elif req.generated:
+                    tokens[i] = req.generated[-1]
+                mask[i] = True
+            nxt = np.asarray(
+                decode_token_fn(
+                    jnp.asarray(tokens), jnp.asarray(self.positions), jnp.asarray(mask)
+                )
+            )
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                self.positions[i] += 1
+                if self.positions[i] >= len(req.prompt):
+                    tok = int(nxt[i])
+                    req.generated.append(tok)
+                    n_new = len(req.generated)
+                    if (
+                        tok == self.eos_id
+                        or n_new >= req.max_new_tokens
+                        or self.positions[i] >= self.max_len - 1
+                    ):
+                        req.done = True
+                        finished.append(req)
+                        self.slots[i] = None
+        return finished

@@ -1,0 +1,26 @@
+"""Serve-step builders (the functions the decode/prefill dry-run cells lower)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def build_decode_step(cfg):
+    from repro.models.transformer import decode_step
+
+    def step(params, tokens, cache, cache_index):
+        logits, new_cache = decode_step(cfg, params, tokens, cache, cache_index)
+        # greedy head (sampling strategies plug in here)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return step
+
+
+def build_prefill_step(cfg):
+    from repro.models.transformer import prefill_step
+
+    def step(params, tokens):
+        return prefill_step(cfg, params, tokens)
+
+    return step

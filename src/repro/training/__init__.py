@@ -1,0 +1,11 @@
+from repro.training.steps import (
+    build_lm_train_step,
+    build_gnn_train_step,
+    build_dlrm_train_step,
+)
+
+__all__ = [
+    "build_lm_train_step",
+    "build_gnn_train_step",
+    "build_dlrm_train_step",
+]

@@ -1,0 +1,9 @@
+from repro.utils.padding import pad_to, pad_to_multiple, round_up
+from repro.utils.pytree import register_static_dataclass
+
+__all__ = [
+    "pad_to",
+    "pad_to_multiple",
+    "round_up",
+    "register_static_dataclass",
+]

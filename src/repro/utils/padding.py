@@ -1,0 +1,34 @@
+"""Static-shape padding helpers.
+
+TPU kernels and pjit'd programs want shapes that are (a) static and (b)
+aligned to hardware tile sizes (multiples of 8 sublanes / 128 lanes).  All
+host-side graph compaction in this repo pads through these helpers so the
+jitted fast path compiles once per padded size class.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Round ``n`` up to the next multiple of ``multiple`` (min ``multiple``)."""
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    return max(multiple, ((n + multiple - 1) // multiple) * multiple)
+
+
+def pad_to(arr: np.ndarray, size: int, fill, axis: int = 0) -> np.ndarray:
+    """Pad ``arr`` along ``axis`` with ``fill`` up to length ``size``."""
+    cur = arr.shape[axis]
+    if cur > size:
+        raise ValueError(f"array length {cur} exceeds pad target {size}")
+    if cur == size:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, size - cur)
+    return np.pad(arr, widths, mode="constant", constant_values=fill)
+
+
+def pad_to_multiple(arr: np.ndarray, multiple: int, fill, axis: int = 0) -> np.ndarray:
+    """Pad ``arr`` along ``axis`` with ``fill`` to a multiple of ``multiple``."""
+    return pad_to(arr, round_up(arr.shape[axis], multiple), fill, axis=axis)

@@ -1,0 +1,29 @@
+"""Pytree registration helpers for dataclasses with static (hashable) fields."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def register_static_dataclass(cls=None, *, meta_fields: tuple = ()):
+    """Register a dataclass as a pytree; ``meta_fields`` are static aux data.
+
+    Usage::
+
+        @register_static_dataclass(meta_fields=("num_vertices",))
+        @dataclasses.dataclass(frozen=True)
+        class EdgeList: ...
+    """
+
+    def wrap(c):
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        return jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+
+    if cls is None:
+        return wrap
+    return wrap(cls)

@@ -1,0 +1,62 @@
+"""Shared test fixtures/utilities.
+
+NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+benches must see the single real CPU device.  Multi-device tests spawn
+subprocesses (see tests/test_dryrun_small.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.structures import build_evolving_graph
+
+
+def make_evolving(
+    num_vertices=64,
+    num_edges=256,
+    num_snapshots=6,
+    batch_size=24,
+    seed=0,
+    readd_prob=0.3,
+):
+    """Small evolving RMAT graph for correctness tests."""
+    src, dst = generate_rmat(num_vertices, num_edges, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    (bs, bd, bw), deltas = generate_evolving_stream(
+        src, dst, w, num_vertices,
+        num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=readd_prob, seed=seed + 2,
+    )
+    return build_evolving_graph(bs, bd, bw, deltas, num_vertices)
+
+
+@pytest.fixture(scope="session")
+def small_evolving():
+    return make_evolving()
+
+
+def reference_fixpoint(src, dst, w, valid, sr, source, num_vertices):
+    """Pure-numpy Bellman-Ford oracle for a path semiring."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = np.asarray(w)
+    valid = np.asarray(valid)
+    vals = np.full(num_vertices, sr.identity, np.float32)
+    vals[source] = np.float32(sr.source)
+    for _ in range(num_vertices + 1):
+        prev = vals.copy()
+        for e in np.flatnonzero(valid):
+            cand = np.float32(sr.extend(np.float32(vals[src[e]]), np.float32(w[e])))
+            if sr.minimize:
+                vals[dst[e]] = min(vals[dst[e]], cand)
+            else:
+                vals[dst[e]] = max(vals[dst[e]], cand)
+        if np.array_equal(prev, vals):
+            break
+    return vals

@@ -1,0 +1,43 @@
+"""All five evaluation strategies must produce identical (S, V) results."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import BASELINES, run_full
+from repro.core.semiring import SEMIRINGS
+from conftest import make_evolving
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+@pytest.mark.parametrize("method", [m for m in BASELINES if m != "full"])
+def test_methods_agree_with_full(name, method):
+    eg = make_evolving(num_vertices=56, num_edges=220, num_snapshots=6, batch_size=24)
+    sr = SEMIRINGS[name]
+    ref, _ = run_full(eg, sr, 0)
+    got, stats = BASELINES[method](eg, sr, 0)
+    np.testing.assert_allclose(got, ref, rtol=1e-6, err_msg=f"{method} != full for {name}")
+    assert stats["method"] == method
+
+
+@pytest.mark.parametrize("seed", [11, 42, 99])
+def test_methods_agree_various_churn(seed):
+    eg = make_evolving(
+        num_vertices=72, num_edges=300, num_snapshots=7, batch_size=40,
+        seed=seed, readd_prob=0.5,
+    )
+    sr = SEMIRINGS["sssp"]
+    ref, _ = run_full(eg, sr, seed % 72)
+    for method in ("kickstarter", "commongraph", "qrs", "cqrs"):
+        got, _ = BASELINES[method](eg, sr, seed % 72)
+        np.testing.assert_allclose(got, ref, rtol=1e-6, err_msg=method)
+
+
+def test_qrs_reduces_edges():
+    """Fig. 9 analog: QRS keeps a small fraction of edges under light churn."""
+    eg = make_evolving(num_vertices=256, num_edges=1500, num_snapshots=8, batch_size=30)
+    sr = SEMIRINGS["sssp"]
+    _, stats = BASELINES["qrs"](eg, sr, 0)
+    assert stats["qrs_edges"] < stats["universe_edges"]
+    assert 0.0 <= stats["frac_edges_kept"] <= 1.0
+    assert stats["frac_uvv"] > 0.3

@@ -1,0 +1,83 @@
+"""Property tests for the paper's Theorems 1 and 2 (hypothesis-driven).
+
+Theorem 1 — bound safety:   lower(v) <= Val_i(v) <= upper(v) for all i.
+Theorem 2 — UVV soundness:  bounds equal  =>  value identical in every
+snapshot (and equal to the bound).
+
+These are the *invariants the whole system rests on*; we fuzz them across
+random evolving graphs, all five semirings, and varied churn rates.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import run_full
+from repro.core.bounds import compute_bounds
+from repro.core.semiring import SEMIRINGS
+from conftest import make_evolving
+
+
+def _check_theorems(eg, name, source=0):
+    sr = SEMIRINGS[name]
+    b = compute_bounds(eg, sr, source)
+    full, _ = run_full(eg, sr, source)  # (S, V) ground truth
+    lower = np.asarray(b.lower)
+    upper = np.asarray(b.upper)
+    uvv = np.asarray(b.uvv)
+
+    # Theorem 1: bounds bracket every snapshot's value (inf-safe comparisons).
+    assert (full >= lower[None, :] - 1e-5).all(), "lower bound violated"
+    assert (full <= upper[None, :] + 1e-5).all(), "upper bound violated"
+
+    # Theorem 2: UVV vertices have identical values across all snapshots,
+    # equal to the bound value.
+    if uvv.any():
+        vals = full[:, uvv]
+        assert np.all(vals == vals[0:1, :]), "UVV vertex value changed"
+        ref = np.asarray(b.val_cap)[uvv]
+        same = (vals[0] == ref) | (np.isinf(vals[0]) & np.isinf(ref))
+        assert same.all(), "UVV value != bound value"
+    return uvv
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+def test_theorems_hold_smoke(name):
+    eg = make_evolving(num_vertices=48, num_edges=200, num_snapshots=5, batch_size=20)
+    uvv = _check_theorems(eg, name)
+    # the paper's premise: most vertices are UVVs under gradual churn
+    assert uvv.mean() > 0.2
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    v=st.integers(16, 80),
+    snaps=st.integers(2, 9),
+    batch=st.integers(2, 40),
+    name=st.sampled_from(sorted(SEMIRINGS)),
+)
+def test_theorems_hold_fuzz(seed, v, snaps, batch, name):
+    eg = make_evolving(
+        num_vertices=v,
+        num_edges=min(4 * v, v * (v - 1) // 2),
+        num_snapshots=snaps,
+        batch_size=batch,
+        seed=seed,
+        readd_prob=0.4,
+    )
+    _check_theorems(eg, name, source=seed % v)
+
+
+def test_uvv_detection_is_accurate():
+    """Fig. 10 analog: detected UVVs should cover most true UVVs."""
+    eg = make_evolving(num_vertices=128, num_edges=600, num_snapshots=8, batch_size=30)
+    sr = SEMIRINGS["sssp"]
+    full, _ = run_full(eg, sr, 0)
+    true_uvv = np.all(full == full[0:1, :], axis=0)
+    detected = np.asarray(compute_bounds(eg, sr, 0).uvv)
+    # safety: every detected UVV is a true UVV
+    assert (~detected | true_uvv).all()
+    # effectiveness: detect the large majority (paper: "nearly all")
+    assert detected.sum() >= 0.8 * true_uvv.sum()

@@ -1,0 +1,67 @@
+"""Engine correctness: fixpoint vs pure-numpy Bellman-Ford oracle."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import compute_fixpoint, compute_parents
+from repro.core.semiring import SEMIRINGS, viterbi_weights
+from repro.graph.generators import generate_rmat, generate_uniform_weights
+from repro.graph.structures import EdgeList
+
+from conftest import reference_fixpoint
+
+
+def _random_graph(v=48, e=160, seed=0):
+    src, dst = generate_rmat(v, e, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return EdgeList.from_numpy(src, dst, w, v)
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+@pytest.mark.parametrize("seed", [0, 7])
+def test_fixpoint_matches_oracle(name, seed):
+    sr = SEMIRINGS[name]
+    el = _random_graph(seed=seed)
+    w = el.weight
+    if name == "viterbi":
+        w = viterbi_weights(w)
+    vals, iters = compute_fixpoint(
+        el.src, el.dst, w, el.valid, sr, jnp.int32(0), el.num_vertices
+    )
+    ref = reference_fixpoint(el.src, el.dst, w, el.valid, sr, 0, el.num_vertices)
+    np.testing.assert_allclose(np.asarray(vals), ref, rtol=1e-6)
+    assert int(iters) <= el.num_vertices + 1
+
+
+def test_source_value_pinned():
+    sr = SEMIRINGS["sssp"]
+    el = _random_graph(seed=3)
+    vals, _ = compute_fixpoint(
+        el.src, el.dst, el.weight, el.valid, sr, jnp.int32(5), el.num_vertices
+    )
+    assert float(vals[5]) == 0.0
+
+
+def test_parents_are_achieving_edges():
+    sr = SEMIRINGS["sssp"]
+    el = _random_graph(seed=1)
+    vals, _ = compute_fixpoint(
+        el.src, el.dst, el.weight, el.valid, sr, jnp.int32(0), el.num_vertices
+    )
+    parent = compute_parents(
+        vals, el.src, el.dst, el.weight, el.valid, sr, jnp.int32(0), el.num_vertices
+    )
+    vals_np, parent_np = np.asarray(vals), np.asarray(parent)
+    src_np, dst_np, w_np = np.asarray(el.src), np.asarray(el.dst), np.asarray(el.weight)
+    for v in range(el.num_vertices):
+        p = parent_np[v]
+        if p < 0:
+            continue
+        assert dst_np[p] == v
+        assert np.isclose(vals_np[src_np[p]] + w_np[p], vals_np[v])
+    # source + unreached vertices have no parent
+    assert parent_np[0] == -1
+    unreached = ~np.isfinite(vals_np)
+    assert (parent_np[unreached] == -1).all()

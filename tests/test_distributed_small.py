@@ -1,0 +1,39 @@
+"""Multi-device (8 host devices) shard_map/pjit tests via subprocess.
+
+Subprocesses are required because xla_force_host_platform_device_count must
+be set before jax initializes — the main pytest process keeps 1 device.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_distributed_checks.py")
+
+
+def _run(check: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep
+        + os.path.dirname(__file__)
+    )
+    out = subprocess.run(
+        [sys.executable, SCRIPT, check],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert out.returncode == 0, f"{check} failed:\n{out.stdout}\n{out.stderr}"
+    assert "CHECK_OK" in out.stdout
+
+
+@pytest.mark.parametrize(
+    "check",
+    ["evolve", "compressed_psum", "pipeline", "dlrm_sharded_lookup",
+     "lm_spmd_step", "elastic_checkpoint", "folded_evolve"],
+)
+def test_distributed(check):
+    _run(check)

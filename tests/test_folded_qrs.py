@@ -1,0 +1,58 @@
+"""Beyond-paper folded-CQRS (§Perf A): correctness + reduction properties."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import BASELINES, _prepare_qrs
+from repro.core.qrs import fold_qrs
+from repro.core.semiring import SEMIRINGS
+from conftest import make_evolving
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+def test_folded_cqrs_matches_full(name):
+    eg = make_evolving(num_vertices=64, num_edges=256, num_snapshots=6, batch_size=24)
+    sr = SEMIRINGS[name]
+    ref, _ = BASELINES["full"](eg, sr, 0)
+    got, stats = BASELINES["cqrs_folded"](eg, sr, 0)
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+    assert stats["num_active"] <= eg.num_vertices
+    assert stats["active_edges"] <= stats["qrs_edges"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    snaps=st.integers(2, 8),
+    name=st.sampled_from(sorted(SEMIRINGS)),
+)
+def test_folded_cqrs_fuzz(seed, snaps, name):
+    eg = make_evolving(num_vertices=48, num_edges=200, num_snapshots=snaps,
+                       batch_size=20, seed=seed, readd_prob=0.4)
+    sr = SEMIRINGS[name]
+    ref, _ = BASELINES["full"](eg, sr, seed % 48)
+    got, _ = BASELINES["cqrs_folded"](eg, sr, seed % 48)
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_fold_reduces_iterated_work():
+    """The active subgraph must be strictly smaller than the QRS whenever
+    UVVs exist with outgoing edges (the common case)."""
+    eg = make_evolving(num_vertices=256, num_edges=1500, num_snapshots=8,
+                       batch_size=30)
+    sr = SEMIRINGS["sssp"]
+    _, qrs = _prepare_qrs(eg, sr, 0)
+    folded = fold_qrs(qrs, sr)
+    sd = folded.stats_dict
+    assert sd["folded_edges"] > 0
+    assert sd["active_edges"] + sd["folded_edges"] == sd["qrs_edges"]
+    assert sd["frac_active_vertices"] < 1.0
+    # expansion covers every vertex exactly once
+    import numpy as np
+    ids = np.asarray(folded.active_ids)
+    real = ids[ids >= 0]
+    assert len(np.unique(real)) == len(real)
+    uvv = np.asarray(folded.uvv)
+    assert len(real) + uvv.sum() == eg.num_vertices

@@ -1,0 +1,85 @@
+"""embedding_bag + ell_agg + flash_attention kernels vs oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.ell_agg.ops import ell_multi_aggregate
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ---------------------------------------------------------------- embedding
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("b,l,n,f", [(8, 16, 100, 128), (5, 7, 33, 48), (16, 64, 1000, 128)])
+def test_embedding_bag_matches_ref(mode, b, l, n, f):
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, (b, l)).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(b, l)).astype(np.float32))
+    valid = jnp.asarray(rng.random((b, l)) > 0.2)
+    got = embedding_bag(table, idx, w, valid, mode, use_kernel=True, interpret=True)
+    ref = embedding_bag_ref(table, idx, w, valid, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 20), l=st.integers(1, 40))
+def test_embedding_bag_fuzz(seed, b, l):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 64, (b, l)).astype(np.int32))
+    got = embedding_bag(table, idx, use_kernel=True, interpret=True)
+    ref = embedding_bag_ref(table, idx, jnp.ones((b, l)), jnp.ones((b, l), bool))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- ell_agg
+@pytest.mark.parametrize("r,d,f", [(8, 16, 128), (24, 8, 128), (10, 5, 70)])
+def test_ell_agg_matches_ref(r, d, f):
+    rng = np.random.default_rng(1)
+    feats = jnp.asarray(rng.normal(size=(r, d, f)).astype(np.float32))
+    valid = jnp.asarray(rng.random((r, d)) > 0.3)
+    got = ell_multi_aggregate(feats, valid, use_kernel=True, interpret=True)
+    ref = ell_multi_aggregate(feats, valid, use_kernel=False)
+    for g, rf, nm in zip(got, ref, ("mean", "std", "max", "min")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(rf), rtol=2e-5, atol=1e-5, err_msg=nm)
+
+
+def test_ell_agg_empty_rows_zero():
+    feats = jnp.ones((8, 4, 128), jnp.float32)
+    valid = jnp.zeros((8, 4), bool)
+    for out in ell_multi_aggregate(feats, valid, use_kernel=True, interpret=True):
+        np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,tq,tk,d", [(1, 2, 128, 128, 64), (2, 1, 256, 384, 128)])
+def test_flash_attention_matches_ref(causal, b, h, tq, tk, d):
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(b, h, tq, d)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.normal(size=(b, h, tk, d)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, h, tk, d)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, use_kernel=True, interpret=True)
+    ref = flash_attention(q, k, v, causal=causal, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16) * 0.3
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16) * 0.3
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, use_kernel=True, interpret=True)
+    ref = attention_ref(
+        q.reshape(2, 128, 64), k.reshape(2, 128, 64), v.reshape(2, 128, 64), causal=True
+    ).reshape(1, 2, 128, 64)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2
+    )

@@ -1,0 +1,56 @@
+"""MoE dispatch correctness: grouped vs global, capacity behavior."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import TransformerConfig, moe_defs, moe_fwd
+from repro.models.params import init_params
+
+BASE = TransformerConfig(
+    name="moe-test", num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+    head_dim=16, d_ff=64, vocab_size=64, moe=True, num_experts=8,
+    num_shared_experts=0, top_k=2, moe_d_ff=16,
+    capacity_factor=8.0,  # high: no drops → groupings must agree exactly
+)
+
+
+def test_grouped_dispatch_matches_global():
+    params = init_params(moe_defs(BASE), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.bfloat16)
+    y1, aux1 = moe_fwd(BASE, params, x)
+    for g in (2, 4):
+        cfg = dataclasses.replace(BASE, moe_groups=g)
+        yg, auxg = moe_fwd(cfg, params, x)
+        np.testing.assert_allclose(
+            np.asarray(y1, np.float32), np.asarray(yg, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+        np.testing.assert_allclose(float(aux1), float(auxg), rtol=1e-5)
+
+
+def test_capacity_drops_tokens():
+    cfg = dataclasses.replace(BASE, capacity_factor=0.25)
+    params = init_params(moe_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.bfloat16)
+    y, _ = moe_fwd(cfg, params, x)  # must run and stay finite with drops
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+
+
+def test_moe_grad_flows_through_grouped_dispatch():
+    cfg = dataclasses.replace(BASE, moe_groups=4)
+    params = init_params(moe_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.bfloat16)
+
+    def loss(p):
+        y, aux = moe_fwd(cfg, p, x)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+    # router must receive gradient via the aux loss
+    assert float(jnp.abs(g["router"]).sum()) > 0

@@ -1,0 +1,134 @@
+"""Unit coverage: padding, presence bitmasks, token pipeline, HLO parser,
+ELL packing, sampler, schedules."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import TokenPipeline
+from repro.graph.ell import pack_ell
+from repro.graph.sampler import NeighborSampler
+from repro.graph.structures import CSR, pack_presence, unpack_presence
+from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.utils.padding import pad_to, pad_to_multiple, round_up
+
+
+# ---------------------------------------------------------------- padding
+def test_round_up():
+    assert round_up(1, 128) == 128
+    assert round_up(128, 128) == 128
+    assert round_up(129, 128) == 256
+    with pytest.raises(ValueError):
+        round_up(5, 0)
+
+
+def test_pad_to_rejects_shrink():
+    with pytest.raises(ValueError):
+        pad_to(np.zeros(10), 5, 0)
+
+
+# ---------------------------------------------------------------- presence
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 70), e=st.integers(1, 50), seed=st.integers(0, 1000))
+def test_presence_pack_unpack_roundtrip(s, e, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((s, e)) < 0.5
+    packed = pack_presence(dense)
+    assert packed.shape == (e, (s + 31) // 32)
+    back = np.asarray(unpack_presence(jnp.asarray(packed), s))
+    np.testing.assert_array_equal(back, dense)
+
+
+# ---------------------------------------------------------------- pipeline
+def test_token_pipeline_deterministic_restart():
+    p1 = TokenPipeline(batch=8, seq=16, vocab=100, seed=3)
+    batches = [p1.next() for _ in range(5)]
+    state = p1.state()
+    after = [p1.next() for _ in range(3)]
+    p2 = TokenPipeline(batch=8, seq=16, vocab=100, seed=0)
+    p2.restore(state)
+    replay = [p2.next() for _ in range(3)]
+    for a, b in zip(after, replay):
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_token_pipeline_shards_disjoint_content():
+    a = TokenPipeline(batch=8, seq=16, vocab=1000, shard_id=0, num_shards=2).next()
+    b = TokenPipeline(batch=8, seq=16, vocab=1000, shard_id=1, num_shards=2).next()
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+# ---------------------------------------------------------------- roofline
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+  %all-gather.1 = f32[64,128]{1,0} all-gather(%p0), replica_groups=[4,2]<=[8]
+  %all-reduce.2 = bf16[32]{0} all-reduce(%p1), replica_groups=[8,1]<=[8]
+  %rs = f32[16,8]{1,0} reduce-scatter(%p2), replica_groups=[4,2]<=[8], dimensions={0}
+  %ar-start = f32[10]{0} all-reduce-start(%p3), replica_groups=[2,4]<=[8]
+  %ar-done = f32[10]{0} all-reduce-done(%ar-start)
+  %noise = f32[100]{0} add(%a, %b)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 64 * 128 * 4
+    assert out["all-reduce"] == 32 * 2 + 10 * 4  # bf16 + the -start (done skipped)
+    assert out["reduce-scatter"] == 16 * 8 * 4 * 4  # scaled by group size 4
+    assert out["counts"]["all-reduce"] == 2
+
+
+# ---------------------------------------------------------------- ELL
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), v=st.integers(2, 40), e=st.integers(1, 120))
+def test_ell_pack_preserves_edges(seed, v, e):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    w = rng.random(e).astype(np.float32)
+    ell = pack_ell(src, dst, w, v, slot_width=8, row_align=4)
+    # every (src, dst, w) triple appears exactly once in the packing
+    got = []
+    sv = np.asarray(ell.slot_valid)
+    es = np.asarray(ell.src)
+    ew = np.asarray(ell.weight)
+    r2v = np.asarray(ell.row2vertex)
+    for r in range(ell.num_rows):
+        for c in range(8):
+            if sv[r, c]:
+                got.append((es[r, c], r2v[r], ew[r, c]))
+    want = sorted(zip(src.tolist(), dst.tolist(), w.tolist()))
+    assert sorted(got) == [(int(s), int(d), float(x)) for s, d, x in want]
+
+
+# ---------------------------------------------------------------- sampler
+def test_sampler_respects_adjacency():
+    rng = np.random.default_rng(0)
+    v, e = 50, 400
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    csr = CSR.from_edges(src, dst, np.ones(e, np.float32), v)
+    sampler = NeighborSampler(csr, fanouts=(5,))
+    seeds = jnp.arange(10, dtype=jnp.int32)
+    blocks = sampler.sample(jax.random.PRNGKey(0), seeds)
+    adj = {}
+    for s, d in zip(src.tolist(), dst.tolist()):
+        adj.setdefault(s, set()).add(d)
+    nbrs = np.asarray(blocks.neighbors[0]).reshape(10, 5)
+    valid = np.asarray(blocks.valid[0]).reshape(10, 5)
+    for i, seed in enumerate(range(10)):
+        for j in range(5):
+            if valid[i, j]:
+                assert int(nbrs[i, j]) in adj.get(seed, set())
+            else:
+                assert seed not in adj  # degree-0 seeds only
+
+
+# ---------------------------------------------------------------- schedules
+def test_lr_monotone_phases():
+    from repro.optim.schedules import warmup_cosine
+
+    xs = [float(warmup_cosine(s, peak_lr=2.0, warmup_steps=5, total_steps=50))
+          for s in range(50)]
+    assert all(b >= a for a, b in zip(xs[:5], xs[1:6]))  # warmup rises
+    assert all(b <= a + 1e-9 for a, b in zip(xs[5:-1], xs[6:]))  # cosine falls
