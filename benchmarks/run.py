@@ -6,9 +6,10 @@
   fig12a   — sensitivity to number of snapshots         (paper Figure 12a)
   fig12b   — sensitivity to update-batch size           (paper Figure 12b)
   kernels  — vrelax / embedding_bag / ell_agg / flash-attn op timings
+  multiq   — batched (Q×S×V) multi-source CQRS vs a Q-loop of single-source
   roofline — summary of dry-run-derived roofline terms (if present)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--out CSV]
 """
 from __future__ import annotations
 
@@ -140,6 +141,51 @@ def bench_kernels(fast: bool):
     emit("kernels/attention_xla", us, "T=512,H=4,d=64")
 
 
+# ---------------------------------------------------------------- multiq
+def bench_multiq(fast: bool):
+    """Batched multi-source CQRS vs the Q-loop of single-source CQRS.
+
+    Correctness is asserted per query against the kickstarter baseline;
+    ``speedup_vs_loop`` is the headline number (batching amortizes bounds
+    launches, the shared-QRS compaction, and the concurrent fixpoint).
+    """
+    from repro.core.baselines import run_cqrs, run_cqrs_batch, run_kickstarter
+    from repro.core.semiring import SEMIRINGS
+
+    q = 8
+    scale = dict(num_vertices=4096, num_edges=32768, num_snapshots=8, batch_size=400) \
+        if fast else dict(num_vertices=8192, num_edges=65536, num_snapshots=16, batch_size=600)
+    eg = make_benchmark_graph(**scale)
+    rng = np.random.default_rng(13)
+    sources = sorted(int(s) for s in rng.choice(eg.num_vertices, size=q, replace=False))
+
+    for query in (["sssp"] if fast else ["bfs", "sssp", "sswp"]):
+        sr = SEMIRINGS[query]
+        # per-query kickstarter ground truth
+        refs = [run_kickstarter(eg, sr, s)[0] for s in sources]
+
+        run_cqrs(eg, sr, sources[0])  # warmup/compile the single-source path
+        t0 = time.perf_counter()
+        loop_res = [run_cqrs(eg, sr, s)[0] for s in sources]
+        t_loop = time.perf_counter() - t0
+        for s, res, ref in zip(sources, loop_res, refs):
+            assert np.allclose(res, ref), f"loop cqrs mismatch vs kickstarter (src={s})"
+        emit(f"multiq/{query}/q{q}_loop", t_loop * 1e6,
+             f"queries_per_s={q / t_loop:.1f}")
+
+        run_cqrs_batch(eg, sr, sources)  # warmup/compile the batched path
+        t0 = time.perf_counter()
+        batch_res, stats = run_cqrs_batch(eg, sr, sources)
+        t_batch = time.perf_counter() - t0
+        for i, (s, ref) in enumerate(zip(sources, refs)):
+            assert np.allclose(batch_res[i], ref), \
+                f"batched cqrs mismatch vs kickstarter (src={s})"
+        emit(f"multiq/{query}/q{q}_batched", t_batch * 1e6,
+             f"speedup_vs_loop={t_loop / t_batch:.2f}x;"
+             f"queries_per_s={q / t_batch:.1f};"
+             f"qrs_edges={stats['qrs_edges']}")
+
+
 # ---------------------------------------------------------------- roofline
 def bench_roofline_summary(fast: bool):
     pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
@@ -164,12 +210,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=None, help="also write the CSV to this path")
     args = ap.parse_args()
     benches = {
         "table4": bench_table4,
         "fig9_10": bench_fig9_10,
         "fig12": bench_fig12,
         "kernels": bench_kernels,
+        "multiq": bench_multiq,
         "roofline": bench_roofline_summary,
     }
     print("name,us_per_call,derived")
@@ -177,6 +225,11 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         fn(args.fast)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write("name,us_per_call,derived\n")
+            for name, us, derived in ROWS:
+                fh.write(f"{name},{us:.1f},{derived}\n")
 
 
 if __name__ == "__main__":

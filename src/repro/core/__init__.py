@@ -1,9 +1,15 @@
 from repro.core.semiring import Semiring, SEMIRINGS, get_semiring
 from repro.core.engine import compute_fixpoint, incremental_fixpoint, compute_parents
-from repro.core.bounds import compute_bounds, detect_uvv, BoundsResult
-from repro.core.qrs import build_qrs, QRS
-from repro.core.concurrent import concurrent_fixpoint
-from repro.core.api import EvolvingQuery, evaluate_evolving_query
+from repro.core.bounds import (
+    compute_bounds,
+    compute_bounds_batch,
+    detect_uvv,
+    BoundsResult,
+    BatchBoundsResult,
+)
+from repro.core.qrs import build_qrs, build_qrs_shared, QRS, SharedQRS
+from repro.core.concurrent import concurrent_fixpoint, concurrent_fixpoint_batch
+from repro.core.api import EvolvingQuery, MultiQuery, evaluate_evolving_query
 
 __all__ = [
     "Semiring",
@@ -13,11 +19,17 @@ __all__ = [
     "incremental_fixpoint",
     "compute_parents",
     "compute_bounds",
+    "compute_bounds_batch",
     "detect_uvv",
     "BoundsResult",
+    "BatchBoundsResult",
     "build_qrs",
+    "build_qrs_shared",
     "QRS",
+    "SharedQRS",
     "concurrent_fixpoint",
+    "concurrent_fixpoint_batch",
     "EvolvingQuery",
+    "MultiQuery",
     "evaluate_evolving_query",
 ]

@@ -88,3 +88,45 @@ def concurrent_fixpoint(
         cond, body, (values0, jnp.bool_(True), jnp.int32(0))
     )
     return values, iters
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters")
+)
+def concurrent_fixpoint_batch(
+    bootstrap: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    presence: jax.Array,
+    valid: jax.Array,
+    sr: Semiring,
+    num_vertices: int,
+    num_snapshots: int,
+    max_iters: Optional[int] = None,
+):
+    """Batched multi-query relaxation: value state ``(Q, S, V)``.
+
+    A vmap of :func:`concurrent_fixpoint` over the query axis: one superstep
+    relaxes every (query × snapshot × edge) triple over a *shared* QRS edge
+    set, with the per-snapshot presence bit-test unchanged (the graph-resident
+    inputs are closed over, so the ``(S, E)`` mask is built once and broadcast
+    across queries).  The lockstep ``while_loop`` runs until the slowest query
+    converges — monotone relaxation makes the extra supersteps for
+    already-converged queries no-ops — so ``iters`` is the max over the batch.
+
+    Args:
+      bootstrap: ``(Q, V)`` per-query R∩ values (broadcast over snapshots),
+        or ``(Q, S, V)`` per-(query, snapshot) initial state.
+      src/dst/weight/valid: shared compacted QRS edge arrays ``(E',)``.
+      presence: ``(E', W) uint32`` snapshot bitmask.
+    Returns:
+      ``(values (Q, S, V), iters)``.
+    """
+    values, iters = jax.vmap(
+        lambda b: concurrent_fixpoint(
+            b, src, dst, weight, presence, valid, sr, num_vertices,
+            num_snapshots, max_iters,
+        )
+    )(bootstrap)
+    return values, iters.max()

@@ -60,8 +60,16 @@ def build_qrs(
     sr: Semiring,
     *,
     align: int = PAD_ALIGN,
-) -> QRS:
-    """Compact the versioned universe down to the Q-Relevant Subgraph."""
+):
+    """Compact the versioned universe down to the Q-Relevant Subgraph.
+
+    Shared-QRS mode: passing a ``(Q, V)`` UVV mask and ``(Q, V)`` bootstrap
+    (from :func:`~repro.core.bounds.compute_bounds_batch`) builds one
+    :class:`SharedQRS` over the union of the per-query non-UVV frontiers, so
+    Q queries reuse a single compacted edge set.
+    """
+    if np.ndim(uvv) == 2:
+        return build_qrs_shared(eg, uvv, bootstrap, sr, align=align)
     uvv_np = np.asarray(uvv)
     src = np.asarray(eg.src)
     dst = np.asarray(eg.dst)
@@ -107,6 +115,112 @@ def build_qrs(
         bootstrap=bootstrap,
         num_vertices=eg.num_vertices,
         num_snapshots=eg.num_snapshots,
+        stats=stats,
+    )
+
+
+# ==========================================================================
+# Shared QRS: one compacted edge set serving a batch of Q queries
+# ==========================================================================
+@register_static_dataclass(
+    meta_fields=("num_vertices", "num_snapshots", "num_queries", "stats")
+)
+@dataclasses.dataclass(frozen=True)
+class SharedQRS:
+    """QRS over the union of Q queries' non-UVV frontiers.
+
+    An edge is dropped only when its sink is UVV for *every* query in the
+    batch, so each query's per-query QRS is a subset of this edge set.
+    Theorem 2 stays intact per query: every non-UVV vertex of every query
+    keeps all its union-graph in-edges, and the extra edges (sinking at a
+    vertex that is UVV for query q but not for q') are harmless for q —
+    monotone relaxation from q's feasible R∩ bootstrap can never push a UVV
+    vertex past its exact (constant) value.
+    """
+
+    src: jax.Array  # (E',) int32, dst-sorted, padded
+    dst: jax.Array  # (E',) int32
+    weight: jax.Array  # (E',) float32
+    presence: jax.Array  # (E', W) uint32 snapshot bitmask
+    always: jax.Array  # (E',) bool — present in all snapshots
+    valid: jax.Array  # (E',) bool — real (non-padding) edge
+    uvv: jax.Array  # (Q, V) bool — per-query Theorem-2 masks
+    bootstrap: jax.Array  # (Q, V) float32 — per-query R∩ values
+    num_vertices: int
+    num_snapshots: int
+    num_queries: int
+    stats: tuple
+
+    @property
+    def stats_dict(self) -> dict:
+        return dict(self.stats)
+
+    def snapshot_valid(self, i: int) -> jax.Array:
+        word, bit = divmod(int(i), 32)
+        present = (self.presence[:, word] >> np.uint32(bit)) & np.uint32(1)
+        return present.astype(bool) & self.valid
+
+
+def build_qrs_shared(
+    eg: EvolvingGraph,
+    uvv: jax.Array,  # (Q, V) bool
+    bootstrap: jax.Array,  # (Q, V) float32
+    sr: Semiring,
+    *,
+    align: int = PAD_ALIGN,
+) -> SharedQRS:
+    """One compacted augmented subgraph for a batch of Q queries.
+
+    Same Algorithm-1 sink rule as :func:`build_qrs`, but an edge survives if
+    its sink is non-UVV for *any* query (union of frontiers).  Compaction —
+    the host-side gather/pad that dominates QRS generation time — happens
+    once per batch instead of once per query.
+    """
+    uvv_q = np.asarray(uvv)
+    if uvv_q.ndim != 2:
+        raise ValueError(f"expected (Q, V) uvv mask, got shape {uvv_q.shape}")
+    src = np.asarray(eg.src)
+    dst = np.asarray(eg.dst)
+    presence = np.asarray(eg.presence)
+    pop = np.asarray(eg.popcount())
+    union_valid = pop > 0
+
+    all_uvv = uvv_q.all(axis=0)  # (V,) — UVV for every query in the batch
+    keep = union_valid & ~all_uvv[dst]
+    idx = np.flatnonzero(keep)
+
+    w = np.asarray(sr.intersection_weight(eg.weight_min, eg.weight_max))
+    k_always = pop[idx] == eg.num_snapshots
+    k_valid = np.ones(idx.shape[0], bool)
+
+    stats = (
+        ("num_vertices", int(eg.num_vertices)),
+        ("num_snapshots", int(eg.num_snapshots)),
+        ("num_queries", int(uvv_q.shape[0])),
+        ("universe_edges", int(union_valid.sum())),
+        ("intersection_edges", int((pop == eg.num_snapshots).sum())),
+        ("qrs_edges", int(idx.shape[0])),
+        ("num_uvv_shared", int(all_uvv.sum())),
+        ("frac_uvv_shared", float(all_uvv.mean())),
+        ("frac_uvv_per_query", tuple(float(f) for f in uvv_q.mean(axis=1))),
+        (
+            "frac_edges_kept",
+            float(idx.shape[0]) / max(1, int(union_valid.sum())),
+        ),
+    )
+
+    return SharedQRS(
+        src=jnp.asarray(pad_to_multiple(src[idx], align, 0)),
+        dst=jnp.asarray(pad_to_multiple(dst[idx], align, 0)),
+        weight=jnp.asarray(pad_to_multiple(w[idx], align, 0.0)),
+        presence=jnp.asarray(pad_to_multiple(presence[idx], align, 0, axis=0)),
+        always=jnp.asarray(pad_to_multiple(k_always, align, False)),
+        valid=jnp.asarray(pad_to_multiple(k_valid, align, False)),
+        uvv=jnp.asarray(uvv_q),
+        bootstrap=jnp.asarray(bootstrap),
+        num_vertices=eg.num_vertices,
+        num_snapshots=eg.num_snapshots,
+        num_queries=int(uvv_q.shape[0]),
         stats=stats,
     )
 

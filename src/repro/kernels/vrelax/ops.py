@@ -35,6 +35,25 @@ def build_presence_ell(presence: jax.Array, ell: EllPack) -> jax.Array:
     return jnp.asarray(out)
 
 
+def tile_presence_words(
+    presence: np.ndarray, num_snapshots: int, num_queries: int
+) -> np.ndarray:
+    """Repack per-edge presence words for a flattened Q·S snapshot axis.
+
+    The batched ELL path folds Q queries into the kernel's snapshot axis
+    (combined index ``t = q * S + s``); bit ``t`` of the repacked words must
+    equal bit ``s`` of the originals.  Host-side, once per batch — the kernel
+    and its word-sharing BlockSpec stay unchanged.
+    """
+    from repro.graph.structures import pack_presence
+
+    pres = np.asarray(presence)
+    snaps = np.arange(num_snapshots, dtype=np.uint32)
+    words = pres[:, (snaps // 32).astype(np.int64)]  # (E, S)
+    dense = ((words >> (snaps % 32)[None, :]) & 1).astype(bool).T  # (S, E)
+    return pack_presence(np.tile(dense, (num_queries, 1)))  # (E, ceil(QS/32))
+
+
 def vrelax_partial(
     values: jax.Array,  # (S, V)
     ell: EllPack,
@@ -61,7 +80,7 @@ def vrelax_partial(
     static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters", "interpret"),
 )
 def concurrent_fixpoint_ell(
-    bootstrap: jax.Array,  # (V,)
+    bootstrap: jax.Array,  # (V,) or (S, V)
     ell: EllPack,
     presence_ell: jax.Array,  # (R, D, W)
     sr: Semiring,
@@ -70,8 +89,16 @@ def concurrent_fixpoint_ell(
     max_iters: Optional[int] = None,
     interpret: bool = True,
 ):
-    """Kernel-backed concurrent evaluation of all snapshots. → ((S,V), iters)."""
-    values0 = jnp.broadcast_to(bootstrap[None, :], (num_snapshots, num_vertices))
+    """Kernel-backed concurrent evaluation of all snapshots. → ((S,V), iters).
+
+    ``bootstrap`` may be ``(V,)`` (broadcast over snapshots) or ``(S, V)``
+    (per-snapshot initial state — the folded-QRS and Q·S-flattened batched
+    paths).
+    """
+    if bootstrap.ndim == 2:
+        values0 = bootstrap
+    else:
+        values0 = jnp.broadcast_to(bootstrap[None, :], (num_snapshots, num_vertices))
     limit = num_vertices + 1 if max_iters is None else max_iters
     row2vertex = ell.row2vertex
 
@@ -102,3 +129,32 @@ def concurrent_fixpoint_ell(
         cond, body, (values0, jnp.bool_(True), jnp.int32(0))
     )
     return values, iters
+
+
+def concurrent_fixpoint_ell_batch(
+    bootstrap: jax.Array,  # (Q, V) per-query R∩ values
+    ell: EllPack,
+    presence_ell_qs: jax.Array,  # (R, D, W') words repacked for the Q·S axis
+    sr: Semiring,
+    num_vertices: int,
+    num_snapshots: int,
+    num_queries: int,
+    max_iters: Optional[int] = None,
+    interpret: bool = True,
+):
+    """Kernel-backed batched evaluation: (Q, S, V) state through one kernel.
+
+    Folds the query axis into the kernel's snapshot axis (combined index
+    ``q * S + s``): the value state becomes ``(Q·S, V)`` and the presence
+    words — repacked once host-side by :func:`tile_presence_words` — carry
+    the same per-snapshot bit for every query.  One superstep then relaxes
+    every (query × snapshot × edge) triple with the per-snapshot presence
+    bit-test unchanged, and the ELL gather/reduce is amortized across the
+    whole batch.  → ``(values (Q, S, V), iters)``.
+    """
+    values0 = jnp.repeat(bootstrap, num_snapshots, axis=0)  # (Q·S, V)
+    values, iters = concurrent_fixpoint_ell(
+        values0, ell, presence_ell_qs, sr, num_vertices,
+        num_queries * num_snapshots, max_iters, interpret,
+    )
+    return values.reshape(num_queries, num_snapshots, num_vertices), iters

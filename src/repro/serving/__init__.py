@@ -1,4 +1,10 @@
 from repro.serving.steps import build_decode_step, build_prefill_step
-from repro.serving.scheduler import RequestScheduler
+from repro.serving.scheduler import QueryBatcher, QueryRequest, RequestScheduler
 
-__all__ = ["build_decode_step", "build_prefill_step", "RequestScheduler"]
+__all__ = [
+    "build_decode_step",
+    "build_prefill_step",
+    "RequestScheduler",
+    "QueryBatcher",
+    "QueryRequest",
+]

@@ -1,16 +1,23 @@
-"""Batched request scheduler for decode serving (continuous batching lite).
+"""Batched request schedulers: LM decode slots + evolving-graph query batching.
 
-Maintains a fixed pool of B decode slots over one shared KV cache; incoming
-requests claim free slots, finished sequences (EOS or length cap) release
-them.  The jitted decode step always runs the full (B,) batch with a slot
-mask — static shapes, no recompilation — which is the standard TPU serving
-pattern (orbit/vLLM-style without paging).
+``RequestScheduler`` maintains a fixed pool of B decode slots over one shared
+KV cache; incoming requests claim free slots, finished sequences (EOS or
+length cap) release them.  The jitted decode step always runs the full (B,)
+batch with a slot mask — static shapes, no recompilation — which is the
+standard TPU serving pattern (orbit/vLLM-style without paging).
+
+``QueryBatcher`` applies the same coalescing idea to vertex queries: incoming
+:class:`~repro.core.api.EvolvingQuery`-shaped requests that share a graph
+window and semiring are grouped and launched as one Q×S×V CQRS batch
+(``repro.core.baselines.run_cqrs_batch``), amortizing bounds, shared-QRS
+compaction, and the concurrent fixpoint across the group.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -92,3 +99,108 @@ class RequestScheduler:
                         finished.append(req)
                         self.slots[i] = None
         return finished
+
+
+# ==========================================================================
+# Evolving-graph query batching (Q×S×V CQRS serving front-end)
+# ==========================================================================
+@dataclasses.dataclass
+class QueryRequest:
+    """One vertex-specific query awaiting a batched launch."""
+
+    uid: int
+    graph: object  # EvolvingGraph
+    query: str  # semiring name
+    source: int
+    snapshots: Optional[tuple] = None  # sub-window, None = full window
+    result: Optional[np.ndarray] = None  # (S, V) once done
+    stats: dict = dataclasses.field(default_factory=dict)
+    done: bool = False
+
+    def batch_key(self):
+        # id(graph): requests share a launch only when they literally share
+        # the graph object (same arrays ⇒ same compiled shapes).
+        return (id(self.graph), self.query, self.snapshots)
+
+
+class QueryBatcher:
+    """Coalesce vertex queries sharing a graph window into batched launches.
+
+    ``submit`` enqueues; ``flush`` groups the queue by (graph, semiring,
+    snapshot window), runs each group — up to ``max_batch`` sources at a
+    time — through one batched CQRS evaluation, and scatters the per-source
+    ``(S, V)`` slices back onto the finished requests.  Duplicate sources
+    within a group are deduplicated for the launch and fan back out.
+    """
+
+    def __init__(self, max_batch: int = 32, method: str = "cqrs"):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.method = method
+        self.queue: deque[QueryRequest] = deque()
+        self._uid = itertools.count()
+
+    def submit(
+        self,
+        graph,
+        query: str,
+        source: int,
+        snapshots: Optional[Sequence[int]] = None,
+    ) -> QueryRequest:
+        req = QueryRequest(
+            uid=next(self._uid),
+            graph=graph,
+            query=str(query),
+            source=int(source),
+            snapshots=None if snapshots is None else tuple(int(s) for s in snapshots),
+        )
+        self.queue.append(req)
+        return req
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def flush(self) -> list:
+        """Run every queued request; returns them in submission order.
+
+        Requests are grouped by batch key, each group's *unique* sources are
+        chunked into ``max_batch``-sized launches, and results fan back out
+        to every request (duplicates share one launch slot).  If a launch
+        raises, every not-yet-finished request is re-queued before the
+        exception propagates — nothing is silently dropped.
+        """
+        from repro.core.api import MultiQuery
+
+        by_key: dict = {}
+        submitted = list(self.queue)
+        self.queue.clear()
+        for req in submitted:
+            by_key.setdefault(req.batch_key(), []).append(req)
+
+        try:
+            for reqs in by_key.values():
+                by_source: dict = {}
+                for r in reqs:
+                    by_source.setdefault(r.source, []).append(r)
+                uniq = sorted(by_source)
+                for chunk_start in range(0, len(uniq), self.max_batch):
+                    sources = uniq[chunk_start : chunk_start + self.max_batch]
+                    mq = MultiQuery(
+                        reqs[0].graph, reqs[0].query, sources,
+                        snapshots=reqs[0].snapshots,
+                    )
+                    mq.evaluate(self.method)
+                    stats = dict(mq.stats, batched_queries=len(sources))
+                    for s in sources:
+                        # copy: don't pin the whole (Q, S, V) batch array to
+                        # the lifetime of one request's (S, V) slice
+                        res = mq.result_for(s).copy()
+                        for r in by_source[s]:
+                            r.result = res
+                            r.stats = stats
+                            r.done = True
+        except BaseException:
+            self.queue.extend(r for r in submitted if not r.done)
+            raise
+        return submitted

@@ -1,0 +1,89 @@
+"""Property-testing shim: real hypothesis when installed, seed-sweep otherwise.
+
+The tier-1 suite must collect and pass in a clean environment (``hypothesis``
+is an optional extra — ``pip install .[fuzz]`` — not a hard test dependency).
+When the package is present we re-export the genuine ``given`` / ``settings``
+/ ``strategies`` so shrinking and example databases work as usual.  When it is
+absent, the fallback replays each property over a *fixed* deterministic sweep
+of examples: every ``@given`` strategy draws from a ``random.Random`` seeded
+per example index, so a clean-environment run is reproducible and a failure
+message names the exact drawn values.
+
+Only the strategy surface the suite actually uses is shimmed
+(``st.integers``, ``st.sampled_from``); extend here before reaching for a new
+strategy in a test.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.min_value = int(min_value)
+            self.max_value = int(max_value)
+
+        def sample(self, rng: "random.Random"):
+            return rng.randint(self.min_value, self.max_value)
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng: "random.Random"):
+            return self.elements[rng.randrange(len(self.elements))]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for case in range(n):
+                    rng = random.Random((0x5EED << 20) ^ case)
+                    drawn = {
+                        name: strat.sample(rng)
+                        for name, strat in sorted(strategies.items())
+                    }
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"seed-sweep example {case}/{n} failed with {drawn!r}"
+                        ) from exc
+
+            # hide the strategy parameters from pytest's fixture resolution:
+            # they are drawn by the sweep, not injected as fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

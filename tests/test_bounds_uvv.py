@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.baselines import run_full
 from repro.core.bounds import compute_bounds
@@ -81,3 +81,41 @@ def test_uvv_detection_is_accurate():
     assert (~detected | true_uvv).all()
     # effectiveness: detect the large majority (paper: "nearly all")
     assert detected.sum() >= 0.8 * true_uvv.sum()
+
+
+# ------------------------------------------------------------------ inf==inf
+def test_detect_uvv_inf_equals_inf_regression():
+    """Paper's explicit note: mutually-unreachable vertices (identity bound on
+    both sides, including ±inf) ARE UVVs — detect_uvv must treat inf == inf
+    as equal for both CASMIN (+inf identities) and CASMAX (sswp's +inf
+    source / viterbi values) directions."""
+    import jax.numpy as jnp
+
+    from repro.core.bounds import detect_uvv
+
+    cap = jnp.asarray([0.0, 3.0, np.inf, -np.inf, np.inf], jnp.float32)
+    cup = jnp.asarray([0.0, 2.0, np.inf, -np.inf, 5.0], jnp.float32)
+    got = np.asarray(detect_uvv(cap, cup))
+    np.testing.assert_array_equal(got, [True, False, True, True, False])
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+def test_unreachable_vertices_are_uvv(name):
+    """End-to-end: a vertex with no in-edges in any snapshot sits at the
+    identity bound (±inf for CASMIN/ssnp-style queries) on BOTH sides and
+    must be flagged UVV for every semiring."""
+    from repro.graph.structures import build_evolving_graph
+
+    # path 0→1→2 with a churning tail edge; vertex 3 is isolated forever
+    src, dst, w = [0, 1], [1, 2], [2.0, 3.0]
+    deltas = [([], [], [], [1], [2]), ([1], [2], [3.0], [], [])]
+    eg = build_evolving_graph(src, dst, w, deltas, 4)
+    sr = SEMIRINGS[name]
+    b = compute_bounds(eg, sr, 0)
+    uvv = np.asarray(b.uvv)
+    assert uvv[3], f"{name}: isolated vertex not UVV"
+    assert np.asarray(b.val_cap)[3] == sr.identity
+    if name in ("bfs", "sssp", "ssnp"):  # CASMIN: identity is +inf
+        assert np.isinf(np.asarray(b.val_cap)[3])
+    if name == "sswp":  # CASMAX: the source itself carries +inf on both sides
+        assert np.isinf(np.asarray(b.val_cap)[0]) and uvv[0]

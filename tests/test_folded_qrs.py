@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.baselines import BASELINES, _prepare_qrs
 from repro.core.qrs import fold_qrs

@@ -1,0 +1,143 @@
+"""Batched Q×S×V engine: cross-engine equivalence + façade/serving behavior.
+
+The contract under test: ``evaluate_batch`` over Q sources matches Q
+independent ``EvolvingQuery.evaluate`` runs **bit-for-bit** (not allclose),
+for every registered semiring, on both an RMAT fixture and a path graph, for
+both the flat-XLA and the Pallas/ELL engines.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.api import EvolvingQuery, MultiQuery
+from repro.core.baselines import BASELINES, run_cqrs_batch
+from repro.core.semiring import SEMIRINGS
+from repro.graph.structures import build_evolving_graph
+from repro.serving.scheduler import QueryBatcher
+from conftest import make_evolving
+
+
+def make_path_graph(n=40, num_snapshots=5):
+    """Evolving path 0→1→…→n-1 whose tail edges churn across snapshots."""
+    src = np.arange(n - 1)
+    dst = np.arange(1, n)
+    w = 1.0 + (np.arange(n - 1) % 7).astype(np.float64)
+    deltas = []
+    cut = n // 2
+    for i in range(num_snapshots - 1):
+        if i % 2 == 0:  # delete one mid-path edge → tail unreachable
+            deltas.append(([], [], [], [cut], [cut + 1]))
+        else:  # re-add it
+            deltas.append(([cut], [cut + 1], [w[cut]], [], []))
+    return build_evolving_graph(src, dst, w, deltas, n)
+
+
+RMAT = make_evolving(num_vertices=64, num_edges=256, num_snapshots=6, batch_size=24)
+PATH = make_path_graph()
+SOURCES = [0, 3, 17, 33]
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+@pytest.mark.parametrize("graph_name", ["rmat", "path"])
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_batch_matches_independent_evaluates(name, graph_name, method):
+    eg = {"rmat": RMAT, "path": PATH}[graph_name]
+    ref = np.stack(
+        [EvolvingQuery(eg, name, s).evaluate("cqrs") for s in SOURCES]
+    )
+    q = EvolvingQuery(eg, name, SOURCES[0])
+    got = q.evaluate_batch(SOURCES, method=method)
+    assert got.shape == (len(SOURCES), eg.num_snapshots, eg.num_vertices)
+    np.testing.assert_array_equal(got, ref, err_msg=f"{method}/{name}/{graph_name}")
+    assert q.stats["num_queries"] == len(SOURCES)
+
+
+def test_batch_matches_full_recompute():
+    sr_names = ["sssp", "sswp"]
+    for name in sr_names:
+        ref = np.stack(
+            [BASELINES["full"](RMAT, SEMIRINGS[name], s)[0] for s in SOURCES]
+        )
+        got, _ = run_cqrs_batch(RMAT, SEMIRINGS[name], SOURCES)
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_evaluate_batch_loop_fallback_matches():
+    got = EvolvingQuery(RMAT, "sssp", 0).evaluate_batch(SOURCES, method="kickstarter")
+    ref = np.stack(
+        [BASELINES["kickstarter"](RMAT, SEMIRINGS["sssp"], s)[0] for s in SOURCES]
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_multi_query_facade():
+    mq = MultiQuery(RMAT, "bfs", SOURCES)
+    res = mq.evaluate()
+    assert res.shape == (len(SOURCES), RMAT.num_snapshots, RMAT.num_vertices)
+    for i, s in enumerate(SOURCES):
+        np.testing.assert_array_equal(mq.result_for(s), res[i])
+    assert mq.stats["qrs_edges"] >= 0
+    with pytest.raises(ValueError):
+        MultiQuery(RMAT, "bfs", [])
+
+
+def test_multi_query_snapshot_window():
+    window = [1, 3, 4]
+    mq = MultiQuery(RMAT, "sssp", SOURCES, snapshots=window)
+    res = mq.evaluate()
+    full = MultiQuery(RMAT, "sssp", SOURCES).evaluate()
+    np.testing.assert_array_equal(res, full[:, window, :])
+
+
+def test_query_batcher_coalesces_and_matches():
+    qb = QueryBatcher(max_batch=3)
+    reqs = [qb.submit(RMAT, "sssp", s) for s in SOURCES]  # one group, 2 chunks
+    reqs += [qb.submit(RMAT, "bfs", 2)]  # second group
+    assert qb.pending() == len(SOURCES) + 1
+    done = qb.flush()
+    assert qb.pending() == 0
+    assert [r.uid for r in done] == [r.uid for r in reqs]
+    for r in done[: len(SOURCES)]:
+        assert r.done
+        ref = EvolvingQuery(RMAT, "sssp", r.source).evaluate("cqrs")
+        np.testing.assert_array_equal(r.result, ref)
+    assert done[0].stats["batched_queries"] == 3  # max_batch chunking
+    ref_bfs = EvolvingQuery(RMAT, "bfs", 2).evaluate("cqrs")
+    np.testing.assert_array_equal(done[-1].result, ref_bfs)
+
+
+def test_query_batcher_dedups_sources():
+    qb = QueryBatcher(max_batch=8)
+    a = qb.submit(RMAT, "sssp", 5)
+    b = qb.submit(RMAT, "sssp", 5)
+    qb.flush()
+    np.testing.assert_array_equal(a.result, b.result)
+    assert a.stats["batched_queries"] == 1
+    # results are per-request copies, not views pinning the (Q, S, V) batch
+    assert a.result.base is None
+
+
+def test_query_batcher_dedups_before_chunking():
+    # 6 requests over 2 unique sources with max_batch=2 → ONE launch
+    qb = QueryBatcher(max_batch=2)
+    reqs = [qb.submit(RMAT, "sssp", s) for s in [3, 9, 3, 9, 3, 9]]
+    qb.flush()
+    assert all(r.done for r in reqs)
+    assert all(r.stats["batched_queries"] == 2 for r in reqs)
+    ref = EvolvingQuery(RMAT, "sssp", 3).evaluate("cqrs")
+    np.testing.assert_array_equal(reqs[2].result, ref)
+
+
+def test_query_batcher_requeues_on_failure():
+    qb = QueryBatcher(method="not-a-method")
+    reqs = [qb.submit(RMAT, "sssp", 0), qb.submit(RMAT, "bfs", 1)]
+    with pytest.raises(KeyError):
+        qb.flush()
+    # nothing silently dropped: unfinished requests are back in the queue
+    assert qb.pending() == len(reqs)
+    assert not any(r.done for r in reqs)
+    qb.method = "cqrs"
+    done = qb.flush()
+    assert sorted(r.uid for r in done) == sorted(r.uid for r in reqs)
+    assert all(r.done for r in reqs)

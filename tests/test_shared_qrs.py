@@ -1,0 +1,98 @@
+"""Shared-QRS safety properties (Theorem 2 is never violated by sharing).
+
+For random evolving graphs and source batches, every non-UVV vertex of every
+query in the batch must keep *all* its union-graph in-edges in the shared
+QRS — the edge set each per-query QRS would have kept is a subset of the
+shared one, so sharing can only add (harmless) work, never drop a required
+dependence.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import BASELINES, run_cqrs_batch
+from repro.core.bounds import compute_bounds, compute_bounds_batch
+from repro.core.qrs import build_qrs, build_qrs_shared
+from repro.core.semiring import SEMIRINGS
+from conftest import make_evolving
+from _prop import given, settings, st
+
+
+def _edge_key(src, dst, num_vertices):
+    return src.astype(np.int64) * np.int64(num_vertices) + dst.astype(np.int64)
+
+
+def _sources_for(eg, seed, q=4):
+    rng = np.random.default_rng(seed)
+    return sorted(int(s) for s in rng.choice(eg.num_vertices, size=q, replace=False))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    snaps=st.integers(2, 8),
+    name=st.sampled_from(sorted(SEMIRINGS)),
+)
+def test_shared_qrs_keeps_every_nonuvv_inedge(seed, snaps, name):
+    eg = make_evolving(num_vertices=48, num_edges=200, num_snapshots=snaps,
+                       batch_size=20, seed=seed, readd_prob=0.4)
+    sr = SEMIRINGS[name]
+    sources = _sources_for(eg, seed)
+    bb = compute_bounds_batch(eg, sr, sources)
+    sq = build_qrs(eg, bb.uvv, bb.val_cap, sr)  # dispatches to shared mode
+
+    src = np.asarray(eg.src)
+    dst = np.asarray(eg.dst)
+    union_valid = np.asarray(eg.popcount()) > 0
+    uvv_q = np.asarray(bb.uvv)  # (Q, V)
+
+    kept = set(
+        _edge_key(
+            np.asarray(sq.src)[np.asarray(sq.valid)],
+            np.asarray(sq.dst)[np.asarray(sq.valid)],
+            eg.num_vertices,
+        ).tolist()
+    )
+    # Theorem 2 safety: an in-edge may be dropped only when its sink is UVV
+    # for EVERY query in the batch.
+    required = union_valid & (~uvv_q).any(axis=0)[dst]
+    req_keys = _edge_key(src[required], dst[required], eg.num_vertices)
+    missing = [k for k in req_keys.tolist() if k not in kept]
+    assert not missing, f"shared QRS dropped {len(missing)} required in-edges"
+
+    # and each per-query QRS is a subset of the shared edge set
+    for qi, s in enumerate(sources):
+        b = compute_bounds(eg, sr, s)
+        per = build_qrs(eg, b.uvv, b.val_cap, sr)
+        per_keys = _edge_key(
+            np.asarray(per.src)[np.asarray(per.valid)],
+            np.asarray(per.dst)[np.asarray(per.valid)],
+            eg.num_vertices,
+        )
+        assert set(per_keys.tolist()) <= kept, f"per-query QRS ⊄ shared (q={qi})"
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    snaps=st.integers(2, 6),
+    name=st.sampled_from(sorted(SEMIRINGS)),
+)
+def test_shared_qrs_batch_matches_full_fuzz(seed, snaps, name):
+    eg = make_evolving(num_vertices=40, num_edges=160, num_snapshots=snaps,
+                       batch_size=16, seed=seed, readd_prob=0.4)
+    sr = SEMIRINGS[name]
+    sources = _sources_for(eg, seed, q=3)
+    got, _ = run_cqrs_batch(eg, sr, sources)
+    ref = np.stack([BASELINES["full"](eg, sr, s)[0] for s in sources])
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_build_qrs_shared_rejects_1d_mask():
+    eg = make_evolving(num_vertices=32, num_edges=100, num_snapshots=3,
+                       batch_size=10)
+    sr = SEMIRINGS["sssp"]
+    with pytest.raises(ValueError):
+        build_qrs_shared(eg, np.zeros(eg.num_vertices, bool),
+                         np.zeros(eg.num_vertices, np.float32), sr)
