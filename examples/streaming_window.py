@@ -1,0 +1,87 @@
+"""Sliding-window streaming walkthrough: warm advance() vs from-scratch.
+
+A serving system sees snapshots arrive continuously.  ``StreamingQuery``
+keeps warm state — intersection/union bound fixpoints with witness parents,
+a slot-patched QRS, and the window's result rows — and each ``advance()``
+folds one slide in incrementally instead of recomputing bounds → UVV → QRS →
+all-snapshot evaluation from scratch.  The script streams deltas through a
+window, prints per-slide timings and the cross-window vertex-value stability
+(the paper's 53–99 % observation, which is exactly why sliding beats
+recomputing), and asserts bit-for-bit equality with a fresh evaluation on
+the final window.
+
+    PYTHONPATH=src python examples/streaming_window.py [--smoke]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.api import EvolvingQuery, StreamingQuery
+from repro.graph.generators import (
+    generate_evolving_stream, generate_rmat, generate_uniform_weights,
+)
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.serving.scheduler import QueryBatcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=4096)
+    ap.add_argument("--edges", type=int, default=32768)
+    ap.add_argument("--window", type=int, default=32)
+    ap.add_argument("--slides", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=400)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.vertices, args.edges, args.window = 512, 2048, 6
+        args.slides, args.batch = 3, 64
+
+    src, dst = generate_rmat(args.vertices, args.edges, seed=0)
+    w = generate_uniform_weights(len(src), seed=1, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, args.vertices,
+        num_snapshots=args.window + args.slides, batch_size=args.batch, seed=2,
+    )
+
+    log = SnapshotLog(args.vertices,
+                      capacity=args.edges + len(deltas) * args.batch)
+    log.append_snapshot(*base)
+    for d in deltas[: args.window - 1]:
+        log.append_snapshot(*d)
+    view = WindowView(log, size=args.window)
+    print(f"stream: V={args.vertices} E≈{args.edges} window={args.window} "
+          f"({args.slides} slides of {args.batch} updates)\n")
+
+    # A QueryBatcher keeps warm per-(window, query) state; watch() primes.
+    qb = QueryBatcher()
+    t0 = time.perf_counter()
+    sq = qb.watch(view, "sssp", 0)
+    print(f"prime (cold solve of {args.window} snapshots): "
+          f"{(time.perf_counter() - t0) * 1e3:8.1f} ms   "
+          f"UVV={sq.stats['frac_uvv']:.1%} QRS={sq.stats['qrs_edges']} edges")
+
+    for i, d in enumerate(deltas[args.window - 1:]):
+        t0 = time.perf_counter()
+        out = qb.advance_window(view, d)
+        ms = (time.perf_counter() - t0) * 1e3
+        res = out[("sssp", 0)]
+        # the paper's stability observation: the appended snapshot's values
+        # vs its predecessor's (this is why sliding beats recomputing)
+        stable = float(np.mean(res[-1] == res[-2]))
+        print(f"slide {i}: {ms:8.1f} ms   supersteps={sq.stats['supersteps']:3d} "
+              f"QRS {sq.stats.get('qrs_entered', 0):+d}/-{sq.stats.get('qrs_left', 0)} edges   "
+              f"stable vertex values vs prev window: {stable:.1%}")
+
+    t0 = time.perf_counter()
+    ref = EvolvingQuery(view.materialize(), "sssp", 0).evaluate("cqrs")
+    ms = (time.perf_counter() - t0) * 1e3
+    assert np.array_equal(sq.results, ref), "streaming != fresh (bug!)"
+    print(f"\nfrom-scratch check on final window: {ms:8.1f} ms — "
+          "bit-for-bit identical to the streamed state ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,38 @@
+# Semiring algebra — the five monotone path queries (paper Table 2).
 from repro.core.semiring import Semiring, SEMIRINGS, get_semiring
+
+# Fixpoint engine — dense relax supersteps + KickStarter-style parent trims.
 from repro.core.engine import compute_fixpoint, incremental_fixpoint, compute_parents
+
+# Intersection–union bounds (paper §3): fixed-window, batched, and streaming.
 from repro.core.bounds import (
-    compute_bounds,
-    compute_bounds_batch,
-    detect_uvv,
+    compute_bounds,         # G∩/G∪ solve + UVV mask for one fixed window
+    compute_bounds_batch,   # vmapped (Q, V) bounds for Q sources
+    detect_uvv,             # Theorem-2 bound-equality test
     BoundsResult,
     BatchBoundsResult,
+    StreamingBounds,        # sliding-window bounds maintained from slide diffs
 )
-from repro.core.qrs import build_qrs, build_qrs_shared, QRS, SharedQRS
+
+# Q-Relevant Subgraph (paper §3 Step 3): per-query, shared-batch, and patched.
+from repro.core.qrs import (
+    build_qrs,              # compact the universe for one query's UVV mask
+    build_qrs_shared,       # one compacted edge set for a Q-query batch
+    QRS,
+    SharedQRS,
+    PatchableQRS,           # slot-maintained QRS grown/shrunk per window slide
+)
+
+# Concurrent all-snapshot evaluation (paper §4), single-query and batched.
 from repro.core.concurrent import concurrent_fixpoint, concurrent_fixpoint_batch
-from repro.core.api import EvolvingQuery, MultiQuery, evaluate_evolving_query
+
+# User-facing query APIs (paper §5 interface + serving extensions).
+from repro.core.api import (
+    EvolvingQuery,          # one (source, window) query, every baseline method
+    MultiQuery,             # Q same-semiring sources through one shared pipeline
+    StreamingQuery,         # warm sliding-window query: advance() per snapshot
+    evaluate_evolving_query,
+)
 
 __all__ = [
     "Semiring",
@@ -23,13 +46,16 @@ __all__ = [
     "detect_uvv",
     "BoundsResult",
     "BatchBoundsResult",
+    "StreamingBounds",
     "build_qrs",
     "build_qrs_shared",
     "QRS",
     "SharedQRS",
+    "PatchableQRS",
     "concurrent_fixpoint",
     "concurrent_fixpoint_batch",
     "EvolvingQuery",
     "MultiQuery",
+    "StreamingQuery",
     "evaluate_evolving_query",
 ]

@@ -19,8 +19,14 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.engine import compute_fixpoint, incremental_fixpoint
+from repro.core.engine import (
+    compute_fixpoint,
+    compute_parents,
+    incremental_fixpoint,
+    invalidate_from_deletions,
+)
 from repro.core.semiring import Semiring
 from repro.graph.structures import EvolvingGraph
 
@@ -146,3 +152,206 @@ def compute_bounds_batch(
         iters_cap=iters_cap,
         iters_cup=iters_cup,
     )
+
+
+# ==========================================================================
+# Streaming bounds maintenance over a sliding snapshot window
+# ==========================================================================
+class StreamingBounds:
+    """Incrementally-maintained intersection–union bounds for a sliding window.
+
+    ``compute_bounds`` solves G∩ and G∪ from scratch for a fixed window.  A
+    window *slide* changes both graphs in a structured way, tracked by the
+    view's per-edge witness-count array
+    (:class:`repro.graph.stream.WindowView.witness`):
+
+    * the **appended** snapshot can only *shrink* G∩ (edges it lacks drop out
+      of the intersection) and *grow* G∪;
+    * the **retired** snapshot can only *grow* G∩ (edges it alone was missing
+      join) and *shrink* G∪ (edges it alone witnessed — witness count hits
+      zero — drop out).
+
+    Growth is the monotone direction: relaxing the old fixpoint over the new
+    edge set refines it without recomputation (the same §6.2 argument that
+    lifts R∩ to R∪).  Shrinkage is handled KickStarter-style: only vertices
+    whose bound was *witnessed* by a dropped edge — their
+    :func:`~repro.core.engine.compute_parents` chain crosses an edge whose
+    witness count made the fatal transition — are invalidated and re-relaxed
+    (:func:`~repro.core.engine.invalidate_from_deletions`); everyone else's
+    bound is provably unchanged-or-refinable in place.  Lifetime weight-extrema
+    widening is folded into the same machinery: the G∩ safe weight can only
+    worsen (treated as a deletion of the old-weight edge), the G∪ safe weight
+    can only improve (plain monotone re-relaxation).
+
+    Because monotone fixpoints are unique, the maintained ``val_cap`` /
+    ``val_cup`` are bit-for-bit identical to a fresh :func:`compute_bounds`
+    on the slid window's materialized graph.
+    """
+
+    def __init__(self, view, sr: Semiring, source: int):
+        self.view = view
+        self.sr = sr
+        self.source = jnp.int32(int(source))
+        self.supersteps = 0
+        self._weights_key = None
+        self._w_cap = self._w_cup = None
+        self._full_init()
+
+    # -- device-side universe arrays ------------------------------------------
+    def _edges(self):
+        return self.view.log.device_edges()
+
+    def _weights(self):
+        """Safe per-edge weights (w_cap, w_cup), re-uploaded only when stale.
+
+        Keyed on the log's (generation, num_edges, weight_version): the host
+        arrays are mutated in place by edge registration and extrema widening,
+        and ``jnp.asarray`` copies.
+        """
+        log = self.view.log
+        key = (log.generation, log.num_edges, log.weight_version)
+        if self._weights_key != key:
+            sr = self.sr
+            self._w_cap = jnp.asarray(
+                sr.intersection_weight(log.weight_min, log.weight_max)
+            )
+            self._w_cup = jnp.asarray(
+                sr.union_weight(log.weight_min, log.weight_max)
+            )
+            self._weights_key = key
+        return self._w_cap, self._w_cup
+
+    # -- full solve (cold start) ----------------------------------------------
+    def _full_init(self):
+        sr, v = self.sr, self.view.log.num_vertices
+        src, dst = self._edges()
+        w_cap, w_cup = self._weights()
+        inter = jnp.asarray(self.view.intersection_mask())
+        union = jnp.asarray(self.view.union_mask())
+        self.val_cap, it_cap = compute_fixpoint(
+            src, dst, w_cap, inter, sr, self.source, v, sorted_edges=False
+        )
+        self.val_cup, it_cup = incremental_fixpoint(
+            self.val_cap, src, dst, w_cup, union, sr, v, sorted_edges=False
+        )
+        self.parent_cap = compute_parents(
+            self.val_cap, src, dst, w_cap, inter, sr, self.source, v,
+            sorted_edges=False,
+        )
+        self.parent_cup = compute_parents(
+            self.val_cup, src, dst, w_cup, union, sr, self.source, v,
+            sorted_edges=False,
+        )
+        self.supersteps += int(it_cap) + int(it_cup)
+
+    # -- one slide ------------------------------------------------------------
+    def apply_slide(self, diff, inter_mask=None, union_mask=None) -> int:
+        """Fold one :class:`~repro.graph.stream.SlideDiff` into the bounds.
+
+        ``inter_mask``/``union_mask`` are the G∩/G∪ membership masks of the
+        window *after this slide*; they default to the view's current masks,
+        which is only correct when ``diff`` is the view's latest slide.  A
+        consumer catching up on several queued slides must pass each
+        intermediate window's masks (``WindowView.rolling_masks``) — the trim
+        argument is per-slide: parents recorded on window *k* justify
+        invalidations against window *k+1*, not against a window several
+        slides ahead.  Weights, however, are always the log's *current*
+        lifetime extrema: if any queued slide widened them, intermediate
+        slides cannot be folded in consistently and the caller must rebuild
+        instead (``StreamingQuery.advance`` does).
+
+        Returns the number of relaxation supersteps spent (0 when the slide
+        left both G∩ and G∪ untouched).
+        """
+        sr, v = self.sr, self.view.log.num_vertices
+        cap_n = self.view.log.capacity
+        if inter_mask is None:
+            inter_mask = self.view.intersection_mask()
+        if union_mask is None:
+            union_mask = self.view.union_mask()
+        src, dst = self._edges()
+        w_cap, w_cup = self._weights()
+        steps = 0
+
+        # Edges whose G∩ safe weight worsened behave like deletions for R∩;
+        # the G∪ safe weight only ever improves, so its side needs a plain
+        # re-relax (and only when the cup-relevant extremum actually moved).
+        cap_weight_worse = diff.wmax_grown if sr.minimize else diff.wmin_shrunk
+        cup_weight_better = diff.wmin_shrunk if sr.minimize else diff.wmax_grown
+
+        cap_dropped = _as_mask(cap_n, diff.inter_lost, cap_weight_worse)
+        cap_changed = (
+            cap_dropped is not None
+            or len(diff.inter_gained)
+            or len(cap_weight_worse)
+        )
+        if cap_changed:
+            inter = jnp.asarray(inter_mask)
+            if cap_dropped is not None:
+                self.val_cap, _ = invalidate_from_deletions(
+                    self.val_cap, self.parent_cap, jnp.asarray(cap_dropped),
+                    src, sr, self.source, v,
+                )
+            self.val_cap, it = incremental_fixpoint(
+                self.val_cap, src, dst, w_cap, inter, sr, v, sorted_edges=False
+            )
+            self.parent_cap = compute_parents(
+                self.val_cap, src, dst, w_cap, inter, sr, self.source, v,
+                sorted_edges=False,
+            )
+            steps += int(it)
+
+        cup_dropped = _as_mask(cap_n, diff.union_lost)
+        cup_changed = (
+            cup_dropped is not None
+            or len(diff.union_gained)
+            or len(cup_weight_better)
+        )
+        if cup_changed:
+            union = jnp.asarray(union_mask)
+            if cup_dropped is not None:
+                self.val_cup, _ = invalidate_from_deletions(
+                    self.val_cup, self.parent_cup, jnp.asarray(cup_dropped),
+                    src, sr, self.source, v,
+                )
+            self.val_cup, it = incremental_fixpoint(
+                self.val_cup, src, dst, w_cup, union, sr, v, sorted_edges=False
+            )
+            self.parent_cup = compute_parents(
+                self.val_cup, src, dst, w_cup, union, sr, self.source, v,
+                sorted_edges=False,
+            )
+            steps += int(it)
+
+        self.supersteps += steps
+        return steps
+
+    # -- results --------------------------------------------------------------
+    @property
+    def uvv(self) -> jax.Array:
+        return detect_uvv(self.val_cap, self.val_cup)
+
+    @property
+    def result(self) -> BoundsResult:
+        """Current window's bounds in the :func:`compute_bounds` shape."""
+        if self.sr.minimize:
+            lower, upper = self.val_cup, self.val_cap
+        else:
+            lower, upper = self.val_cap, self.val_cup
+        total = jnp.int32(self.supersteps)
+        return BoundsResult(
+            val_cap=self.val_cap, val_cup=self.val_cup,
+            lower=lower, upper=upper, uvv=self.uvv,
+            iters_cap=total, iters_cup=jnp.int32(0),
+        )
+
+
+def _as_mask(n: int, *id_arrays) -> "np.ndarray | None":
+    """Scatter universe-id arrays into an (n,) bool mask; None when all empty."""
+    total = sum(len(a) for a in id_arrays)
+    if total == 0:
+        return None
+    mask = np.zeros(n, bool)
+    for a in id_arrays:
+        mask[a] = True
+    return mask

@@ -33,7 +33,9 @@ from repro.graph.structures import unpack_presence
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters")
+    jax.jit,
+    static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters",
+                     "sorted_edges"),
 )
 def concurrent_fixpoint(
     bootstrap: jax.Array,
@@ -46,6 +48,7 @@ def concurrent_fixpoint(
     num_vertices: int,
     num_snapshots: int,
     max_iters: Optional[int] = None,
+    sorted_edges: bool = True,
 ):
     """Relax all snapshots concurrently from the (S-broadcast) bootstrap.
 
@@ -53,6 +56,8 @@ def concurrent_fixpoint(
       bootstrap: ``(V,)`` — R∩ values (feasible for every snapshot).
       src/dst/weight/valid: compacted QRS edge arrays ``(E',)``.
       presence: ``(E', W) uint32`` snapshot bitmask.
+      sorted_edges: edge arrays are dst-sorted (default); the streaming
+        patched-QRS slot layout is unsorted and passes ``False``.
     Returns:
       ``(values (S, V), iters)``.
     """
@@ -66,7 +71,7 @@ def concurrent_fixpoint(
 
     seg = functools.partial(
         sr.segment_reduce, segment_ids=dst, num_segments=num_vertices,
-        indices_are_sorted=True,
+        indices_are_sorted=sorted_edges,
     )
 
     def relax(values):

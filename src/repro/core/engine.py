@@ -26,7 +26,9 @@ import jax.numpy as jnp
 from repro.core.semiring import Semiring
 
 
-@functools.partial(jax.jit, static_argnames=("sr", "num_vertices", "max_iters"))
+@functools.partial(
+    jax.jit, static_argnames=("sr", "num_vertices", "max_iters", "sorted_edges")
+)
 def compute_fixpoint(
     src: jax.Array,
     dst: jax.Array,
@@ -36,14 +38,24 @@ def compute_fixpoint(
     source: jax.Array,
     num_vertices: int,
     max_iters: Optional[int] = None,
+    sorted_edges: bool = True,
 ):
-    """Solve the query from scratch.  Returns ``(values (V,), iters)``."""
+    """Solve the query from scratch.  Returns ``(values (V,), iters)``.
+
+    ``sorted_edges`` asserts the edge arrays are dst-sorted (the canonical
+    :class:`EvolvingGraph`/QRS layout); the streaming substrate keeps its
+    universe in append order and passes ``False``.
+    """
     values0 = jnp.full((num_vertices,), sr.identity, jnp.float32)
     values0 = values0.at[source].set(jnp.float32(sr.source))
-    return _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters)
+    return _fixpoint(
+        values0, src, dst, weight, valid, sr, num_vertices, max_iters, sorted_edges
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("sr", "num_vertices", "max_iters"))
+@functools.partial(
+    jax.jit, static_argnames=("sr", "num_vertices", "max_iters", "sorted_edges")
+)
 def incremental_fixpoint(
     values0: jax.Array,
     src: jax.Array,
@@ -53,24 +65,31 @@ def incremental_fixpoint(
     sr: Semiring,
     num_vertices: int,
     max_iters: Optional[int] = None,
+    sorted_edges: bool = True,
 ):
     """Monotone incremental relaxation from ``values0`` (addition-only).
 
-    Correct whenever ``values0`` is *feasible* (every finite value is realized
-    by a path in the current graph) — the CommonGraph/QRS/KickStarter
-    bootstrap states all satisfy this.
+    Correct whenever ``values0`` is *conservative* (no vertex is past its
+    exact value, i.e. pointwise no better than the true fixpoint) with the
+    source pinned — the CommonGraph/QRS/KickStarter bootstrap states and the
+    streaming trim states all satisfy this.
     """
-    return _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters)
+    return _fixpoint(
+        values0, src, dst, weight, valid, sr, num_vertices, max_iters, sorted_edges
+    )
 
 
-def _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters):
+def _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters,
+              sorted_edges=True):
     limit = num_vertices + 1 if max_iters is None else max_iters
     identity = jnp.float32(sr.identity)
 
     def relax(values):
         cand = sr.extend(values[src], weight)
         cand = jnp.where(valid, cand, identity)
-        upd = sr.segment_reduce(cand, dst, num_vertices, indices_are_sorted=True)
+        upd = sr.segment_reduce(
+            cand, dst, num_vertices, indices_are_sorted=sorted_edges
+        )
         return sr.improve(values, upd)
 
     def cond(state):
@@ -89,7 +108,7 @@ def _fixpoint(values0, src, dst, weight, valid, sr, num_vertices, max_iters):
     return values, iters
 
 
-@functools.partial(jax.jit, static_argnames=("sr", "num_vertices"))
+@functools.partial(jax.jit, static_argnames=("sr", "num_vertices", "sorted_edges"))
 def compute_parents(
     values: jax.Array,
     src: jax.Array,
@@ -99,17 +118,21 @@ def compute_parents(
     sr: Semiring,
     source: jax.Array,
     num_vertices: int,
+    sorted_edges: bool = True,
 ) -> jax.Array:
     """Per-vertex parent edge id achieving the converged value (-1 if none).
 
-    The parent edge is the dependence the KickStarter baseline trims on
-    deletion: a vertex value is trusted only while its parent chain survives.
+    The parent edge is the dependence the KickStarter baseline (and the
+    streaming bounds maintenance) trims on deletion: a vertex value is
+    trusted only while its parent chain survives.
     """
     num_edges = src.shape[0]
     cand = sr.extend(values[src], weight)
     achieving = valid & (cand == values[dst]) & (values[dst] != jnp.float32(sr.identity))
     eid = jnp.where(achieving, jnp.arange(num_edges, dtype=jnp.int32), num_edges)
-    parent = jax.ops.segment_min(eid, dst, num_vertices, indices_are_sorted=True)
+    parent = jax.ops.segment_min(
+        eid, dst, num_vertices, indices_are_sorted=sorted_edges
+    )
     # empty segments fill with INT32_MAX; the explicit sentinel is num_edges
     parent = jnp.where(parent >= num_edges, -1, parent)
     # the source never depends on an edge

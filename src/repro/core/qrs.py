@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.semiring import Semiring
 from repro.graph.structures import EvolvingGraph, PAD_ALIGN
-from repro.utils.padding import pad_to_multiple
+from repro.utils.padding import pad_to, pad_to_multiple, round_up
 from repro.utils.pytree import register_static_dataclass
 
 
@@ -223,6 +223,165 @@ def build_qrs_shared(
         num_queries=int(uvv_q.shape[0]),
         stats=stats,
     )
+
+
+# ==========================================================================
+# Streaming: slot-maintained QRS patched from UVV-mask diffs
+# ==========================================================================
+class PatchableQRS:
+    """Compacted subgraph that grows/shrinks in place as the window slides.
+
+    The batch :func:`build_qrs` recompacts the whole universe per query.  For
+    a sliding window almost nothing changes between adjacent windows (the
+    paper's 53–99 % stable-vertex observation), so this class keeps the
+    compacted edge set in **slots**: fixed-capacity host arrays plus a
+    universe-id → slot map.  ``apply_slide`` recomputes the Algorithm-1 keep
+    rule (``in G∪ and sink not UVV``) only for edges *touched* by the slide —
+    in-edges of vertices whose UVV bit flipped, plus edges whose G∪ membership
+    or safe weight changed — and point-updates the slots.  Freed slots are
+    recycled; capacity grows amortized-doubling so jitted consumers compile
+    once per capacity class.
+
+    Slot order is arbitrary (engine calls must pass ``sorted_edges=False``);
+    the resident edge *set* is asserted identical to a fresh :func:`build_qrs`
+    in the test suite.
+    """
+
+    def __init__(self, view, uvv, sr: Semiring, *, align: int = PAD_ALIGN):
+        self.view = view
+        self.sr = sr
+        self.align = int(align)
+        log = view.log
+        self.uvv = np.asarray(uvv).copy()
+        n = log.num_edges
+        keep = view.union_mask().copy()
+        keep[:n] &= ~self.uvv[log.dst[:n]]
+        ids = np.flatnonzero(keep).astype(np.int32)
+
+        cap = round_up(max(1, 2 * len(ids)), self.align)
+        self.slot_edge = np.full(cap, -1, np.int32)  # slot → universe id
+        self.slot_of = np.full(log.capacity, -1, np.int32)  # universe id → slot
+        self.src = np.zeros(cap, np.int32)
+        self.dst = np.zeros(cap, np.int32)
+        self.weight = np.zeros(cap, np.float32)
+        self.valid = np.zeros(cap, bool)
+        k = len(ids)
+        self.slot_edge[:k] = ids
+        self.slot_of[ids] = np.arange(k, dtype=np.int32)
+        self.src[:k] = log.src[ids]
+        self.dst[:k] = log.dst[ids]
+        self.weight[:k] = self._edge_weights(ids)
+        self.valid[:k] = True
+        self._free = list(range(cap - 1, k - 1, -1))  # pop() yields low slots first
+        self._version = 0
+        self._dev_version = -1
+        self._dev: tuple = ()
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return len(self.slot_edge)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.valid.sum())
+
+    def edge_ids(self) -> np.ndarray:
+        """Universe ids of resident edges (arbitrary order)."""
+        return self.slot_edge[self.valid]
+
+    def _edge_weights(self, ids: np.ndarray) -> np.ndarray:
+        """G∩ safe weights for the given universe ids (gather, not full scan)."""
+        log = self.view.log
+        return np.asarray(
+            self.sr.intersection_weight(log.weight_min[ids], log.weight_max[ids])
+        )
+
+    # -- patching -------------------------------------------------------------
+    def apply_slide(self, diff, uvv_new) -> dict:
+        """Patch the compacted edge set for one slide; returns patch stats."""
+        log = self.view.log
+        uvv_new = np.asarray(uvv_new)
+        if len(self.slot_of) != log.capacity:
+            self.slot_of = pad_to(self.slot_of, log.capacity, -1)
+
+        flipped = np.flatnonzero(self.uvv != uvv_new).astype(np.int32)
+        touched = [log.in_edges(flipped), diff.union_gained, diff.union_lost]
+        touched = np.unique(np.concatenate(touched)).astype(np.int64)
+
+        entered = left = 0
+        if len(touched):
+            new_keep = (self.view.witness[touched] > 0) \
+                & ~uvv_new[log.dst[touched]]
+            resident = self.slot_of[touched] >= 0
+            leave_ids = touched[resident & ~new_keep]
+            enter_ids = touched[new_keep & ~resident]
+            left, entered = len(leave_ids), len(enter_ids)
+
+            if left:
+                slots = self.slot_of[leave_ids]
+                self.valid[slots] = False
+                self.slot_edge[slots] = -1
+                self.slot_of[leave_ids] = -1
+                self._free.extend(int(s) for s in slots)
+            if entered:
+                if entered > len(self._free):
+                    self._grow(self.capacity - len(self._free) + entered)
+                slots = np.asarray(
+                    [self._free.pop() for _ in range(entered)], np.int32
+                )
+                self.slot_edge[slots] = enter_ids
+                self.slot_of[enter_ids] = slots
+                self.src[slots] = log.src[enter_ids]
+                self.dst[slots] = log.dst[enter_ids]
+                self.weight[slots] = self._edge_weights(enter_ids)
+                self.valid[slots] = True
+
+        # safe-weight refresh for resident edges whose extrema widened
+        reweighted = np.concatenate([diff.wmin_shrunk, diff.wmax_grown])
+        if len(reweighted):
+            slots = self.slot_of[reweighted]
+            slots = slots[slots >= 0]
+            if len(slots):
+                self.weight[slots] = self._edge_weights(self.slot_edge[slots])
+        if entered or left or len(reweighted):
+            self._version += 1
+        self.uvv = uvv_new.copy()
+        return {
+            "qrs_edges": self.num_edges,
+            "qrs_entered": int(entered),
+            "qrs_left": int(left),
+            "qrs_touched": int(len(touched)),
+        }
+
+    def _grow(self, needed: int):
+        old_cap = self.capacity
+        new_cap = round_up(max(needed, 2 * old_cap), self.align)
+        self.slot_edge = pad_to(self.slot_edge, new_cap, -1)
+        self.src = pad_to(self.src, new_cap, 0)
+        self.dst = pad_to(self.dst, new_cap, 0)
+        self.weight = pad_to(self.weight, new_cap, 0.0)
+        self.valid = pad_to(self.valid, new_cap, False)
+        self._free.extend(range(new_cap - 1, old_cap - 1, -1))
+        self._version += 1
+
+    # -- engine-facing arrays -------------------------------------------------
+    def device_arrays(self):
+        """``(src, dst, weight)`` device arrays, re-uploaded only when patched."""
+        if self._dev_version != self._version:
+            self._dev = (
+                jnp.asarray(self.src), jnp.asarray(self.dst),
+                jnp.asarray(self.weight),
+            )
+            self._dev_version = self._version
+        return self._dev
+
+    def snapshot_mask(self, t: int) -> np.ndarray:
+        """``(capacity,) bool``: resident edges present in log snapshot ``t``."""
+        mask = np.zeros(self.capacity, bool)
+        res = self.valid
+        mask[res] = self.view.snapshot_mask(t)[self.slot_edge[res]]
+        return mask
 
 
 # ==========================================================================

@@ -1,4 +1,5 @@
-from repro.graph.structures import EdgeList, EvolvingGraph, CSR
+from repro.graph.structures import EdgeList, EvolvingGraph, CSR, build_evolving_graph
+from repro.graph.stream import SnapshotLog, WindowView, SlideDiff
 from repro.graph.generators import (
     generate_rmat,
     generate_evolving_stream,
@@ -11,6 +12,10 @@ __all__ = [
     "EdgeList",
     "EvolvingGraph",
     "CSR",
+    "build_evolving_graph",
+    "SnapshotLog",
+    "WindowView",
+    "SlideDiff",
     "generate_rmat",
     "generate_evolving_stream",
     "generate_uniform_weights",

@@ -1,0 +1,445 @@
+"""Streaming snapshot substrate: append-only delta log + sliding window views.
+
+The batch structures in :mod:`repro.graph.structures` freeze a *fixed* window
+of snapshots into one :class:`EvolvingGraph`.  A serving system sees the
+opposite regime — snapshots arrive continuously and old ones retire — so this
+module provides the streaming counterpart:
+
+* :class:`SnapshotLog` — an append-only log of snapshot deltas over a growing
+  *edge universe*.  Universe ids are assigned in **append order and never
+  change** (no re-sorting on growth), so every downstream consumer — witness
+  counts, bound-parent arrays, QRS slot maps — can hold edge ids across window
+  slides.  Arrays are kept at an amortized-doubling capacity so jitted
+  consumers compile once per capacity class, not once per slide.
+* :class:`WindowView` — a sliding ``[start, start+size)`` window over a log.
+  Sliding never copies the edge arrays: the view maintains a per-edge
+  **witness-count array** (how many window snapshots contain each edge; the
+  paper's per-edge version bits, folded to a count) and updates only the
+  entries touched by the entering/retiring snapshots.  ``witness == size``
+  is the G∩ membership test, ``witness > 0`` the G∪ test.  Each slide emits a
+  :class:`SlideDiff` that the incremental bounds/QRS layers consume
+  (:class:`repro.core.bounds.StreamingBounds`,
+  :class:`repro.core.qrs.PatchableQRS`).
+
+``WindowView.materialize()`` produces a canonical (dst-sorted, bit-packed)
+:class:`EvolvingGraph` for the current window — the reference substrate the
+streaming engine must match bit-for-bit.  Weight extrema are tracked over the
+log lifetime (monotonically widening), which keeps them *safe* for both bound
+directions on every window; they coincide with per-window extrema whenever an
+edge's weight is stable across re-adds (the regime of the paper's update
+streams and of :func:`repro.graph.generators.generate_evolving_stream`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structures import EvolvingGraph, PAD_ALIGN, pack_presence
+from repro.utils.padding import pad_to, round_up
+
+STREAM_ALIGN = 1024  # universe-capacity growth quantum (compile stability)
+
+_EMPTY = np.empty(0, np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlideDiff:
+    """Universe-edge membership changes produced by one window slide.
+
+    All fields are arrays of universe edge ids (append-order, stable).  The
+    ``union_*`` / ``inter_*`` transitions are derived from the witness-count
+    array; ``wmin_shrunk`` / ``wmax_grown`` list edges whose lifetime weight
+    extrema widened during the append that produced this slide.
+    """
+
+    appended: int  # log index of the snapshot that entered the window
+    retired: int  # log index of the snapshot that left the window
+    union_gained: np.ndarray  # witness 0 → >0
+    union_lost: np.ndarray  # witness >0 → 0
+    inter_gained: np.ndarray  # witness <size → ==size
+    inter_lost: np.ndarray  # witness ==size → <size
+    wmin_shrunk: np.ndarray  # weight_min decreased during this append
+    wmax_grown: np.ndarray  # weight_max increased during this append
+
+    def is_empty(self) -> bool:
+        return not (
+            len(self.union_gained) or len(self.union_lost)
+            or len(self.inter_gained) or len(self.inter_lost)
+            or len(self.wmin_shrunk) or len(self.wmax_grown)
+        )
+
+
+class SnapshotLog:
+    """Append-only snapshot delta log over a growing edge universe.
+
+    Each appended snapshot is a delta ``(add_src, add_dst, add_w, del_src,
+    del_dst)`` applied to the previous snapshot (deletions first, matching
+    :func:`repro.graph.structures.build_evolving_graph` replay order); the
+    first append is the base snapshot.  The universe table assigns every
+    ``(src, dst)`` pair a stable id on first sight and tracks lifetime weight
+    extrema; per-snapshot presence is recorded as an id array, so the log is
+    O(present edges) per snapshot and never rewrites history.
+    """
+
+    def __init__(self, num_vertices: int, *, capacity: int = STREAM_ALIGN):
+        self.num_vertices = int(num_vertices)
+        self._capacity = round_up(int(capacity), STREAM_ALIGN)
+        self.src = np.zeros(self._capacity, np.int32)
+        self.dst = np.zeros(self._capacity, np.int32)
+        self.weight_min = np.zeros(self._capacity, np.float32)
+        self.weight_max = np.zeros(self._capacity, np.float32)
+        self._index: dict[int, int] = {}  # (src * V + dst) key → universe id
+        self._n_edges = 0
+        self._generation = 0  # bumped on capacity growth
+        self._tip = np.zeros(self._capacity, bool)  # presence at latest snapshot
+        self._snapshots: list[np.ndarray] = []  # per-snapshot present ids
+        self._weight_changes: list[tuple[np.ndarray, np.ndarray]] = []
+        self._weight_version = 0  # bumped when any edge's extrema widen
+        # device-side mirrors of the universe arrays; keyed on (generation,
+        # n_edges) because registration mutates the host arrays in place
+        # (jnp.asarray copies — a stale upload silently drops edges)
+        self._dev_key = None
+        self._dev: tuple = ()
+        # in-edge CSR cache (indptr, edge ids grouped by dst), keyed on n_edges
+        self._csr_n = -1
+        self._csr: tuple = ()
+
+    # -- sizes ----------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def num_edges(self) -> int:
+        """Registered universe edges (the rest of the capacity is padding)."""
+        return self._n_edges
+
+    @property
+    def num_snapshots(self) -> int:
+        return len(self._snapshots)
+
+    @property
+    def generation(self) -> int:
+        """Bumped whenever the capacity (array shapes) changes."""
+        return self._generation
+
+    @property
+    def weight_version(self) -> int:
+        """Bumped whenever any edge's lifetime weight extrema widen."""
+        return self._weight_version
+
+    # -- append ---------------------------------------------------------------
+    def append_snapshot(
+        self,
+        add_src: Sequence[int],
+        add_dst: Sequence[int],
+        add_w: Sequence[float],
+        del_src: Sequence[int] = (),
+        del_dst: Sequence[int] = (),
+    ) -> int:
+        """Apply one delta batch to the tip; returns the new snapshot's index."""
+        add_src = np.asarray(add_src, np.int64).ravel()
+        add_dst = np.asarray(add_dst, np.int64).ravel()
+        add_w = np.asarray(add_w, np.float32).ravel()
+        del_src = np.asarray(del_src, np.int64).ravel()
+        del_dst = np.asarray(del_dst, np.int64).ravel()
+        v = np.int64(self.num_vertices)
+
+        # deletions first (build_evolving_graph replay order); validate the
+        # whole batch before touching the tip so a bad delta cannot leave the
+        # log half-mutated with no snapshot recorded
+        del_ids: list[int] = []
+        seen: set[int] = set()
+        for k in (del_src * v + del_dst).tolist():
+            j = self._index.get(int(k))
+            if j is None or not self._tip[j] or j in seen:
+                raise KeyError(
+                    f"deletion of absent edge ({k // v}, {k % v}) "
+                    f"at snapshot {len(self._snapshots)}"
+                )
+            seen.add(j)
+            del_ids.append(j)
+        if del_ids:
+            self._tip[del_ids] = False
+
+        wmin_shrunk: list[int] = []
+        wmax_grown: list[int] = []
+        for k, w in zip((add_src * v + add_dst).tolist(), add_w.tolist()):
+            j = self._index.get(int(k))
+            if j is None:
+                j = self._register(int(k), np.float32(w))
+            else:
+                if w < self.weight_min[j]:
+                    self.weight_min[j] = w
+                    wmin_shrunk.append(j)
+                if w > self.weight_max[j]:
+                    self.weight_max[j] = w
+                    wmax_grown.append(j)
+            self._tip[j] = True
+
+        self._snapshots.append(np.flatnonzero(self._tip).astype(np.int32))
+        self._weight_changes.append(
+            (np.asarray(wmin_shrunk, np.int32), np.asarray(wmax_grown, np.int32))
+        )
+        if wmin_shrunk or wmax_grown:
+            self._weight_version += 1
+        return len(self._snapshots) - 1
+
+    def _register(self, key: int, w: np.float32) -> int:
+        j = self._n_edges
+        if j == self._capacity:
+            self._grow(j + 1)
+        self.src[j] = key // self.num_vertices
+        self.dst[j] = key % self.num_vertices
+        self.weight_min[j] = w
+        self.weight_max[j] = w
+        self._index[key] = j
+        self._n_edges = j + 1
+        return j
+
+    def _grow(self, needed: int):
+        new_cap = round_up(max(needed, 2 * self._capacity), STREAM_ALIGN)
+        self.src = pad_to(self.src, new_cap, 0)
+        self.dst = pad_to(self.dst, new_cap, 0)
+        self.weight_min = pad_to(self.weight_min, new_cap, 0.0)
+        self.weight_max = pad_to(self.weight_max, new_cap, 0.0)
+        self._tip = pad_to(self._tip, new_cap, False)
+        self._capacity = new_cap
+        self._generation += 1
+
+    @classmethod
+    def from_stream(cls, base, deltas, num_vertices: int, *,
+                    capacity: int = STREAM_ALIGN) -> "SnapshotLog":
+        """Build a log from ``generate_evolving_stream`` output."""
+        log = cls(num_vertices, capacity=capacity)
+        bs, bd, bw = base
+        log.append_snapshot(bs, bd, bw)
+        for add_src, add_dst, add_w, del_src, del_dst in deltas:
+            log.append_snapshot(add_src, add_dst, add_w, del_src, del_dst)
+        return log
+
+    # -- lookups --------------------------------------------------------------
+    def snapshot_edges(self, t: int) -> np.ndarray:
+        """Universe ids present in snapshot ``t`` (sorted, stable)."""
+        return self._snapshots[t]
+
+    def snapshot_mask(self, t: int) -> np.ndarray:
+        """``(capacity,) bool`` presence mask for snapshot ``t``."""
+        mask = np.zeros(self._capacity, bool)
+        mask[self._snapshots[t]] = True
+        return mask
+
+    def weight_changes(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """(wmin_shrunk ids, wmax_grown ids) recorded when ``t`` was appended."""
+        return self._weight_changes[t]
+
+    def device_edges(self):
+        """``(src, dst)`` as device arrays, re-uploaded when edges register."""
+        key = (self._generation, self._n_edges)
+        if self._dev_key != key:
+            self._dev = (jnp.asarray(self.src), jnp.asarray(self.dst))
+            self._dev_key = key
+        return self._dev
+
+    def in_edge_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """``(indptr (V+1,), ids)``: universe ids grouped by destination."""
+        if self._csr_n != self._n_edges:
+            n = self._n_edges
+            d = self.dst[:n]
+            ids = np.argsort(d, kind="stable").astype(np.int32)
+            counts = np.bincount(d, minlength=self.num_vertices)
+            indptr = np.zeros(self.num_vertices + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            self._csr = (indptr, ids)
+            self._csr_n = n
+        return self._csr
+
+    def in_edges(self, vertices: np.ndarray) -> np.ndarray:
+        """Universe ids of all edges sinking at any of ``vertices``."""
+        if len(vertices) == 0:
+            return _EMPTY
+        indptr, ids = self.in_edge_csr()
+        return np.concatenate(
+            [ids[indptr[int(v)]:indptr[int(v) + 1]] for v in vertices]
+            or [_EMPTY]
+        ).astype(np.int32)
+
+
+class WindowView:
+    """A sliding snapshot window over a :class:`SnapshotLog`.
+
+    The view shares the log's edge arrays (sliding copies nothing) and owns
+    the per-edge witness-count array for its window.  ``slide()`` advances by
+    one snapshot, updates only the touched witness entries, and records a
+    :class:`SlideDiff` in ``history`` so multiple consumers (e.g. several
+    :class:`~repro.core.api.StreamingQuery` instances sharing one view) can
+    each catch up at their own pace.
+    """
+
+    def __init__(self, log: SnapshotLog, size: Optional[int] = None, start: int = 0):
+        if log.num_snapshots == 0:
+            raise ValueError("log has no snapshots yet")
+        self.log = log
+        self.start = int(start)
+        self.size = int(size) if size is not None else log.num_snapshots - self.start
+        if self.size < 1 or self.start < 0 or self.stop > log.num_snapshots:
+            raise ValueError(
+                f"window [{self.start}, {self.stop}) out of range for "
+                f"{log.num_snapshots} snapshots"
+            )
+        self.witness = np.zeros(log.capacity, np.int32)
+        for t in range(self.start, self.stop):
+            self.witness[log.snapshot_edges(t)] += 1
+        self.history: list[SlideDiff] = []
+        self._history_offset = 0  # absolute index of history[0]
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.size
+
+    @property
+    def history_end(self) -> int:
+        """Absolute index one past the latest recorded slide."""
+        return self._history_offset + len(self.history)
+
+    def diffs_since(self, pos: int) -> list[SlideDiff]:
+        """Slides recorded at absolute positions ``[pos, history_end)``.
+
+        Raises if ``pos`` predates the pruned prefix — the consumer missed
+        diffs it can never recover and must rebuild from scratch.
+        """
+        if pos < self._history_offset:
+            raise LookupError(
+                f"slide history before position {self._history_offset} was "
+                f"pruned; consumer at {pos} must re-prime"
+            )
+        return self.history[pos - self._history_offset:]
+
+    def prune_history(self, upto: int) -> None:
+        """Drop recorded slides before absolute position ``upto``.
+
+        Long-running consumers (e.g. ``QueryBatcher.advance_window``) call
+        this with the minimum consumer watermark so history stays bounded.
+        """
+        drop = min(upto, self.history_end) - self._history_offset
+        if drop > 0:
+            del self.history[:drop]
+            self._history_offset += drop
+
+    def snapshots(self) -> range:
+        return range(self.start, self.stop)
+
+    def _sync_capacity(self):
+        if len(self.witness) != self.log.capacity:
+            self.witness = pad_to(self.witness, self.log.capacity, 0)
+
+    # -- sliding --------------------------------------------------------------
+    def slide(self) -> SlideDiff:
+        """Advance the window one snapshot: append log[stop], retire log[start]."""
+        if self.stop >= self.log.num_snapshots:
+            raise IndexError(
+                f"cannot slide: window ends at {self.stop} and the log has "
+                f"{self.log.num_snapshots} snapshots (append first)"
+            )
+        self._sync_capacity()
+        t_new, t_old = self.stop, self.start
+        new_ids = self.log.snapshot_edges(t_new)
+        old_ids = self.log.snapshot_edges(t_old)
+        touched = np.union1d(new_ids, old_ids).astype(np.int32)
+        before = self.witness[touched].copy()
+        self.witness[new_ids] += 1
+        self.witness[old_ids] -= 1
+        after = self.witness[touched]
+        s = self.size
+        wmin_shrunk, wmax_grown = self.log.weight_changes(t_new)
+        diff = SlideDiff(
+            appended=t_new,
+            retired=t_old,
+            union_gained=touched[(before == 0) & (after > 0)],
+            union_lost=touched[(before > 0) & (after == 0)],
+            inter_gained=touched[(before < s) & (after == s)],
+            inter_lost=touched[(before == s) & (after < s)],
+            wmin_shrunk=wmin_shrunk,
+            wmax_grown=wmax_grown,
+        )
+        self.start += 1
+        self.history.append(diff)
+        return diff
+
+    def slide_to_tip(self) -> list[SlideDiff]:
+        """Slide until the window ends at the log tip; returns the new diffs."""
+        out = []
+        while self.stop < self.log.num_snapshots:
+            out.append(self.slide())
+        return out
+
+    # -- masks (append-order universe ids, capacity-shaped) -------------------
+    def union_mask(self) -> np.ndarray:
+        """G∪ membership: edges present in ≥1 window snapshot."""
+        self._sync_capacity()
+        return self.witness > 0
+
+    def intersection_mask(self) -> np.ndarray:
+        """G∩ membership: edges present in every window snapshot."""
+        self._sync_capacity()
+        return self.witness == self.size
+
+    def snapshot_mask(self, t: int) -> np.ndarray:
+        """Presence mask for log snapshot ``t`` (must lie in the window)."""
+        if not (self.start <= t < self.stop):
+            raise IndexError(f"snapshot {t} outside window [{self.start}, {self.stop})")
+        return self.log.snapshot_mask(t)
+
+    def rolling_masks(self, diffs: Sequence[SlideDiff]):
+        """Yield each slide's post-slide ``(union, intersection)`` masks.
+
+        ``diffs`` must be the view's most recent consecutive slides (ending
+        in its current state) — exactly what a consumer catching up on
+        several queued slides holds.  Each intermediate slide must be folded
+        in against *its* window's graphs, not the final window's (the
+        current ``witness`` array describes only the latter); this
+        reconstructs the intermediate witness counts by undoing the recorded
+        slides and rolling forward, touching only each slide's snapshots
+        instead of rescanning the whole window per step.
+        """
+        self._sync_capacity()
+        log = self.log
+        w = self.witness.copy()
+        for d in reversed(diffs):
+            w[log.snapshot_edges(d.appended)] -= 1
+            w[log.snapshot_edges(d.retired)] += 1
+        for d in diffs:
+            w[log.snapshot_edges(d.appended)] += 1
+            w[log.snapshot_edges(d.retired)] -= 1
+            yield w > 0, w == self.size
+
+    # -- canonical reference graph -------------------------------------------
+    def materialize(self, *, pad_to_capacity: bool = True) -> EvolvingGraph:
+        """Canonical (dst-sorted, bit-packed) :class:`EvolvingGraph` of the window.
+
+        This is the reference substrate: a fresh
+        :class:`~repro.core.api.EvolvingQuery` on the materialized graph is
+        what the streaming engine must match bit-for-bit.  With
+        ``pad_to_capacity`` (default) the edge arrays are padded to the log
+        capacity so the reference path compiles once per capacity class too.
+        """
+        log = self.log
+        n = log.num_edges
+        order = np.lexsort((log.src[:n], log.dst[:n]))
+        dense = np.zeros((self.size, n), bool)
+        for i, t in enumerate(self.snapshots()):
+            dense[i, log.snapshot_edges(t)] = True
+        packed = pack_presence(dense[:, order])
+        cap = log.capacity if pad_to_capacity else round_up(n, PAD_ALIGN)
+        return EvolvingGraph(
+            src=jnp.asarray(pad_to(log.src[:n][order], cap, 0)),
+            dst=jnp.asarray(pad_to(log.dst[:n][order], cap, 0)),
+            weight_min=jnp.asarray(pad_to(log.weight_min[:n][order], cap, 0.0)),
+            weight_max=jnp.asarray(pad_to(log.weight_max[:n][order], cap, 0.0)),
+            presence=jnp.asarray(pad_to(packed, cap, 0, axis=0)),
+            num_vertices=log.num_vertices,
+            num_snapshots=self.size,
+        )

@@ -1,16 +1,24 @@
-"""Batched request schedulers: LM decode slots + evolving-graph query batching.
+"""Batched request schedulers: LM decode slots + evolving-graph query serving.
 
-``RequestScheduler`` maintains a fixed pool of B decode slots over one shared
-KV cache; incoming requests claim free slots, finished sequences (EOS or
-length cap) release them.  The jitted decode step always runs the full (B,)
-batch with a slot mask — static shapes, no recompilation — which is the
-standard TPU serving pattern (orbit/vLLM-style without paging).
+Three front-ends share this module:
 
-``QueryBatcher`` applies the same coalescing idea to vertex queries: incoming
-:class:`~repro.core.api.EvolvingQuery`-shaped requests that share a graph
-window and semiring are grouped and launched as one Q×S×V CQRS batch
-(``repro.core.baselines.run_cqrs_batch``), amortizing bounds, shared-QRS
-compaction, and the concurrent fixpoint across the group.
+* ``RequestScheduler`` — LM decoding.  Maintains a fixed pool of B decode
+  slots over one shared KV cache; incoming requests claim free slots,
+  finished sequences (EOS or length cap) release them.  The jitted decode
+  step always runs the full (B,) batch with a slot mask — static shapes, no
+  recompilation — the standard TPU serving pattern (orbit/vLLM-style without
+  paging).
+* ``QueryBatcher.submit``/``flush`` — one-shot vertex queries.  Requests that
+  share a graph window and semiring are grouped and launched as one Q×S×V
+  CQRS batch (``repro.core.baselines.run_cqrs_batch``), amortizing bounds,
+  shared-QRS compaction, and the concurrent fixpoint across the group.
+* ``QueryBatcher.watch``/``advance_window`` — standing queries over a
+  *sliding* window.  Each watched (query, source) keeps a warm
+  :class:`~repro.core.api.StreamingQuery` (bounds + witness parents +
+  patched QRS + cached rows) on a shared
+  :class:`~repro.graph.stream.WindowView`; ``advance_window`` appends a
+  snapshot delta, slides the shared view once, and advances every watcher
+  incrementally instead of re-evaluating their windows from scratch.
 """
 from __future__ import annotations
 
@@ -140,6 +148,7 @@ class QueryBatcher:
         self.method = method
         self.queue: deque[QueryRequest] = deque()
         self._uid = itertools.count()
+        self._streams: dict[tuple, object] = {}  # warm StreamingQuery state
 
     def submit(
         self,
@@ -204,3 +213,54 @@ class QueryBatcher:
             self.queue.extend(r for r in submitted if not r.done)
             raise
         return submitted
+
+    # -- sliding-window serving (warm per-(window, query) state) ------------
+    def watch(self, view, query: str, source: int, *, method: Optional[str] = None):
+        """Register a standing query on a shared sliding window.
+
+        Returns the warm :class:`~repro.core.api.StreamingQuery` (idempotent:
+        watching the same (view, query, source, method) again returns the
+        existing instance with its state intact).  ``method`` defaults to the
+        batcher's method when it is a streaming engine, else ``"cqrs"``.
+        """
+        from repro.core.api import StreamingQuery
+
+        method = method or (
+            self.method if self.method in ("cqrs", "cqrs_ell") else "cqrs"
+        )
+        key = (id(view), str(query), int(source), method)
+        sq = self._streams.get(key)
+        if sq is None:
+            sq = StreamingQuery(view, str(query), int(source), method=method)
+            sq.results  # prime eagerly: pay the cold solve before traffic
+            self._streams[key] = sq
+        return sq
+
+    def watching(self, view=None) -> list:
+        """Warm streaming queries (optionally restricted to one view)."""
+        return [sq for sq in self._streams.values()
+                if view is None or sq.view is view]
+
+    def advance_window(self, view, delta=None) -> dict:
+        """Append ``delta`` to the view's log, slide, advance every watcher.
+
+        The shared view slides exactly once per appended snapshot; each
+        watcher folds the slide diff into its warm bounds/QRS state and
+        evaluates only the appended snapshot.  Returns
+        ``{(query, source): (S, V) results}`` for the watchers on ``view``.
+        (A (query, source) watched under both engine methods yields one
+        entry — both engines are bit-for-bit identical by contract.)
+
+        Slide history consumed by every watcher is pruned from the shared
+        view afterwards, so long-running serving loops stay bounded.
+        """
+        if delta is not None:
+            view.log.append_snapshot(*delta)
+        view.slide_to_tip()
+        watchers = self.watching(view)
+        out = {
+            (sq.semiring.name, sq.source): sq.advance() for sq in watchers
+        }
+        if watchers:
+            view.prune_history(min(sq.diff_pos for sq in watchers))
+        return out

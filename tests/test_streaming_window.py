@@ -1,0 +1,335 @@
+"""Streaming window subsystem: slide-equivalence, witness trims, QRS patching.
+
+The core contract: ``StreamingQuery.advance()`` over K successive slides is
+**bit-for-bit** equal to a fresh ``EvolvingQuery`` on each slid window's
+materialized graph, for both the flat-XLA (``cqrs``) and Pallas/ELL
+(``cqrs_ell``) engines — monotone fixpoints are unique, so warm incremental
+state must land on exactly the same floats.
+
+Also covered: the retire path where the retired snapshot was the *sole
+witness* of a bound (the witness-count trim must fire), safe-weight widening
+on an appended snapshot (the G∩-weight-worsens-as-deletion path), patched-QRS
+equivalence to a fresh ``build_qrs``, universe capacity growth under a live
+query, and the ``QueryBatcher.advance_window`` warm-state serving hook.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.api import EvolvingQuery, StreamingQuery
+from repro.core.bounds import compute_bounds
+from repro.core.qrs import build_qrs
+from repro.core.semiring import SEMIRINGS
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.serving.scheduler import QueryBatcher
+from _prop import given, settings, st
+
+V = 48
+WINDOW = 3
+NO_DELTA = ((), (), (), (), ())
+
+
+def make_stream(seed: int, *, num_snapshots: int = WINDOW + 3, batch_size: int = 20):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return generate_evolving_stream(
+        src, dst, w, V, num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=0.4, seed=seed + 2,
+    )
+
+
+def make_log(seed: int, *, capacity: int = 512):
+    """Log primed with WINDOW snapshots; returns (log, remaining deltas)."""
+    base, deltas = make_stream(seed)
+    log = SnapshotLog(V, capacity=capacity)
+    log.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+    return log, deltas[WINDOW - 1:]
+
+
+def fresh_eval(view, query: str, source: int) -> np.ndarray:
+    return EvolvingQuery(view.materialize(), query, source).evaluate("cqrs")
+
+
+# -------------------------------------------------------------------- slides
+@pytest.mark.parametrize("query", ["sssp", "sswp", "ssnp"])
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_k_slides_match_fresh(query, method):
+    log, pending = make_log(seed=0)
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQuery(view, query, 0, method=method)
+    np.testing.assert_array_equal(sq.results, fresh_eval(view, query, 0))
+    for k, delta in enumerate(pending):
+        got = sq.advance(delta)
+        np.testing.assert_array_equal(
+            got, fresh_eval(view, query, 0),
+            err_msg=f"{query}/{method} diverged at slide {k}",
+        )
+    assert sq.stats["slides"] == len(pending)
+    assert sq.stats["method"] == f"stream[{method}]"
+
+
+@settings(max_examples=6)
+@given(
+    seed=st.integers(0, 10_000),
+    query=st.sampled_from(["bfs", "sssp", "viterbi"]),
+    source=st.integers(0, V - 1),
+)
+def test_stream_advance_property(seed, query, source):
+    """Seed-swept: K successive advances ≡ fresh evaluation on each window."""
+    log, pending = make_log(seed=seed)
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQuery(view, query, source)
+    np.testing.assert_array_equal(sq.results, fresh_eval(view, query, source))
+    for delta in pending[:2]:
+        np.testing.assert_array_equal(
+            sq.advance(delta), fresh_eval(view, query, source)
+        )
+
+
+def test_multi_slide_catch_up_in_one_advance():
+    """Appending several snapshots then advancing once must equal stepwise."""
+    log, pending = make_log(seed=7)
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0)
+    sq.results
+    for delta in pending:  # queue everything, no advance in between
+        log.append_snapshot(*delta)
+    got = sq.advance()
+    np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+    assert sq.stats["advanced"] == len(pending)
+    # warm state stays coherent for further single slides
+    got = sq.advance(([1, 2], [0, 3], [2.5, 1.25], [], []))  # add-only delta
+    np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+
+
+def test_advance_is_idempotent_without_new_snapshots():
+    log, pending = make_log(seed=1)
+    sq = StreamingQuery(WindowView(log, size=WINDOW), "sssp", 0)
+    first = sq.advance(pending[0])
+    again = sq.advance()  # nothing new appended
+    np.testing.assert_array_equal(first, again)
+    assert sq.stats["advanced"] == 0
+
+
+# ------------------------------------------------------- witness-trim paths
+def test_retire_path_sole_witness():
+    """Retiring the only snapshot witnessing a bound must trigger the trim.
+
+    Snapshot 0 alone contains 0→1 (w=1); its retirement drops the edge from
+    G∪, so val_cup[1] (and, transitively through 1→3, val_cup[3]) must worsen
+    to the 0→2→1 detour — caught only if the witness-count trim invalidates
+    the parent chains rooted at the dropped edge.
+    """
+    log = SnapshotLog(5, capacity=64)
+    log.append_snapshot([0, 0, 2, 1], [1, 2, 1, 3], [1.0, 4.0, 4.0, 1.0])
+    log.append_snapshot([], [], [], [0], [1])  # snapshot 1: delete 0→1
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, "sssp", 0)
+    before = np.asarray(sq.bounds.val_cup).copy()
+    assert before[1] == 1.0 and before[3] == 2.0
+
+    got = sq.advance(NO_DELTA)  # window [0,2) → [1,3): snapshot 0 retires
+    np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+    after = np.asarray(sq.bounds.val_cup)
+    assert after[1] == 8.0 and after[3] == 9.0  # both bounds actually worsened
+    ref = compute_bounds(view.materialize(), SEMIRINGS["sssp"], 0)
+    np.testing.assert_array_equal(after, np.asarray(ref.val_cup))
+    np.testing.assert_array_equal(
+        np.asarray(sq.bounds.val_cap), np.asarray(ref.val_cap)
+    )
+
+
+@pytest.mark.parametrize("query", ["sssp", "sswp"])
+def test_weight_widening_on_appended_snapshot(query):
+    """Re-adding a present edge with a worse weight widens the G∩ safe weight;
+    the streaming bounds must treat the old-weight edge as deleted."""
+    log = SnapshotLog(3, capacity=64)
+    worse = 9.0 if query == "sssp" else 0.5  # sssp: wmax grows; sswp: wmin shrinks
+    log.append_snapshot([0, 0, 2], [1, 2, 1], [2.0, 5.0, 3.0])
+    log.append_snapshot(NO_DELTA[0], NO_DELTA[1], NO_DELTA[2])  # snapshot 1
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, query, 0)
+    sq.results
+    # snapshot 2 re-adds 0→1 with the worse weight while it is still present
+    got = sq.advance(([0], [1], [worse], [], []))
+    np.testing.assert_array_equal(got, fresh_eval(view, query, 0))
+    ref = compute_bounds(view.materialize(), SEMIRINGS[query], 0)
+    np.testing.assert_array_equal(
+        np.asarray(sq.bounds.val_cap), np.asarray(ref.val_cap)
+    )
+
+
+def test_weight_widening_mid_catch_up():
+    """Queued slides where a later one widens extrema must not fold stale.
+
+    Regression: intermediate catch-up slides see the log's *final* lifetime
+    weights, so parents recomputed there are inconsistent with pre-widening
+    values and the widening slide's trim finds no parent to invalidate —
+    StreamingQuery must detect this and rebuild instead.
+    """
+    log = SnapshotLog(4, capacity=64)
+    log.append_snapshot([0, 0, 2, 1], [1, 2, 1, 3], [2.0, 5.0, 3.0, 1.0])
+    log.append_snapshot([], [], [])  # identical snapshot 1
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, "sssp", 0)
+    sq.results
+    log.append_snapshot([], [], [], [1], [3])       # snapshot 2: delete 1→3
+    log.append_snapshot([0], [1], [9.0], [], [])    # snapshot 3: widen 0→1
+    got = sq.advance()  # one catch-up over both queued slides
+    np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+    ref = compute_bounds(view.materialize(), SEMIRINGS["sssp"], 0)
+    np.testing.assert_array_equal(
+        np.asarray(sq.bounds.val_cap), np.asarray(ref.val_cap)
+    )
+    assert float(np.asarray(sq.bounds.val_cap)[1]) == 8.0  # 0→2→1, not stale 2.0
+
+
+# ------------------------------------------------------------- QRS patching
+def test_patched_qrs_matches_fresh_build():
+    log, pending = make_log(seed=2)
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0)
+    sq.results
+    sr = SEMIRINGS["sssp"]
+    for delta in pending:
+        sq.advance(delta)
+        mat = view.materialize()
+        b = compute_bounds(mat, sr, 0)
+        q = build_qrs(mat, b.uvv, b.val_cap, sr)
+        valid = np.asarray(q.valid)
+        fresh = set(zip(np.asarray(q.src)[valid].tolist(),
+                        np.asarray(q.dst)[valid].tolist()))
+        ids = sq.qrs.edge_ids()
+        patched = set(zip(log.src[ids].tolist(), log.dst[ids].tolist()))
+        assert patched == fresh
+        assert sq.qrs.num_edges == len(ids)
+
+
+def test_capacity_growth_under_live_query(monkeypatch):
+    """Universe growth (array-shape change) mid-stream must stay transparent."""
+    import repro.graph.stream as stream_mod
+
+    monkeypatch.setattr(stream_mod, "STREAM_ALIGN", 8)
+    base, deltas = make_stream(seed=3)
+    probe = SnapshotLog(V, capacity=8)
+    probe.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        probe.append_snapshot(*d)
+    # rebuild with capacity exactly full at prime: the first post-prime delta
+    # that registers a fresh edge forces a growth under the live query
+    log = SnapshotLog(V, capacity=probe.num_edges)
+    log.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+    cap_at_prime = log.capacity
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0)
+    sq.results
+    grew = False
+    for delta in deltas[WINDOW - 1:]:
+        got = sq.advance(delta)
+        grew |= log.capacity > cap_at_prime
+        np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+    assert grew, "test graph never grew the universe; weaken STREAM_ALIGN"
+
+
+# ------------------------------------------------------------------ serving
+def test_query_batcher_advance_window_warm_state():
+    log, pending = make_log(seed=4)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher()
+    sq1 = qb.watch(view, "sssp", 0)
+    sq2 = qb.watch(view, "bfs", 7)
+    assert qb.watch(view, "sssp", 0) is sq1  # idempotent registration
+    assert len(qb.watching(view)) == 2
+    for delta in pending:
+        out = qb.advance_window(view, delta)
+        assert set(out) == {("sssp", 0), ("bfs", 7)}
+        for (qname, s), res in out.items():
+            np.testing.assert_array_equal(res, fresh_eval(view, qname, s))
+    assert sq1.stats["slides"] == len(pending)
+    assert sq2.stats["slides"] == len(pending)
+
+
+def test_history_pruning_and_slow_consumer_rebuild():
+    """advance_window prunes consumed history; a pruned-past consumer re-primes."""
+    log, pending = make_log(seed=8)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher()
+    qb.watch(view, "sssp", 0)
+    for delta in pending[:2]:
+        qb.advance_window(view, delta)
+    assert len(view.history) == 0  # fully consumed history was pruned
+    assert view.history_end == 2
+
+    # a straggler that registered before the pruned slides must rebuild
+    straggler = StreamingQuery(view, "bfs", 3)
+    straggler._diff_pos = 0  # simulate state from before the pruning
+    straggler._bounds = object()  # non-None: forces the catch-up path
+    got = straggler.advance(pending[2])
+    np.testing.assert_array_equal(got, fresh_eval(view, "bfs", 3))
+
+
+def test_streaming_query_validation():
+    log, _ = make_log(seed=5)
+    view = WindowView(log, size=WINDOW)
+    with pytest.raises(ValueError):
+        StreamingQuery(view, "sssp", 0, method="kickstarter")
+    with pytest.raises(ValueError):
+        StreamingQuery(view, "sssp", 0, window=WINDOW + 1)
+    with pytest.raises(KeyError):
+        log.append_snapshot([], [], [], [0], [0])  # delete an absent edge
+    with pytest.raises(IndexError):
+        view.snapshot_mask(log.num_snapshots + 5)
+
+
+def test_append_snapshot_is_atomic_on_bad_deletion():
+    """A delta with one bad deletion must not half-mutate the log tip."""
+    log = SnapshotLog(4, capacity=64)
+    log.append_snapshot([0, 1], [1, 2], [1.0, 2.0])
+    before = log.snapshot_edges(0).copy()
+    with pytest.raises(KeyError):
+        log.append_snapshot([], [], [], [0, 3], [1, 2])  # 0→1 ok, 3→2 absent
+    assert log.num_snapshots == 1
+    ok = log.append_snapshot([], [], [])  # tip unchanged: 0→1 still present
+    np.testing.assert_array_equal(log.snapshot_edges(ok), before)
+
+
+def test_private_view_history_is_pruned():
+    """A StreamingQuery built from a log owns its view and prunes history."""
+    log, pending = make_log(seed=9)
+    sq = StreamingQuery(log, "sssp", 0, window=WINDOW)
+    sq.results
+    for delta in pending:
+        sq.advance(delta)
+    assert len(sq.view.history) == 0  # consumed-and-owned → pruned
+    assert sq.view.history_end == len(pending)
+
+
+def test_log_from_stream_roundtrip():
+    base, deltas = make_stream(seed=6)
+    log = SnapshotLog.from_stream(base, deltas, V)
+    assert log.num_snapshots == len(deltas) + 1
+    view = WindowView(log)  # whole-log window
+    from repro.graph.structures import build_evolving_graph
+
+    ref = build_evolving_graph(*base, deltas, V)
+    mat = view.materialize(pad_to_capacity=False)
+    # same universe (the log keeps every edge ever seen; so does build_*)
+    assert mat.num_snapshots == ref.num_snapshots
+    np.testing.assert_array_equal(
+        np.asarray(mat.presence_dense()).sum(axis=1),
+        np.asarray(ref.presence_dense()).sum(axis=1),
+    )
+    res = EvolvingQuery(mat, "sssp", 0).evaluate("cqrs")
+    np.testing.assert_array_equal(
+        res, EvolvingQuery(ref, "sssp", 0).evaluate("cqrs")
+    )
