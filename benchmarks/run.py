@@ -199,9 +199,10 @@ def bench_evolving_stream(fast: bool):
     timing, which is conservative in the streaming path's favor).  Results
     are asserted bit-for-bit equal every slide, and the median per-slide
     speedup is asserted ≥ 1.5× in full mode (the window-64 acceptance
-    criterion; ~5× measured).  Fast/CI mode uses a smaller window and a
-    looser 1.2× floor so a noisy shared runner cannot fail the job without
-    a real regression (~7× measured at window 16).
+    criterion; 1.7–2.7× measured with the acyclic-parent-forest trim).
+    Fast/CI mode uses a smaller window and a looser 1.2× floor so a noisy
+    shared runner cannot fail the job without a real regression (~2.8×
+    measured at window 16).
     """
     from repro.core.api import EvolvingQuery, StreamingQuery
     from repro.graph.generators import (

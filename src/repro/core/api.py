@@ -328,7 +328,9 @@ class StreamingQuery:
                 pending, view.rolling_masks(pending)
             ):
                 steps += self._bounds.apply_slide(diff, inter, union)
-                ps = self._qrs.apply_slide(diff, np.asarray(self._bounds.uvv))
+                ps = self._qrs.apply_slide(
+                    diff, np.asarray(self._bounds.uvv), union_mask=union
+                )
                 for key in ("qrs_entered", "qrs_left", "qrs_touched"):
                     patch_stats[key] = patch_stats.get(key, 0) + ps[key]
                 patch_stats["qrs_edges"] = ps["qrs_edges"]

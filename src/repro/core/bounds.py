@@ -178,7 +178,11 @@ class StreamingBounds:
     :func:`~repro.core.engine.compute_parents` chain crosses an edge whose
     witness count made the fatal transition — are invalidated and re-relaxed
     (:func:`~repro.core.engine.invalidate_from_deletions`); everyone else's
-    bound is provably unchanged-or-refinable in place.  Lifetime weight-extrema
+    bound is provably unchanged-or-refinable in place.  Soundness of the trim
+    rests on the parent forest being acyclic (``compute_parents`` levels the
+    achieving subgraph by BFS depth so chains strictly descend to the source
+    — an equal-value cycle under a non-strict ``extend`` cannot record its
+    members as each other's parents and outlive its real support edge).  Lifetime weight-extrema
     widening is folded into the same machinery: the G∩ safe weight can only
     worsen (treated as a deletion of the old-weight edge), the G∪ safe weight
     can only improve (plain monotone re-relaxation).

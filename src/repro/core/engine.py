@@ -25,6 +25,10 @@ import jax.numpy as jnp
 
 from repro.core.semiring import Semiring
 
+# compute_parents sentinel: the vertex holds a non-identity value but no
+# acyclic achieving chain to the source was found — every trim must reset it
+PARENT_FRAGILE = -2
+
 
 @functools.partial(
     jax.jit, static_argnames=("sr", "num_vertices", "max_iters", "sorted_edges")
@@ -120,21 +124,63 @@ def compute_parents(
     num_vertices: int,
     sorted_edges: bool = True,
 ) -> jax.Array:
-    """Per-vertex parent edge id achieving the converged value (-1 if none).
+    """Per-vertex parent edge id achieving the converged value.
+
+    Returns ``(V,) int32``: an edge id, ``-1`` for vertices with no
+    dependence (the source and identity-valued vertices), or
+    :data:`PARENT_FRAGILE` for vertices whose value has no acyclic witness.
 
     The parent edge is the dependence the KickStarter baseline (and the
     streaming bounds maintenance) trims on deletion: a vertex value is
-    trusted only while its parent chain survives.
+    trusted only while its parent chain survives.  That argument is only
+    sound if parent chains are acyclic, and with a non-strict ``extend``
+    (sswp/ssnp clamp at the bottleneck, viterbi at w=1) an equal-value
+    cycle can have *every* cycle edge achieving — picking an arbitrary
+    achieving edge would let cycle vertices record each other as parents,
+    so deleting their real support edge invalidates nothing and a stale
+    value survives monotone re-relaxation.  Parents are therefore drawn
+    from the shortest achieving-path forest: a BFS over achieving edges
+    levels every vertex (source = 0) and only level-(L-1) → level-L edges
+    qualify, so chains strictly descend in level and terminate at the
+    source.  At a true fixpoint every non-identity vertex lies on an
+    achieving path from the source (the optimal path is one), hence gets a
+    finite level; any vertex the BFS cannot reach is defensively marked
+    :data:`PARENT_FRAGILE` so :func:`invalidate_from_deletions` always
+    resets it (conservative, and monotone re-relaxation recovers it).
     """
     num_edges = src.shape[0]
     cand = sr.extend(values[src], weight)
     achieving = valid & (cand == values[dst]) & (values[dst] != jnp.float32(sr.identity))
-    eid = jnp.where(achieving, jnp.arange(num_edges, dtype=jnp.int32), num_edges)
+
+    unreached = jnp.int32(num_vertices + 1)
+    level0 = jnp.full((num_vertices,), unreached, jnp.int32).at[source].set(0)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        level, _ = state
+        cand_lvl = jnp.where(
+            achieving & (level[src] < unreached), level[src] + 1, unreached
+        )
+        upd = jax.ops.segment_min(
+            cand_lvl, dst, num_vertices, indices_are_sorted=sorted_edges
+        )
+        new = jnp.minimum(level, upd)
+        return new, jnp.any(new != level)
+
+    level, _ = jax.lax.while_loop(cond, body, (level0, jnp.bool_(True)))
+
+    on_forest = achieving & (level[src] + 1 == level[dst])
+    eid = jnp.where(on_forest, jnp.arange(num_edges, dtype=jnp.int32), num_edges)
     parent = jax.ops.segment_min(
         eid, dst, num_vertices, indices_are_sorted=sorted_edges
     )
     # empty segments fill with INT32_MAX; the explicit sentinel is num_edges
     parent = jnp.where(parent >= num_edges, -1, parent)
+    fragile = (values != jnp.float32(sr.identity)) & (level == unreached)
+    parent = jnp.where(fragile, jnp.int32(PARENT_FRAGILE), parent)
     # the source never depends on an edge
     return parent.at[source].set(-1)
 
@@ -152,12 +198,14 @@ def invalidate_from_deletions(
     """KickStarter-style trim: reset every vertex whose parent chain broke.
 
     ``deleted`` is an ``(E,) bool`` mask over the edge universe.  A vertex is
-    invalid if its parent edge was deleted, or (transitively) if its parent
-    edge's source became invalid.  Returns ``(values', invalid)``.
+    invalid if its parent edge was deleted, if it was marked
+    :data:`PARENT_FRAGILE` (no acyclic witness — trust nothing), or
+    (transitively) if its parent edge's source became invalid.  Returns
+    ``(values', invalid)``.
     """
     has_parent = parent >= 0
     pidx = jnp.maximum(parent, 0)
-    invalid0 = has_parent & deleted[pidx]
+    invalid0 = (has_parent & deleted[pidx]) | (parent == PARENT_FRAGILE)
     parent_src = src[pidx]
 
     def cond(state):

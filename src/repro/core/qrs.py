@@ -298,10 +298,22 @@ class PatchableQRS:
         )
 
     # -- patching -------------------------------------------------------------
-    def apply_slide(self, diff, uvv_new) -> dict:
-        """Patch the compacted edge set for one slide; returns patch stats."""
+    def apply_slide(self, diff, uvv_new, union_mask=None) -> dict:
+        """Patch the compacted edge set for one slide; returns patch stats.
+
+        ``union_mask`` is the G∪ membership mask of the window *after this
+        slide*; it defaults to the view's current mask, which is only correct
+        when ``diff`` is the view's latest slide.  A consumer catching up on
+        several queued slides must pass each intermediate window's mask
+        (``WindowView.rolling_masks``), exactly as for
+        :meth:`repro.core.bounds.StreamingBounds.apply_slide` — otherwise the
+        intermediate QRS states mix slide-``k`` membership transitions with
+        final-window residency.
+        """
         log = self.view.log
         uvv_new = np.asarray(uvv_new)
+        if union_mask is None:
+            union_mask = self.view.union_mask()
         if len(self.slot_of) != log.capacity:
             self.slot_of = pad_to(self.slot_of, log.capacity, -1)
 
@@ -311,8 +323,7 @@ class PatchableQRS:
 
         entered = left = 0
         if len(touched):
-            new_keep = (self.view.witness[touched] > 0) \
-                & ~uvv_new[log.dst[touched]]
+            new_keep = union_mask[touched] & ~uvv_new[log.dst[touched]]
             resident = self.slot_of[touched] >= 0
             leave_ids = touched[resident & ~new_keep]
             enter_ids = touched[new_keep & ~resident]

@@ -148,6 +148,28 @@ class SnapshotLog:
         del_dst = np.asarray(del_dst, np.int64).ravel()
         v = np.int64(self.num_vertices)
 
+        # validate every id up front: out-of-range ids would corrupt the
+        # src*V+dst key encoding (aliasing distinct edges), and raising after
+        # any mutation would leave the tip/extrema half-updated with no
+        # snapshot recorded
+        for kind, ids in (("add", add_src), ("add", add_dst),
+                          ("del", del_src), ("del", del_dst)):
+            if len(ids) and (ids.min() < 0 or ids.max() >= v):
+                raise ValueError(
+                    f"{kind} edge vertex id outside [0, {self.num_vertices}) "
+                    f"at snapshot {len(self._snapshots)}"
+                )
+        if len(add_src) != len(add_dst) or len(add_src) != len(add_w):
+            raise ValueError(
+                f"add arrays disagree in length at snapshot "
+                f"{len(self._snapshots)}"
+            )
+        if len(del_src) != len(del_dst):
+            raise ValueError(
+                f"del arrays disagree in length at snapshot "
+                f"{len(self._snapshots)}"
+            )
+
         # deletions first (build_evolving_graph replay order); validate the
         # whole batch before touching the tip so a bad delta cannot leave the
         # log half-mutated with no snapshot recorded
@@ -258,14 +280,24 @@ class SnapshotLog:
         return self._csr
 
     def in_edges(self, vertices: np.ndarray) -> np.ndarray:
-        """Universe ids of all edges sinking at any of ``vertices``."""
+        """Universe ids of all edges sinking at any of ``vertices``.
+
+        One fancy-index over the CSR ranges (no per-vertex Python loop) —
+        this is the :class:`~repro.core.qrs.PatchableQRS` hot path on slides
+        with many UVV flips.
+        """
         if len(vertices) == 0:
             return _EMPTY
         indptr, ids = self.in_edge_csr()
-        return np.concatenate(
-            [ids[indptr[int(v)]:indptr[int(v) + 1]] for v in vertices]
-            or [_EMPTY]
-        ).astype(np.int32)
+        v = np.asarray(vertices, np.int64).ravel()
+        starts = indptr[v]
+        counts = indptr[v + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            return _EMPTY
+        cum = np.cumsum(counts)
+        take = np.repeat(starts - (cum - counts), counts) + np.arange(total)
+        return ids[take].astype(np.int32)
 
 
 class WindowView:

@@ -33,6 +33,24 @@ def test_methods_agree_various_churn(seed):
         np.testing.assert_allclose(got, ref, rtol=1e-6, err_msg=method)
 
 
+def test_kickstarter_trims_equal_value_cycle():
+    """Regression: a sswp cycle 1↔2 whose sole support 0→1 is deleted must
+    lose its value — arbitrary achieving-edge parents would let the cycle
+    vertices justify each other and keep the stale 5.0."""
+    from repro.core.baselines import run_kickstarter
+    from repro.graph.structures import build_evolving_graph
+
+    eg = build_evolving_graph(
+        [1, 2, 0], [2, 1, 1], [9.0, 9.0, 5.0],
+        [([], [], [], [0], [1])], 5,
+    )
+    sr = SEMIRINGS["sswp"]
+    ref, _ = run_full(eg, sr, 0)
+    got, _ = run_kickstarter(eg, sr, 0)
+    np.testing.assert_array_equal(got, ref)
+    assert got[1, 1] == sr.identity and got[1, 2] == sr.identity
+
+
 def test_qrs_reduces_edges():
     """Fig. 9 analog: QRS keeps a small fraction of edges under light churn."""
     eg = make_evolving(num_vertices=256, num_edges=1500, num_snapshots=8, batch_size=30)

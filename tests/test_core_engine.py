@@ -5,7 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.engine import compute_fixpoint, compute_parents
+from repro.core.engine import (
+    PARENT_FRAGILE,
+    compute_fixpoint,
+    compute_parents,
+    invalidate_from_deletions,
+)
 from repro.core.semiring import SEMIRINGS, viterbi_weights
 from repro.graph.generators import generate_rmat, generate_uniform_weights
 from repro.graph.structures import EdgeList
@@ -65,3 +70,60 @@ def test_parents_are_achieving_edges():
     assert parent_np[0] == -1
     unreached = ~np.isfinite(vals_np)
     assert (parent_np[unreached] == -1).all()
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+@pytest.mark.parametrize("seed", [1, 4])
+def test_parent_forest_acyclic_and_complete(name, seed):
+    """Every parent chain must walk back to a dependence-free vertex.
+
+    Acyclicity is what makes the KickStarter trim sound: with a non-strict
+    ``extend`` an arbitrary achieving-edge choice can record an equal-value
+    cycle's members as each other's parents, which a chain walk exposes as
+    an infinite loop.  At a true fixpoint no vertex should need the fragile
+    fallback either.
+    """
+    sr = SEMIRINGS[name]
+    el = _random_graph(seed=seed)
+    w = el.weight if name != "viterbi" else viterbi_weights(el.weight)
+    vals, _ = compute_fixpoint(
+        el.src, el.dst, w, el.valid, sr, jnp.int32(0), el.num_vertices
+    )
+    parent = np.asarray(compute_parents(
+        vals, el.src, el.dst, w, el.valid, sr, jnp.int32(0), el.num_vertices
+    ))
+    assert (parent != PARENT_FRAGILE).all()
+    src_np = np.asarray(el.src)
+    for v in range(el.num_vertices):
+        u, hops = v, 0
+        while parent[u] >= 0:
+            u = src_np[parent[u]]
+            hops += 1
+            assert hops <= el.num_vertices, f"parent cycle through vertex {v}"
+
+
+def test_trim_breaks_equal_value_cycle():
+    """Regression: sswp cycle 1↔2 (w=9) fed by sole support 0→1 (w=5).
+
+    Both cycle vertices converge to 5 and every cycle edge is achieving, so
+    an arbitrary achieving-edge parent lets them justify each other; deleting
+    the support must still invalidate both (the BFS-levelled forest roots
+    their chains in edge 0→1).
+    """
+    sr = SEMIRINGS["sswp"]
+    src = jnp.asarray([1, 2, 0], jnp.int32)
+    dst = jnp.asarray([2, 1, 1], jnp.int32)
+    w = jnp.asarray([9.0, 9.0, 5.0], jnp.float32)
+    valid = jnp.ones(3, bool)
+    vals, _ = compute_fixpoint(src, dst, w, valid, sr, jnp.int32(0), 5,
+                               sorted_edges=False)
+    assert np.asarray(vals)[1] == 5.0 and np.asarray(vals)[2] == 5.0
+    parent = compute_parents(vals, src, dst, w, valid, sr, jnp.int32(0), 5,
+                             sorted_edges=False)
+    deleted = jnp.asarray([False, False, True])  # drop the support edge
+    trimmed, invalid = invalidate_from_deletions(
+        vals, parent, deleted, src, sr, jnp.int32(0), 5
+    )
+    assert bool(invalid[1]) and bool(invalid[2])
+    assert np.asarray(trimmed)[1] == sr.identity
+    assert np.asarray(trimmed)[2] == sr.identity

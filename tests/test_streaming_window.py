@@ -147,6 +147,32 @@ def test_retire_path_sole_witness():
     )
 
 
+@pytest.mark.parametrize("query,cycle_w", [("sswp", 9.0), ("ssnp", 1.0)])
+def test_equal_value_cycle_does_not_survive_support_deletion(query, cycle_w):
+    """Regression: an equal-value cycle must not self-justify through the trim.
+
+    With a non-strict ``extend`` (sswp's min / ssnp's max) both cycle
+    vertices hold the same value and every cycle edge is achieving, so an
+    arbitrary achieving-edge parent choice records them as each other's
+    parents; deleting their sole support edge then invalidates nothing and
+    the stale too-good value outlives monotone re-relaxation — silently
+    breaking the bit-for-bit contract.
+    """
+    log = SnapshotLog(5, capacity=64)
+    # append order fixes universe ids: cycle edges 1↔2 get ids 0/1, the
+    # support edge 0→1 (the cycle's only connection to the source) id 2
+    log.append_snapshot([1, 2, 0], [2, 1, 1], [cycle_w, cycle_w, 5.0])
+    log.append_snapshot([], [], [])
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, query, 0)
+    assert float(np.asarray(sq.results)[-1, 1]) == 5.0
+
+    got = sq.advance(([], [], [], [0], [1]))  # delete the support edge
+    np.testing.assert_array_equal(got, fresh_eval(view, query, 0))
+    ident = SEMIRINGS[query].identity
+    assert float(got[-1, 1]) == ident and float(got[-1, 2]) == ident
+
+
 @pytest.mark.parametrize("query", ["sssp", "sswp"])
 def test_weight_widening_on_appended_snapshot(query):
     """Re-adding a present edge with a worse weight widens the G∩ safe weight;
@@ -301,6 +327,36 @@ def test_append_snapshot_is_atomic_on_bad_deletion():
     assert log.num_snapshots == 1
     ok = log.append_snapshot([], [], [])  # tip unchanged: 0→1 still present
     np.testing.assert_array_equal(log.snapshot_edges(ok), before)
+
+
+def test_append_snapshot_rejects_out_of_range_ids():
+    """Out-of-range ids would alias distinct edges in the src*V+dst keying;
+    the whole delta must be rejected before any tip mutation."""
+    log = SnapshotLog(4, capacity=64)
+    log.append_snapshot([0], [1], [1.0])
+    for bad in (4, -1):
+        with pytest.raises(ValueError):
+            log.append_snapshot([bad], [0], [1.0])
+        with pytest.raises(ValueError):
+            log.append_snapshot([0], [bad], [1.0])
+        with pytest.raises(ValueError):
+            log.append_snapshot([], [], [], [bad], [1])
+    with pytest.raises(ValueError):
+        log.append_snapshot([0, 1], [2], [1.0, 1.0])  # length mismatch
+    assert log.num_snapshots == 1
+    ok = log.append_snapshot([], [], [])  # tip unchanged by the rejections
+    np.testing.assert_array_equal(log.snapshot_edges(ok), log.snapshot_edges(0))
+
+
+def test_in_edges_matches_per_vertex_slices():
+    log, _ = make_log(seed=11)
+    indptr, ids = log.in_edge_csr()
+    verts = np.asarray([0, 5, 3, V - 1, 5, 2], np.int32)
+    naive = np.concatenate(
+        [ids[indptr[int(v)]:indptr[int(v) + 1]] for v in verts]
+    ).astype(np.int32)
+    np.testing.assert_array_equal(log.in_edges(verts), naive)
+    assert log.in_edges(np.asarray([], np.int32)).size == 0
 
 
 def test_private_view_history_is_pruned():
