@@ -8,10 +8,15 @@
   kernels  — vrelax / embedding_bag / ell_agg / flash-attn op timings
   multiq   — batched (Q×S×V) multi-source CQRS vs a Q-loop of single-source
   evolving-stream — sliding-window StreamingQuery.advance() vs from-scratch
-             re-evaluation of each slid window (asserts the per-slide speedup)
+             re-evaluation of each slid window (asserts the per-slide speedup);
+             with --sharded, the dst-range-sharded SPMD advance instead: one
+             CSV row per slide, asserted bit-for-bit against the single-host
+             engine (a schedule-lowering smoke, not a CPU speed contest — run
+             under XLA_FLAGS=--xla_force_host_platform_device_count=8)
   roofline — summary of dry-run-derived roofline terms (if present)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--out CSV]
+Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+     [--sharded] [--out CSV]
 """
 from __future__ import annotations
 
@@ -260,6 +265,76 @@ def bench_evolving_stream(fast: bool):
         )
 
 
+def bench_evolving_stream_sharded(fast: bool):
+    """Per-slide sharded SPMD advance, asserted bit-for-bit vs single-host.
+
+    Emits one row per (query, slide) — the CI artifact the host-mesh job
+    uploads — with both engines' per-slide latency in the derived column.
+    The sharded path's win is the *collective schedule* it lowers (shard-local
+    scatters, one per-vertex all-gather per superstep); on a forced host mesh
+    the 8-way partitioning of a laptop-scale graph is expected to be slower
+    than the single device, so no speedup is asserted here — only exactness.
+    """
+    import jax
+
+    from repro.core.api import StreamingQuery
+    from repro.graph.generators import (
+        generate_evolving_stream, generate_rmat, generate_uniform_weights,
+    )
+    from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+    from repro.graph.stream import SnapshotLog, WindowView
+
+    # largest power-of-two shard count the host can mesh (always divides v)
+    n_shards = max(d for d in (1, 2, 4, 8) if d <= len(jax.devices()))
+    if fast:
+        v, e, s, batch, slides = 512, 4096, 8, 100, 4
+    else:
+        v, e, s, batch, slides = 2048, 16384, 16, 200, 6
+    src, dst = generate_rmat(v, e, seed=7)
+    w = generate_uniform_weights(len(src), seed=8, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, v, num_snapshots=s + slides + 2, batch_size=batch, seed=9,
+    )
+    capacity = e + (s + slides + 2) * batch
+
+    for query in (["sssp"] if fast else ["sssp", "sswp"]):
+        log = SnapshotLog(v, capacity=capacity)
+        slog = ShardedSnapshotLog(v, n_shards,
+                                  capacity=capacity // n_shards + batch)
+        log.append_snapshot(*base)
+        slog.append_snapshot(*base)
+        for d in deltas[: s - 1]:
+            log.append_snapshot(*d)
+            slog.append_snapshot(*d)
+        view = WindowView(log, size=s)
+        sview = ShardedWindowView(slog, size=s)
+        sq = StreamingQuery(view, query, 0)
+        ssq = StreamingQuery(sview, query, 0)
+        np.testing.assert_array_equal(sq.results, ssq.results)
+        sq.advance(deltas[s - 1])  # warm both advance paths
+        ssq.advance(deltas[s - 1])
+
+        shard_ts = []
+        for k, d in enumerate(deltas[s : s + slides]):
+            t0 = time.perf_counter()
+            ref = sq.advance(d)
+            t_host = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            got = ssq.advance(d)
+            t_shard = time.perf_counter() - t0
+            assert np.array_equal(got, ref), \
+                f"sharded != single-host on slide {k} ({query})"
+            shard_ts.append(t_shard)
+            emit(f"evolving-stream-sharded/{query}/slide{k}", t_shard * 1e6,
+                 f"shards={n_shards};window={s};single_host_us={t_host*1e6:.1f};"
+                 f"bit_for_bit=1")
+        emit(f"evolving-stream-sharded/{query}/S{s}_median",
+             float(np.median(shard_ts)) * 1e6,
+             f"shards={n_shards};slides={slides};"
+             f"supersteps={ssq.stats['supersteps']};"
+             f"qrs_edges={ssq.stats['qrs_edges']}")
+
+
 # ---------------------------------------------------------------- roofline
 def bench_roofline_summary(fast: bool):
     pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
@@ -284,6 +359,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sharded", action="store_true",
+                    help="run evolving-stream through the dst-range-sharded "
+                         "SPMD engine (per-slide rows, bit-for-bit asserted)")
     ap.add_argument("--out", default=None, help="also write the CSV to this path")
     args = ap.parse_args()
     benches = {
@@ -292,7 +370,10 @@ def main() -> None:
         "fig12": bench_fig12,
         "kernels": bench_kernels,
         "multiq": bench_multiq,
-        "evolving-stream": bench_evolving_stream,
+        "evolving-stream": (
+            bench_evolving_stream_sharded if args.sharded
+            else bench_evolving_stream
+        ),
         "roofline": bench_roofline_summary,
     }
     print("name,us_per_call,derived")

@@ -218,7 +218,29 @@ class StreamingQuery:
     :class:`~repro.graph.stream.WindowView`; each consumes the view's slide
     history at its own pace (see ``QueryBatcher.advance_window`` for the
     serving front-end).
+
+    Passing a dst-range-sharded stream — a
+    :class:`~repro.graph.shardlog.ShardedSnapshotLog` or
+    :class:`~repro.graph.shardlog.ShardedWindowView` — constructs a
+    :class:`~repro.distributed.stream_shard.ShardedStreamingQuery` instead:
+    the same ``advance()`` contract (and bit-for-bit identical results),
+    with bounds maintenance and per-snapshot evaluation dispatched through
+    the ``shard_map`` SPMD path (one all-gather of per-vertex state per
+    superstep; every scatter shard-local).
     """
+
+    def __new__(cls, stream=None, *args, **kwargs):
+        if cls is StreamingQuery:
+            from repro.graph.shardlog import (
+                ShardedSnapshotLog, ShardedWindowView,
+            )
+
+            if isinstance(stream, (ShardedSnapshotLog, ShardedWindowView)):
+                # lazy: stream_shard imports this module
+                from repro.distributed.stream_shard import ShardedStreamingQuery
+
+                return super().__new__(ShardedStreamingQuery)
+        return super().__new__(cls)
 
     def __init__(
         self,
@@ -366,13 +388,21 @@ class StreamingQuery:
         )
         return self.results
 
+    def _make_bounds(self):
+        """Streaming bounds maintainer (overridden by the sharded subclass)."""
+        return StreamingBounds(self.view, self.semiring, self.source)
+
+    def _make_qrs(self):
+        """Patchable QRS layer (overridden by the sharded subclass)."""
+        return PatchableQRS(
+            self.view, np.asarray(self._bounds.uvv), self.semiring
+        )
+
     def _prime(self):
         """Cold start: full bounds + QRS build + one solve per window snapshot."""
         t0 = time.perf_counter()
-        self._bounds = StreamingBounds(self.view, self.semiring, self.source)
-        self._qrs = PatchableQRS(
-            self.view, np.asarray(self._bounds.uvv), self.semiring
-        )
+        self._bounds = self._make_bounds()
+        self._qrs = self._make_qrs()
         steps = self._bounds.supersteps
         self._rows = []
         for t in self.view.snapshots():

@@ -190,6 +190,12 @@ class StreamingBounds:
     Because monotone fixpoints are unique, the maintained ``val_cap`` /
     ``val_cup`` are bit-for-bit identical to a fresh :func:`compute_bounds`
     on the slid window's materialized graph.
+
+    This class is single-host;
+    :class:`repro.distributed.stream_shard.ShardedStreamingBounds` runs the
+    same maintenance algebra over a dst-range-sharded log under ``shard_map``
+    (scatters and trims shard-local, one per-vertex all-gather per
+    superstep) with bit-for-bit identical fixpoints.
     """
 
     def __init__(self, view, sr: Semiring, source: int):

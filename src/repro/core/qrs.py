@@ -245,6 +245,12 @@ class PatchableQRS:
     Slot order is arbitrary (engine calls must pass ``sorted_edges=False``);
     the resident edge *set* is asserted identical to a fresh :func:`build_qrs`
     in the test suite.
+
+    On the dst-range-sharded streaming path the same Algorithm-1 keep rule
+    is evaluated as per-shard masks over slide-stable stacked shapes instead
+    of compacted slots — see
+    :class:`repro.distributed.stream_shard.ShardedQRSMask` (``uvv[dst]`` only
+    reads shard-owned destinations, so patching stays shard-local).
     """
 
     def __init__(self, view, uvv, sr: Semiring, *, align: int = PAD_ALIGN):

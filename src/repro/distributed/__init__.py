@@ -4,10 +4,20 @@ from repro.distributed.partitioning import (
     shard_logical,
     sharding_for,
 )
+from repro.distributed.stream_shard import (
+    ShardedQRSMask,
+    ShardedStreamingBounds,
+    ShardedStreamingQuery,
+    host_mesh,
+)
 
 __all__ = [
     "LOGICAL_RULES",
     "logical_to_spec",
     "shard_logical",
     "sharding_for",
+    "ShardedQRSMask",
+    "ShardedStreamingBounds",
+    "ShardedStreamingQuery",
+    "host_mesh",
 ]

@@ -1,0 +1,525 @@
+"""SPMD sliding-window serving: sharded streaming bounds + query (shard_map).
+
+Device-side counterpart of :mod:`repro.graph.shardlog`.  The host structures
+partition the edge universe by dst range; this module runs the streaming
+maintenance passes (:class:`~repro.core.bounds.StreamingBounds`'s monotone
+re-relaxations, KickStarter-style parent trims, and the per-snapshot
+incremental evaluation) as ``shard_map`` programs over a 1-D ``model`` mesh
+with shard ``s`` owning vertices ``[s * v_local, (s+1) * v_local)`` and all
+edges sinking there — the :func:`repro.distributed.evolve` layout.
+
+Communication contract (the §Roofline invariant, asserted by
+``tests/_stream_shard_checks.py`` against the lowered HLO):
+
+* the segment-reduce **scatter is shard-local by construction** (every edge's
+  dst lives on its own shard), and so are the witness-count updates, QRS keep
+  rules, and parent selections that feed it;
+* per superstep exactly **one all-gather of the per-vertex state** (values /
+  BFS levels / invalid flags — all "source-value" gathers in the paper's
+  sense) crosses shards, plus the scalar convergence ``psum`` every
+  while-body also carries in :func:`distributed_concurrent_fixpoint`.
+
+The maintained fixpoints are **bit-for-bit** identical to the single-host
+:class:`~repro.core.api.StreamingQuery`: min/max segment reductions are
+order-exact, ``extend`` is elementwise, and both engines run the same
+superstep sequence — so partitioning changes which device computes a float,
+never the float.  A host-mesh fallback
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) makes the whole
+subsystem testable in CI.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.api import StreamingQuery
+from repro.core.bounds import BoundsResult, detect_uvv
+from repro.core.engine import PARENT_FRAGILE
+from repro.core.semiring import Semiring
+from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+from repro.utils.padding import pad_to
+
+MODEL_AXIS = "model"
+
+
+def host_mesh(n_shards: int, axis_name: str = MODEL_AXIS) -> Mesh:
+    """1-D mesh over the first ``n_shards`` local devices.
+
+    On a development host, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+    initializes to fake an 8-device mesh on CPU (the CI pattern).
+    """
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise RuntimeError(
+            f"need {n_shards} devices for {n_shards} shards but only "
+            f"{len(devices)} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} before jax "
+            f"initializes (or shard the log to fewer shards)"
+        )
+    return Mesh(np.asarray(devices[:n_shards]), (axis_name,))
+
+
+@functools.lru_cache(maxsize=None)
+def _kernels(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
+             model_axis: str):
+    """shard_map maintenance kernels, compiled once per (mesh, semiring,
+    vertex count, per-shard capacity class).
+
+    All edge arrays are flat ``(n_shards * e_cap,)`` stacks
+    (:meth:`ShardedSnapshotLog.stacked_arrays`); per-vertex state is ``(V,)``
+    split by vertex range.  Inside the shard body every index is local:
+    ``dst_local`` scatters into the shard's own ``v_local`` segment, and
+    parent edge ids index the shard's own ``e_cap`` slice.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    ax = model_axis
+    n_shards = int(mesh.shape[ax])
+    if num_vertices % n_shards:
+        raise ValueError(
+            f"num_vertices {num_vertices} must be divisible by the "
+            f"{n_shards} mesh shards"
+        )
+    v_local = num_vertices // n_shards
+    identity = jnp.float32(sr.identity)
+    limit = num_vertices + 1
+    unreached = jnp.int32(num_vertices + 1)
+
+    def local_vertex_ids():
+        return (jnp.arange(v_local, dtype=jnp.int32)
+                + jax.lax.axis_index(ax) * v_local)
+
+    def fixpoint_body(values_l, src, dst_local, weight, active):
+        # Monotone relaxation from values_l (conservative ⇒ exact; identical
+        # supersteps to repro.core.engine._fixpoint, so identical floats).
+        def relax(vals_l):
+            vals_full = jax.lax.all_gather(vals_l, ax, axis=0, tiled=True)
+            cand = sr.extend(vals_full[src], weight)  # source-value gather
+            cand = jnp.where(active, cand, identity)
+            upd = sr.segment_reduce(  # scatter: shard-local by construction
+                cand, dst_local, v_local, indices_are_sorted=False
+            )
+            return sr.improve(vals_l, upd)
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < limit)
+
+        def body(state):
+            vals, _, it = state
+            new = relax(vals)
+            changed = jax.lax.psum(
+                jnp.any(new != vals).astype(jnp.int32), ax
+            ) > 0
+            return new, changed, it + 1
+
+        vals, _, iters = jax.lax.while_loop(
+            cond, body, (values_l, jnp.bool_(True), jnp.int32(0))
+        )
+        return vals, iters
+
+    def parents_body(values_l, src, dst_local, weight, active, source):
+        # Shard-local port of repro.core.engine.compute_parents: BFS levels
+        # over the achieving subgraph (gathered per superstep), parents drawn
+        # from level-(L-1)→L edges only, so chains strictly descend — the
+        # same acyclicity argument, with parent ids in shard-local edge space.
+        vals_full = jax.lax.all_gather(values_l, ax, axis=0, tiled=True)
+        cand = sr.extend(vals_full[src], weight)
+        achieving = (active & (cand == values_l[dst_local])
+                     & (values_l[dst_local] != identity))
+        local_ids = local_vertex_ids()
+        level0 = jnp.where(local_ids == source, 0, unreached).astype(jnp.int32)
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            level, _ = state
+            lvl_full = jax.lax.all_gather(level, ax, axis=0, tiled=True)
+            cand_lvl = jnp.where(
+                achieving & (lvl_full[src] < unreached),
+                lvl_full[src] + 1, unreached,
+            )
+            upd = jax.ops.segment_min(
+                cand_lvl, dst_local, v_local, indices_are_sorted=False
+            )
+            new = jnp.minimum(level, upd)
+            changed = jax.lax.psum(
+                jnp.any(new != level).astype(jnp.int32), ax
+            ) > 0
+            return new, changed
+
+        level, _ = jax.lax.while_loop(cond, body, (level0, jnp.bool_(True)))
+        lvl_full = jax.lax.all_gather(level, ax, axis=0, tiled=True)
+        on_forest = achieving & (lvl_full[src] + 1 == level[dst_local])
+        eid = jnp.where(on_forest, jnp.arange(e_cap, dtype=jnp.int32), e_cap)
+        parent = jax.ops.segment_min(
+            eid, dst_local, v_local, indices_are_sorted=False
+        )
+        parent = jnp.where(parent >= e_cap, -1, parent)
+        fragile = (values_l != identity) & (level == unreached)
+        parent = jnp.where(fragile, jnp.int32(PARENT_FRAGILE), parent)
+        return jnp.where(local_ids == source, -1, parent)
+
+    def invalidate_body(values_l, parent_l, deleted, src, source):
+        # Shard-local port of repro.core.engine.invalidate_from_deletions:
+        # a vertex's parent edge sinks at it, hence lives on its own shard;
+        # only the transitive invalid flags are gathered.
+        has_parent = parent_l >= 0
+        pidx = jnp.maximum(parent_l, 0)
+        invalid0 = (has_parent & deleted[pidx]) | (parent_l == PARENT_FRAGILE)
+        parent_src = src[pidx]  # global vertex ids
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            invalid, _ = state
+            inv_full = jax.lax.all_gather(invalid, ax, axis=0, tiled=True)
+            nxt = invalid | (has_parent & inv_full[parent_src])
+            changed = jax.lax.psum(
+                jnp.any(nxt != invalid).astype(jnp.int32), ax
+            ) > 0
+            return nxt, changed
+
+        invalid, _ = jax.lax.while_loop(
+            cond, body, (invalid0, jnp.bool_(True))
+        )
+        new_values = jnp.where(invalid, identity, values_l)
+        new_values = jnp.where(
+            local_vertex_ids() == source, jnp.float32(sr.source), new_values
+        )
+        return new_values, invalid
+
+    e = P(ax)  # flat per-shard stacks / vertex-range splits
+    r = P()  # replicated scalars
+    fixpoint = jax.jit(shard_map(
+        fixpoint_body, mesh=mesh,
+        in_specs=(e, e, e, e, e), out_specs=(e, r), check_rep=False,
+    ))
+    parents = jax.jit(shard_map(
+        parents_body, mesh=mesh,
+        in_specs=(e, e, e, e, e, r), out_specs=e, check_rep=False,
+    ))
+    invalidate = jax.jit(shard_map(
+        invalidate_body, mesh=mesh,
+        in_specs=(e, e, e, e, r), out_specs=(e, e), check_rep=False,
+    ))
+    return {"fixpoint": fixpoint, "parents": parents, "invalidate": invalidate}
+
+
+class ShardedStreamingBounds:
+    """Sharded drop-in for :class:`~repro.core.bounds.StreamingBounds`.
+
+    Same maintenance algebra — monotone re-relax where G∩/G∪ grew,
+    witness-parent trims where they shrank, G∩ weight widening treated as
+    deletion — but every pass runs shard-locally under ``shard_map`` with one
+    per-superstep all-gather of the per-vertex state.  ``apply_slide``
+    consumes a :class:`~repro.graph.shardlog.ShardSlideDiff` (per-shard ids)
+    and per-shard mask lists; ``val_cap``/``val_cup`` remain global ``(V,)``
+    arrays (device-sharded by vertex range), bit-for-bit equal to the
+    single-host maintenance.
+    """
+
+    def __init__(self, view: ShardedWindowView, sr: Semiring, source: int,
+                 mesh: Optional[Mesh] = None, *, model_axis: str = MODEL_AXIS):
+        self.view = view
+        self.sr = sr
+        self.mesh = mesh if mesh is not None else host_mesh(
+            view.log.n_shards, model_axis
+        )
+        if int(self.mesh.shape[model_axis]) != view.log.n_shards:
+            raise ValueError(
+                f"mesh axis {model_axis!r} has "
+                f"{int(self.mesh.shape[model_axis])} devices but the log has "
+                f"{view.log.n_shards} shards"
+            )
+        self.model_axis = model_axis
+        self.source = jnp.int32(int(source))
+        self.supersteps = 0
+        self._dev_key = None
+        self._dev: dict = {}
+        self._full_init()
+
+    # -- device-side stacked arrays -------------------------------------------
+    def _kernels(self):
+        return _kernels(self.mesh, self.sr, self.view.log.num_vertices,
+                        self.view.log.capacity, self.model_axis)
+
+    def _device(self) -> dict:
+        """Stacked edge arrays + safe weights, re-uploaded only when stale."""
+        log = self.view.log
+        arrs = log.stacked_arrays()
+        key = (log.state_key(), arrs["e_cap"])
+        if self._dev_key != key:
+            sr = self.sr
+            self._dev = {
+                "src": jnp.asarray(arrs["src"]),
+                "dst_local": jnp.asarray(arrs["dst_local"]),
+                "w_cap": jnp.asarray(sr.intersection_weight(
+                    arrs["weight_min"], arrs["weight_max"])),
+                "w_cup": jnp.asarray(sr.union_weight(
+                    arrs["weight_min"], arrs["weight_max"])),
+            }
+            self._dev_key = key
+        return self._dev
+
+    def _stack(self, per_shard_masks) -> jax.Array:
+        return jnp.asarray(self.view.log.stack_masks(per_shard_masks))
+
+    # -- full solve (cold start) ----------------------------------------------
+    def _full_init(self):
+        sr, v = self.sr, self.view.log.num_vertices
+        dev, k = self._device(), self._kernels()
+        inter = self._stack(self.view.intersection_masks())
+        union = self._stack(self.view.union_masks())
+        boot = np.full(v, sr.identity, np.float32)
+        boot[int(self.source)] = np.float32(sr.source)
+        self.val_cap, it_cap = k["fixpoint"](
+            jnp.asarray(boot), dev["src"], dev["dst_local"], dev["w_cap"], inter
+        )
+        self.val_cup, it_cup = k["fixpoint"](
+            self.val_cap, dev["src"], dev["dst_local"], dev["w_cup"], union
+        )
+        self.parent_cap = k["parents"](
+            self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"], inter,
+            self.source,
+        )
+        self.parent_cup = k["parents"](
+            self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"], union,
+            self.source,
+        )
+        self.supersteps += int(it_cap) + int(it_cup)
+
+    # -- one slide ------------------------------------------------------------
+    def apply_slide(self, diff, inter_masks=None, union_masks=None) -> int:
+        """Fold one :class:`ShardSlideDiff` in; returns supersteps spent.
+
+        Masks default to the view's current per-shard masks (correct only
+        for the latest slide); multi-slide catch-up passes each intermediate
+        window's masks from :meth:`ShardedWindowView.rolling_masks`, exactly
+        as on the single-host path.
+        """
+        sr = self.sr
+        log = self.view.log
+        if inter_masks is None:
+            inter_masks = self.view.intersection_masks()
+        if union_masks is None:
+            union_masks = self.view.union_masks()
+        dev, k = self._device(), self._kernels()
+        per = diff.shards
+        steps = 0
+
+        cap_weight_worse = [
+            d.wmax_grown if sr.minimize else d.wmin_shrunk for d in per
+        ]
+        cup_weight_better = [
+            d.wmin_shrunk if sr.minimize else d.wmax_grown for d in per
+        ]
+
+        cap_drop_ids = [
+            np.concatenate([d.inter_lost, w]) for d, w in zip(per, cap_weight_worse)
+        ]
+        n_cap_drop = sum(len(a) for a in cap_drop_ids)
+        cap_changed = bool(
+            n_cap_drop
+            or any(len(d.inter_gained) for d in per)
+            or any(len(a) for a in cap_weight_worse)
+        )
+        if cap_changed:
+            inter = self._stack(inter_masks)
+            if n_cap_drop:
+                dropped = jnp.asarray(log.stack_ids(cap_drop_ids))
+                self.val_cap, _ = k["invalidate"](
+                    self.val_cap, self.parent_cap, dropped, dev["src"],
+                    self.source,
+                )
+            self.val_cap, it = k["fixpoint"](
+                self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"], inter
+            )
+            self.parent_cap = k["parents"](
+                self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
+                inter, self.source,
+            )
+            steps += int(it)
+
+        cup_drop_ids = [d.union_lost for d in per]
+        n_cup_drop = sum(len(a) for a in cup_drop_ids)
+        cup_changed = bool(
+            n_cup_drop
+            or any(len(d.union_gained) for d in per)
+            or any(len(a) for a in cup_weight_better)
+        )
+        if cup_changed:
+            union = self._stack(union_masks)
+            if n_cup_drop:
+                dropped = jnp.asarray(log.stack_ids(cup_drop_ids))
+                self.val_cup, _ = k["invalidate"](
+                    self.val_cup, self.parent_cup, dropped, dev["src"],
+                    self.source,
+                )
+            self.val_cup, it = k["fixpoint"](
+                self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"], union
+            )
+            self.parent_cup = k["parents"](
+                self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"],
+                union, self.source,
+            )
+            steps += int(it)
+
+        self.supersteps += steps
+        return steps
+
+    # -- results --------------------------------------------------------------
+    @property
+    def uvv(self) -> jax.Array:
+        return detect_uvv(self.val_cap, self.val_cup)
+
+    @property
+    def result(self) -> BoundsResult:
+        if self.sr.minimize:
+            lower, upper = self.val_cup, self.val_cap
+        else:
+            lower, upper = self.val_cap, self.val_cup
+        return BoundsResult(
+            val_cap=self.val_cap, val_cup=self.val_cup,
+            lower=lower, upper=upper, uvv=self.uvv,
+            iters_cap=jnp.int32(self.supersteps), iters_cup=jnp.int32(0),
+        )
+
+
+class ShardedQRSMask:
+    """Per-shard Algorithm-1 keep masks (the sharded stand-in for
+    :class:`~repro.core.qrs.PatchableQRS`).
+
+    The keep rule — *in G∪ and sink not UVV* — is evaluated per shard over
+    the shard's own edges (``uvv[dst]`` reads only shard-owned destinations),
+    and per-snapshot evaluation relaxes the full shard-local edge stack under
+    ``keep ∧ present`` masks instead of compacting slots: masked-out edges
+    contribute ``identity``, so the relaxed edge *set* — and therefore every
+    float — matches the single-host compacted QRS exactly, while keeping the
+    stacked shapes slide-stable (no per-slide recompaction, no cross-shard
+    traffic).
+    """
+
+    def __init__(self, view: ShardedWindowView, uvv, sr: Semiring):
+        self.view = view
+        self.sr = sr
+        self.uvv = np.asarray(uvv).copy()
+        self._keep = self._compute_keep(view.union_masks(), self.uvv)
+
+    def _compute_keep(self, union_masks, uvv) -> list[np.ndarray]:
+        keeps = []
+        for s, sh in enumerate(self.view.log.shards):
+            keep = np.asarray(union_masks[s]).copy()
+            n = sh.num_edges
+            if n:
+                keep[:n] &= ~uvv[sh.dst[:n]]
+            keeps.append(keep)
+        return keeps
+
+    @property
+    def num_edges(self) -> int:
+        return int(sum(k.sum() for k in self._keep))
+
+    def apply_slide(self, diff, uvv_new, union_mask=None) -> dict:
+        """Recompute per-shard keep masks for one slide; returns patch stats."""
+        uvv_new = np.asarray(uvv_new)
+        unions = (union_mask if union_mask is not None
+                  else self.view.union_masks())
+        new_keep = self._compute_keep(unions, uvv_new)
+        entered = left = 0
+        for old, new in zip(self._keep, new_keep):
+            m = min(len(old), len(new))  # capacity may have grown mid-queue
+            entered += int((new[:m] & ~old[:m]).sum()) + int(new[m:].sum())
+            left += int((old[:m] & ~new[:m]).sum())
+        self._keep = new_keep
+        self.uvv = uvv_new.copy()
+        return {
+            "qrs_edges": self.num_edges,
+            "qrs_entered": int(entered),
+            "qrs_left": int(left),
+            "qrs_touched": int(entered + left),
+        }
+
+    def snapshot_masks(self, t: int) -> list[np.ndarray]:
+        """Per-shard ``keep ∧ present-in-snapshot-t`` evaluation masks."""
+        out = []
+        for keep, v in zip(self._keep, self.view.views):
+            present = v.snapshot_mask(t)
+            out.append(pad_to(keep, len(present), False) & present)
+        return out
+
+
+class ShardedStreamingQuery(StreamingQuery):
+    """:class:`~repro.core.api.StreamingQuery` over a dst-range-sharded log.
+
+    Constructed automatically when ``StreamingQuery(...)`` receives a
+    :class:`~repro.graph.shardlog.ShardedSnapshotLog` or
+    :class:`~repro.graph.shardlog.ShardedWindowView`; the ``advance()``
+    control flow (multi-slide catch-up, weight-dirty row rebuilds, history
+    pruning) is inherited unchanged — only the bounds maintenance, the QRS
+    keep rule, and the per-snapshot evaluation are swapped for their
+    shard_map counterparts.  Results are bit-for-bit identical to the
+    single-host query on the same stream.
+
+    ``mesh`` defaults to a 1-D host mesh over ``n_shards`` local devices
+    (:func:`host_mesh`); only the flat-XLA ``method="cqrs"`` engine is
+    supported on the sharded path.
+    """
+
+    def __init__(self, stream, query, source: int, *,
+                 window: Optional[int] = None, method: str = "cqrs",
+                 mesh: Optional[Mesh] = None, model_axis: str = MODEL_AXIS):
+        owns_view = isinstance(stream, ShardedSnapshotLog)
+        if owns_view:
+            stream = ShardedWindowView(stream, size=window)
+        elif not isinstance(stream, ShardedWindowView):
+            raise TypeError(
+                f"ShardedStreamingQuery needs a ShardedSnapshotLog or "
+                f"ShardedWindowView, got {type(stream).__name__}"
+            )
+        elif window is not None and window != stream.size:
+            raise ValueError(
+                f"window={window} conflicts with the shared view's size "
+                f"{stream.size}"
+            )
+        if method != "cqrs":
+            raise ValueError(
+                f"sharded streaming supports method='cqrs' only, got {method!r}"
+            )
+        self.mesh = mesh if mesh is not None else host_mesh(
+            stream.log.n_shards, model_axis
+        )
+        self.model_axis = model_axis
+        super().__init__(stream, query, source, method=method)
+        self._owns_view = owns_view
+
+    # -- sharded substitutions ------------------------------------------------
+    def _make_bounds(self):
+        return ShardedStreamingBounds(
+            self.view, self.semiring, self.source, self.mesh,
+            model_axis=self.model_axis,
+        )
+
+    def _make_qrs(self):
+        return ShardedQRSMask(
+            self.view, np.asarray(self._bounds.uvv), self.semiring
+        )
+
+    def _eval_snapshot(self, t: int):
+        """Exact values for log snapshot ``t``: warm-start from R∩ over the
+        shard-local ``keep ∧ present`` masks (one shard_map launch)."""
+        bounds = self._bounds
+        dev, k = bounds._device(), bounds._kernels()
+        mask = bounds._stack(self._qrs.snapshot_masks(t))
+        vals, it = k["fixpoint"](
+            bounds.val_cap, dev["src"], dev["dst_local"], dev["w_cap"], mask
+        )
+        return np.asarray(vals), int(it)

@@ -1,5 +1,6 @@
 from repro.graph.structures import EdgeList, EvolvingGraph, CSR, build_evolving_graph
 from repro.graph.stream import SnapshotLog, WindowView, SlideDiff
+from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView, ShardSlideDiff
 from repro.graph.generators import (
     generate_rmat,
     generate_evolving_stream,
@@ -16,6 +17,9 @@ __all__ = [
     "SnapshotLog",
     "WindowView",
     "SlideDiff",
+    "ShardedSnapshotLog",
+    "ShardedWindowView",
+    "ShardSlideDiff",
     "generate_rmat",
     "generate_evolving_stream",
     "generate_uniform_weights",

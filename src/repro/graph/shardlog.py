@@ -1,0 +1,406 @@
+"""Dst-range-sharded streaming substrate: per-shard delta logs + window views.
+
+:class:`~repro.graph.stream.SnapshotLog` keeps the whole edge universe on one
+host.  The pod deployment partitions the vertex space by **dst range** —
+shard ``s`` owns vertices ``[s * v_local, (s+1) * v_local)`` and every edge
+*sinking* in that range (the layout
+:func:`repro.distributed.evolve.shard_evolving_arrays` lowers for the static
+batch engine).  This module applies the same partitioning to the streaming
+substrate:
+
+* :class:`ShardedSnapshotLog` — ``n_shards`` independent
+  :class:`~repro.graph.stream.SnapshotLog` instances.  ``append_snapshot``
+  routes each delta edge to the shard owning its destination, so universe-id
+  assignment, weight-extrema tracking, and per-snapshot presence recording
+  are **shard-local by construction**: no shard ever sees (or stores) another
+  shard's edges, matching the delta-partitioning of historical-graph stores
+  (Koloniari et al.; Khurana & Deshpande).
+* :class:`ShardedWindowView` — ``n_shards`` independent
+  :class:`~repro.graph.stream.WindowView` instances sliding in lockstep.
+  ``slide()`` emits a :class:`ShardSlideDiff` of per-shard
+  :class:`~repro.graph.stream.SlideDiff`\\ s; witness-count maintenance —
+  like appends — touches only shard-owned arrays.
+
+Because every consumer downstream of the slide diff scatters **into edge
+destinations**, all of the expensive maintenance (witness counts, QRS keep
+rules, bound trims, segment reductions) stays shard-local; only the
+source-value gather crosses shards, and that is exactly the one all-gather
+per superstep :func:`repro.distributed.stream_shard.ShardedStreamingBounds`
+issues.  The host-side structures here are mesh-free (plain numpy); the
+device-side SPMD engine lives in :mod:`repro.distributed.stream_shard`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.stream import STREAM_ALIGN, SlideDiff, SnapshotLog, WindowView
+from repro.graph.structures import EvolvingGraph, PAD_ALIGN, pack_presence
+from repro.utils.padding import pad_to, round_up
+
+_EMPTY = np.empty(0, np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSlideDiff:
+    """One window slide, as ``n_shards`` independent per-shard diffs.
+
+    ``shards[s]`` is shard ``s``'s :class:`~repro.graph.stream.SlideDiff`
+    with **shard-local** universe ids (indices into shard ``s``'s arrays).
+    The aggregate accessors below concatenate those shard-local ids and are
+    meaningful only for emptiness/length tests (``StreamingQuery.advance``
+    uses them to detect weight widening); per-shard consumers must read
+    ``shards[s]`` directly.
+    """
+
+    shards: tuple
+    appended: int  # log index of the snapshot that entered the window
+    retired: int  # log index of the snapshot that left the window
+
+    def _concat(self, field: str) -> np.ndarray:
+        return np.concatenate([getattr(d, field) for d in self.shards])
+
+    @property
+    def wmin_shrunk(self) -> np.ndarray:  # shard-local ids; lengths only
+        return self._concat("wmin_shrunk")
+
+    @property
+    def wmax_grown(self) -> np.ndarray:  # shard-local ids; lengths only
+        return self._concat("wmax_grown")
+
+    def is_empty(self) -> bool:
+        return all(d.is_empty() for d in self.shards)
+
+
+class ShardedSnapshotLog:
+    """A :class:`~repro.graph.stream.SnapshotLog` partitioned by dst range.
+
+    Shard ``s`` owns every edge whose destination lies in
+    ``[s * v_local, (s+1) * v_local)`` (``v_local = num_vertices //
+    n_shards``, the :func:`~repro.distributed.evolve.shard_evolving_arrays`
+    layout).  Each shard is a full independent :class:`SnapshotLog` over the
+    *global* vertex-id space — sources are arbitrary vertices — so all of its
+    machinery (stable append-order ids, amortized capacity, weight extrema,
+    per-snapshot presence, history compaction) is reused unchanged.
+
+    Appends are **atomic across shards**: every shard's sub-delta is
+    validated against its tip (:meth:`SnapshotLog.prepare_delta`) before any
+    shard commits, so a bad delta leaves no shard half-advanced.
+    """
+
+    def __init__(self, num_vertices: int, n_shards: int, *,
+                 capacity: int = STREAM_ALIGN):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if num_vertices % n_shards:
+            raise ValueError(
+                f"num_vertices {num_vertices} must be divisible by "
+                f"n_shards {n_shards}"
+            )
+        self.num_vertices = int(num_vertices)
+        self.n_shards = int(n_shards)
+        self.v_local = self.num_vertices // self.n_shards
+        self.shards = [
+            SnapshotLog(num_vertices, capacity=capacity)
+            for _ in range(self.n_shards)
+        ]
+        # host-side stacked-array cache (see stacked_arrays)
+        self._stack_key = None
+        self._stack: dict = {}
+
+    # -- sizes ----------------------------------------------------------------
+    @property
+    def num_snapshots(self) -> int:
+        return self.shards[0].num_snapshots
+
+    @property
+    def num_edges(self) -> int:
+        """Registered universe edges summed over shards."""
+        return sum(sh.num_edges for sh in self.shards)
+
+    @property
+    def capacity(self) -> int:
+        """Uniform per-shard slot count (max over shard capacities).
+
+        Shards grow independently; stacked device arrays pad every shard to
+        this, so jitted consumers compile once per max-capacity class.
+        """
+        return max(sh.capacity for sh in self.shards)
+
+    def state_key(self) -> tuple:
+        """Hashable fingerprint of universe/extrema state (cache key)."""
+        return tuple(
+            (sh.generation, sh.num_edges, sh.weight_version) for sh in self.shards
+        )
+
+    # -- append ---------------------------------------------------------------
+    def shard_of(self, dst) -> np.ndarray:
+        """Owning shard per destination id."""
+        return np.asarray(dst, np.int64) // self.v_local
+
+    def _route(self, src, dst, *payloads):
+        """Split ``(src, dst, *payloads)`` into per-shard tuples by dst."""
+        src = np.asarray(src, np.int64).ravel()
+        dst = np.asarray(dst, np.int64).ravel()
+        if len(dst) == 0:
+            empties = (_EMPTY,) * (2 + len(payloads))
+            return [empties] * self.n_shards
+        if dst.min() < 0 or dst.max() >= self.num_vertices:
+            raise ValueError(
+                f"dst vertex id outside [0, {self.num_vertices}) "
+                f"at snapshot {self.num_snapshots}"
+            )
+        shard = dst // self.v_local
+        out = []
+        for s in range(self.n_shards):
+            sel = shard == s
+            out.append((src[sel], dst[sel])
+                       + tuple(np.asarray(p).ravel()[sel] for p in payloads))
+        return out
+
+    def append_snapshot(
+        self,
+        add_src: Sequence[int],
+        add_dst: Sequence[int],
+        add_w: Sequence[float],
+        del_src: Sequence[int] = (),
+        del_dst: Sequence[int] = (),
+    ) -> int:
+        """Route one delta batch to its owning shards; returns snapshot index.
+
+        Shards receiving no edges still append an (empty) snapshot so
+        per-shard snapshot indices stay aligned with the global log.
+        """
+        n_add = len(np.asarray(add_src).ravel())
+        if (n_add != len(np.asarray(add_dst).ravel())
+                or n_add != len(np.asarray(add_w).ravel())):
+            raise ValueError(
+                f"add arrays disagree in length at snapshot {self.num_snapshots}"
+            )
+        if len(np.asarray(del_src).ravel()) != len(np.asarray(del_dst).ravel()):
+            raise ValueError(
+                f"del arrays disagree in length at snapshot {self.num_snapshots}"
+            )
+        adds = self._route(add_src, add_dst, add_w)
+        dels = self._route(del_src, del_dst)
+        # validate every shard's sub-delta before any shard mutates: a bad
+        # delta must not leave some shards one snapshot ahead of others
+        prepared = [
+            self.shards[s].prepare_delta(
+                adds[s][0], adds[s][1], adds[s][2], dels[s][0], dels[s][1]
+            )
+            for s in range(self.n_shards)
+        ]
+        t = -1
+        for s, p in enumerate(prepared):
+            t = self.shards[s].commit_delta(p)
+        return t
+
+    @classmethod
+    def from_stream(cls, base, deltas, num_vertices: int, n_shards: int, *,
+                    capacity: int = STREAM_ALIGN) -> "ShardedSnapshotLog":
+        """Build a sharded log from ``generate_evolving_stream`` output."""
+        log = cls(num_vertices, n_shards, capacity=capacity)
+        bs, bd, bw = base
+        log.append_snapshot(bs, bd, bw)
+        for add_src, add_dst, add_w, del_src, del_dst in deltas:
+            log.append_snapshot(add_src, add_dst, add_w, del_src, del_dst)
+        return log
+
+    # -- stacked host arrays (the shard_map feed) -----------------------------
+    def stacked_arrays(self) -> dict:
+        """Per-shard edge arrays stacked to ``(n_shards * capacity,)`` numpy.
+
+        ``src`` keeps global vertex ids (the gather side spans shards);
+        ``dst_local`` is rebased to ``[0, v_local)`` (the scatter side is
+        shard-local).  ``valid`` marks registered slots.  Re-stacked only
+        when :meth:`state_key` changes.
+        """
+        key = (self.state_key(), self.capacity)
+        if self._stack_key != key:
+            cap = self.capacity
+            n = self.n_shards
+            src = np.zeros((n, cap), np.int32)
+            dstl = np.zeros((n, cap), np.int32)
+            wmin = np.zeros((n, cap), np.float32)
+            wmax = np.zeros((n, cap), np.float32)
+            valid = np.zeros((n, cap), bool)
+            for s, sh in enumerate(self.shards):
+                k = sh.num_edges
+                src[s, :k] = sh.src[:k]
+                dstl[s, :k] = sh.dst[:k] - s * self.v_local
+                wmin[s, :k] = sh.weight_min[:k]
+                wmax[s, :k] = sh.weight_max[:k]
+                valid[s, :k] = True
+            self._stack = {
+                "src": src.reshape(-1),
+                "dst_local": dstl.reshape(-1),
+                "weight_min": wmin.reshape(-1),
+                "weight_max": wmax.reshape(-1),
+                "valid": valid.reshape(-1),
+                "e_cap": cap,
+            }
+            self._stack_key = key
+        return self._stack
+
+    def stack_masks(self, masks: Sequence[np.ndarray]) -> np.ndarray:
+        """Stack per-shard ``(shard capacity,)`` masks to one flat array.
+
+        Each shard's mask is padded with ``False`` to the uniform
+        :attr:`capacity`, matching the :meth:`stacked_arrays` layout.
+        """
+        cap = self.capacity
+        return np.stack(
+            [pad_to(np.asarray(m), cap, False) for m in masks]
+        ).reshape(-1)
+
+    def stack_ids(self, per_shard_ids: Sequence[np.ndarray]) -> np.ndarray:
+        """Scatter per-shard local-id arrays into one flat stacked bool mask."""
+        cap = self.capacity
+        mask = np.zeros(self.n_shards * cap, bool)
+        for s, ids in enumerate(per_shard_ids):
+            if len(ids):
+                mask[s * cap + np.asarray(ids, np.int64)] = True
+        return mask
+
+
+class ShardedWindowView:
+    """Lockstep sliding windows over a :class:`ShardedSnapshotLog`.
+
+    Mirrors the :class:`~repro.graph.stream.WindowView` API so
+    :class:`~repro.core.api.StreamingQuery` front-ends can drive either;
+    mask accessors return **per-shard lists** (shard-local, capacity-shaped)
+    and ``slide()`` returns a :class:`ShardSlideDiff`.
+    """
+
+    def __init__(self, log: ShardedSnapshotLog, size: Optional[int] = None,
+                 start: Optional[int] = None):
+        self.log = log
+        if start is None:
+            # lockstep views must agree on the window even if one shard's
+            # history happens to be retired further than another's
+            start = max(sh.retired_upto for sh in log.shards)
+        self.views = [WindowView(sh, size=size, start=start) for sh in log.shards]
+        self.history: list[ShardSlideDiff] = []
+        self._history_offset = 0
+
+    # -- window geometry (all shards identical) -------------------------------
+    @property
+    def start(self) -> int:
+        return self.views[0].start
+
+    @property
+    def size(self) -> int:
+        return self.views[0].size
+
+    @property
+    def stop(self) -> int:
+        return self.views[0].stop
+
+    def snapshots(self) -> range:
+        return range(self.start, self.stop)
+
+    # -- slide history --------------------------------------------------------
+    @property
+    def history_end(self) -> int:
+        return self._history_offset + len(self.history)
+
+    def diffs_since(self, pos: int) -> list[ShardSlideDiff]:
+        if pos < self._history_offset:
+            raise LookupError(
+                f"slide history before position {self._history_offset} was "
+                f"pruned; consumer at {pos} must re-prime"
+            )
+        return self.history[pos - self._history_offset:]
+
+    def prune_history(self, upto: int) -> None:
+        drop = min(upto, self.history_end) - self._history_offset
+        if drop > 0:
+            del self.history[:drop]
+            self._history_offset += drop
+        for v in self.views:
+            v.prune_history(upto)  # also retires per-shard log history
+
+    # -- sliding --------------------------------------------------------------
+    def slide(self) -> ShardSlideDiff:
+        diffs = tuple(v.slide() for v in self.views)
+        d = ShardSlideDiff(
+            shards=diffs, appended=diffs[0].appended, retired=diffs[0].retired
+        )
+        self.history.append(d)
+        return d
+
+    def slide_to_tip(self) -> list[ShardSlideDiff]:
+        out = []
+        while self.stop < self.log.num_snapshots:
+            out.append(self.slide())
+        return out
+
+    # -- per-shard masks ------------------------------------------------------
+    def union_masks(self) -> list[np.ndarray]:
+        return [v.union_mask() for v in self.views]
+
+    def intersection_masks(self) -> list[np.ndarray]:
+        return [v.intersection_mask() for v in self.views]
+
+    def snapshot_masks(self, t: int) -> list[np.ndarray]:
+        return [v.snapshot_mask(t) for v in self.views]
+
+    def rolling_masks(
+        self, diffs: Sequence[ShardSlideDiff]
+    ) -> Iterator[tuple[list[np.ndarray], list[np.ndarray]]]:
+        """Yield per-slide ``(union masks, intersection masks)`` lists.
+
+        The per-shard :meth:`WindowView.rolling_masks` generators run in
+        lockstep, so each yield is one intermediate window's state — exactly
+        what a multi-slide catch-up needs (see the single-host docstring).
+        """
+        gens = [
+            v.rolling_masks([d.shards[s] for d in diffs])
+            for s, v in enumerate(self.views)
+        ]
+        for _ in range(len(diffs)):
+            step = [next(g) for g in gens]
+            yield [u for u, _ in step], [i for _, i in step]
+
+    # -- canonical reference graph -------------------------------------------
+    def materialize(self, *, pad_to_capacity: bool = True) -> EvolvingGraph:
+        """Canonical (dst-sorted, bit-packed) global graph of the window.
+
+        Concatenates the shard universes back into one edge list and applies
+        the same canonical layout as :meth:`WindowView.materialize` — the
+        reference substrate the sharded streaming engine must match
+        bit-for-bit.
+        """
+        log = self.log
+        counts = [sh.num_edges for sh in log.shards]
+        src = np.concatenate([sh.src[:k] for sh, k in zip(log.shards, counts)])
+        dst = np.concatenate([sh.dst[:k] for sh, k in zip(log.shards, counts)])
+        wmin = np.concatenate(
+            [sh.weight_min[:k] for sh, k in zip(log.shards, counts)]
+        )
+        wmax = np.concatenate(
+            [sh.weight_max[:k] for sh, k in zip(log.shards, counts)]
+        )
+        offsets = np.cumsum([0] + counts[:-1])
+        n = int(sum(counts))
+        order = np.lexsort((src, dst))
+        dense = np.zeros((self.size, n), bool)
+        for i, t in enumerate(self.snapshots()):
+            for s, (sh, off) in enumerate(zip(log.shards, offsets)):
+                dense[i, off + sh.snapshot_edges(t)] = True
+        packed = pack_presence(dense[:, order])
+        cap = (log.capacity * log.n_shards if pad_to_capacity
+               else round_up(max(n, 1), PAD_ALIGN))
+        return EvolvingGraph(
+            src=jnp.asarray(pad_to(src[order].astype(np.int32), cap, 0)),
+            dst=jnp.asarray(pad_to(dst[order].astype(np.int32), cap, 0)),
+            weight_min=jnp.asarray(pad_to(wmin[order], cap, 0.0)),
+            weight_max=jnp.asarray(pad_to(wmax[order], cap, 0.0)),
+            presence=jnp.asarray(pad_to(packed, cap, 0, axis=0)),
+            num_vertices=log.num_vertices,
+            num_snapshots=self.size,
+        )

@@ -32,6 +32,7 @@ streams and of :func:`repro.graph.generators.generate_evolving_stream`).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
@@ -95,7 +96,13 @@ class SnapshotLog:
         self._n_edges = 0
         self._generation = 0  # bumped on capacity growth
         self._tip = np.zeros(self._capacity, bool)  # presence at latest snapshot
-        self._snapshots: list[np.ndarray] = []  # per-snapshot present ids
+        # per-snapshot present ids; retired entries are None (see retire_history)
+        self._snapshots: list[Optional[np.ndarray]] = []
+        # per-snapshot membership delta vs the previous snapshot — O(batch)
+        # storage that outlives retirement of the O(present) id arrays
+        self._deltas: list[tuple[np.ndarray, np.ndarray]] = []
+        self._retired_upto = 0
+        self._views: "weakref.WeakSet" = weakref.WeakSet()  # for retire watermark
         self._weight_changes: list[tuple[np.ndarray, np.ndarray]] = []
         self._weight_version = 0  # bumped when any edge's extrema widen
         # device-side mirrors of the universe arrays; keyed on (generation,
@@ -132,26 +139,25 @@ class SnapshotLog:
         return self._weight_version
 
     # -- append ---------------------------------------------------------------
-    def append_snapshot(
-        self,
-        add_src: Sequence[int],
-        add_dst: Sequence[int],
-        add_w: Sequence[float],
-        del_src: Sequence[int] = (),
-        del_dst: Sequence[int] = (),
-    ) -> int:
-        """Apply one delta batch to the tip; returns the new snapshot's index."""
-        add_src = np.asarray(add_src, np.int64).ravel()
-        add_dst = np.asarray(add_dst, np.int64).ravel()
-        add_w = np.asarray(add_w, np.float32).ravel()
-        del_src = np.asarray(del_src, np.int64).ravel()
-        del_dst = np.asarray(del_dst, np.int64).ravel()
-        v = np.int64(self.num_vertices)
+    @staticmethod
+    def _normalize_delta(add_src, add_dst, add_w, del_src, del_dst):
+        return (
+            np.asarray(add_src, np.int64).ravel(),
+            np.asarray(add_dst, np.int64).ravel(),
+            np.asarray(add_w, np.float32).ravel(),
+            np.asarray(del_src, np.int64).ravel(),
+            np.asarray(del_dst, np.int64).ravel(),
+        )
 
-        # validate every id up front: out-of-range ids would corrupt the
-        # src*V+dst key encoding (aliasing distinct edges), and raising after
-        # any mutation would leave the tip/extrema half-updated with no
-        # snapshot recorded
+    def _validate_delta(self, add_src, add_dst, add_w, del_src, del_dst):
+        """Raise on a bad delta *without mutating*; returns deletion ids.
+
+        Every id is validated up front: out-of-range ids would corrupt the
+        src*V+dst key encoding (aliasing distinct edges), and raising after
+        any mutation would leave the tip/extrema half-updated with no
+        snapshot recorded.
+        """
+        v = np.int64(self.num_vertices)
         for kind, ids in (("add", add_src), ("add", add_dst),
                           ("del", del_src), ("del", del_dst)):
             if len(ids) and (ids.min() < 0 or ids.max() >= v):
@@ -169,10 +175,6 @@ class SnapshotLog:
                 f"del arrays disagree in length at snapshot "
                 f"{len(self._snapshots)}"
             )
-
-        # deletions first (build_evolving_graph replay order); validate the
-        # whole batch before touching the tip so a bad delta cannot leave the
-        # log half-mutated with no snapshot recorded
         del_ids: list[int] = []
         seen: set[int] = set()
         for k in (del_src * v + del_dst).tolist():
@@ -184,6 +186,50 @@ class SnapshotLog:
                 )
             seen.add(j)
             del_ids.append(j)
+        return del_ids
+
+    def prepare_delta(
+        self,
+        add_src: Sequence[int],
+        add_dst: Sequence[int],
+        add_w: Sequence[float],
+        del_src: Sequence[int] = (),
+        del_dst: Sequence[int] = (),
+    ) -> tuple:
+        """Normalize + validate a delta against the current tip, WITHOUT
+        applying it; returns an opaque token for :meth:`commit_delta`.
+
+        Committing a prepared delta cannot fail (additions only register or
+        widen extrema) — :class:`~repro.graph.shardlog.ShardedSnapshotLog`
+        relies on this to keep multi-shard appends atomic: prepare every
+        shard's sub-delta, then commit every shard.  The token is only valid
+        while no other mutation intervenes.
+        """
+        arrays = self._normalize_delta(add_src, add_dst, add_w, del_src, del_dst)
+        return arrays, self._validate_delta(*arrays)
+
+    def append_snapshot(
+        self,
+        add_src: Sequence[int],
+        add_dst: Sequence[int],
+        add_w: Sequence[float],
+        del_src: Sequence[int] = (),
+        del_dst: Sequence[int] = (),
+    ) -> int:
+        """Apply one delta batch to the tip; returns the new snapshot's index.
+
+        Validates the whole batch before touching the tip, so a bad delta
+        cannot leave the log half-mutated with no snapshot recorded.
+        """
+        return self.commit_delta(
+            self.prepare_delta(add_src, add_dst, add_w, del_src, del_dst)
+        )
+
+    def commit_delta(self, prepared: tuple) -> int:
+        """Apply a delta previously validated by :meth:`prepare_delta`."""
+        (add_src, add_dst, add_w, del_src, del_dst), del_ids = prepared
+        v = np.int64(self.num_vertices)
+        # deletions first (build_evolving_graph replay order)
         if del_ids:
             self._tip[del_ids] = False
 
@@ -202,7 +248,15 @@ class SnapshotLog:
                     wmax_grown.append(j)
             self._tip[j] = True
 
-        self._snapshots.append(np.flatnonzero(self._tip).astype(np.int32))
+        ids = np.flatnonzero(self._tip).astype(np.int32)
+        prev = self._snapshots[-1] if self._snapshots else _EMPTY
+        # the membership delta is O(batch) and survives retirement of the
+        # O(present) id array (see retire_history)
+        self._deltas.append((
+            np.setdiff1d(ids, prev, assume_unique=True),
+            np.setdiff1d(prev, ids, assume_unique=True),
+        ))
+        self._snapshots.append(ids)
         self._weight_changes.append(
             (np.asarray(wmin_shrunk, np.int32), np.asarray(wmax_grown, np.int32))
         )
@@ -246,13 +300,70 @@ class SnapshotLog:
     # -- lookups --------------------------------------------------------------
     def snapshot_edges(self, t: int) -> np.ndarray:
         """Universe ids present in snapshot ``t`` (sorted, stable)."""
-        return self._snapshots[t]
+        ids = self._snapshots[t]
+        if ids is None:
+            raise LookupError(
+                f"snapshot {t} was retired to delta storage (ids before "
+                f"{self._retired_upto} are compacted; see retire_history)"
+            )
+        return ids
 
     def snapshot_mask(self, t: int) -> np.ndarray:
         """``(capacity,) bool`` presence mask for snapshot ``t``."""
         mask = np.zeros(self._capacity, bool)
-        mask[self._snapshots[t]] = True
+        mask[self.snapshot_edges(t)] = True
         return mask
+
+    def snapshot_delta(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """``(entered ids, left ids)`` of snapshot ``t`` vs its predecessor.
+
+        Unlike :meth:`snapshot_edges` this survives retirement — it is the
+        bounded per-snapshot record history compaction keeps.
+        """
+        return self._deltas[t]
+
+    # -- history compaction ---------------------------------------------------
+    @property
+    def retired_upto(self) -> int:
+        """Snapshots below this index hold only their membership delta."""
+        return self._retired_upto
+
+    def register_view(self, view) -> None:
+        """Track a window view (weakly) for the retirement watermark."""
+        self._views.add(view)
+
+    def retire_history(self) -> int:
+        """Retire snapshot id arrays no registered view can reach.
+
+        A :class:`WindowView` can reach snapshot ``t`` if ``t >= start`` (its
+        window and future slides) or if one of its *retained* history diffs
+        replays ``t`` (``rolling_masks`` touches ``d.retired``, which for the
+        oldest retained diff is ``start - len(history)``) — so the watermark
+        is ``min over live views of (start - len(history))``.  Retired
+        snapshots keep their O(batch) membership delta
+        (:meth:`snapshot_delta`) but drop the O(present-edges) id array, so
+        the *dominant* per-snapshot term stops growing with log lifetime
+        (per-append storage is still O(batch) — the retained delta records).
+        With no registered views nothing is retired (a future view may still
+        want the full history).  Returns the number of snapshots retired.
+
+        Called by :meth:`WindowView.prune_history`; long-running consumers
+        (``StreamingQuery`` on a private view, ``QueryBatcher.advance_window``
+        on a shared one) therefore compact the log as a side effect of
+        pruning their slide history.
+        """
+        views = list(self._views)
+        if not views:
+            return 0
+        watermark = min(v.start - len(v.history) for v in views)
+        upto = min(max(watermark, self._retired_upto), self.num_snapshots)
+        retired = 0
+        for t in range(self._retired_upto, upto):
+            if self._snapshots[t] is not None:
+                self._snapshots[t] = None
+                retired += 1
+        self._retired_upto = max(self._retired_upto, upto)
+        return retired
 
     def weight_changes(self, t: int) -> tuple[np.ndarray, np.ndarray]:
         """(wmin_shrunk ids, wmax_grown ids) recorded when ``t`` was appended."""
@@ -311,11 +422,16 @@ class WindowView:
     each catch up at their own pace.
     """
 
-    def __init__(self, log: SnapshotLog, size: Optional[int] = None, start: int = 0):
+    def __init__(self, log: SnapshotLog, size: Optional[int] = None,
+                 start: Optional[int] = None):
         if log.num_snapshots == 0:
             raise ValueError("log has no snapshots yet")
         self.log = log
-        self.start = int(start)
+        # default to the earliest still-materializable snapshot: history
+        # compaction may have retired a prefix of the log's id arrays, and a
+        # consumer that doesn't ask for a specific start (StreamingQuery
+        # slides to the tip before priming anyway) must stay constructible
+        self.start = int(start) if start is not None else log.retired_upto
         self.size = int(size) if size is not None else log.num_snapshots - self.start
         if self.size < 1 or self.start < 0 or self.stop > log.num_snapshots:
             raise ValueError(
@@ -327,6 +443,7 @@ class WindowView:
             self.witness[log.snapshot_edges(t)] += 1
         self.history: list[SlideDiff] = []
         self._history_offset = 0  # absolute index of history[0]
+        log.register_view(self)  # pins [start - len(history), ∞) against retirement
 
     @property
     def stop(self) -> int:
@@ -355,11 +472,15 @@ class WindowView:
 
         Long-running consumers (e.g. ``QueryBatcher.advance_window``) call
         this with the minimum consumer watermark so history stays bounded.
+        Pruning also retires pre-window snapshot id arrays from the log
+        (:meth:`SnapshotLog.retire_history`) once no registered view can
+        reach them, so the *log* stays bounded too.
         """
         drop = min(upto, self.history_end) - self._history_offset
         if drop > 0:
             del self.history[:drop]
             self._history_offset += drop
+        self.log.retire_history()
 
     def snapshots(self) -> range:
         return range(self.start, self.stop)

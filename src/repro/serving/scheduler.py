@@ -16,19 +16,29 @@ Three front-ends share this module:
   *sliding* window.  Each watched (query, source) keeps a warm
   :class:`~repro.core.api.StreamingQuery` (bounds + witness parents +
   patched QRS + cached rows) on a shared
-  :class:`~repro.graph.stream.WindowView`; ``advance_window`` appends a
-  snapshot delta, slides the shared view once, and advances every watcher
-  incrementally instead of re-evaluating their windows from scratch.
+  :class:`~repro.graph.stream.WindowView` — or, for SPMD serving, a
+  :class:`~repro.distributed.stream_shard.ShardedStreamingQuery` on a
+  :class:`~repro.graph.shardlog.ShardedWindowView`; ``advance_window``
+  appends a snapshot delta, slides the shared view once, and advances every
+  watcher incrementally instead of re-evaluating their windows from scratch.
+  Warm state is bounded (LRU capacity + watch-stamped TTL +
+  evict-on-divergence, see ``cache_info``) so serving memory stays bounded
+  under rotating traffic.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from collections import deque
+import time
+from collections import OrderedDict, deque, namedtuple
 from typing import Callable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
+
+StreamCacheInfo = namedtuple(
+    "StreamCacheInfo", ["hits", "misses", "evictions", "currsize", "maxsize"]
+)
 
 
 @dataclasses.dataclass
@@ -141,14 +151,32 @@ class QueryBatcher:
     within a group are deduplicated for the launch and fan back out.
     """
 
-    def __init__(self, max_batch: int = 32, method: str = "cqrs"):
+    def __init__(
+        self,
+        max_batch: int = 32,
+        method: str = "cqrs",
+        *,
+        stream_capacity: int = 64,
+        stream_ttl: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if stream_capacity < 1:
+            raise ValueError("stream_capacity must be >= 1")
         self.max_batch = max_batch
         self.method = method
+        self.stream_capacity = stream_capacity
+        self.stream_ttl = stream_ttl
+        self._clock = clock
         self.queue: deque[QueryRequest] = deque()
         self._uid = itertools.count()
-        self._streams: dict[tuple, object] = {}  # warm StreamingQuery state
+        # warm StreamingQuery state, LRU-ordered (oldest first); each value
+        # is a _StreamEntry so eviction can reason about idleness/divergence
+        self._streams: "OrderedDict[tuple, _StreamEntry]" = OrderedDict()
+        self._stream_hits = 0
+        self._stream_misses = 0
+        self._stream_evictions = 0
 
     def submit(
         self,
@@ -222,24 +250,96 @@ class QueryBatcher:
         watching the same (view, query, source, method) again returns the
         existing instance with its state intact).  ``method`` defaults to the
         batcher's method when it is a streaming engine, else ``"cqrs"``.
+
+        Warm state is bounded: at most ``stream_capacity`` entries are kept,
+        least-recently-*watched* evicted first, and entries are also dropped
+        when idle past ``stream_ttl`` seconds or *divergent* — their view's
+        log has slid at least a full window past them, or the shared view
+        pruned slide history they never consumed — since such state would be
+        rebuilt from scratch on its next advance anyway.  Recency/idleness is
+        stamped by ``watch()`` calls only, never by ``advance_window`` —
+        being served says nothing about whether a client still reads the
+        result, so abandoned watchers expire even on a view that advances
+        every slide.  :meth:`cache_info` exposes the counters.
         """
         from repro.core.api import StreamingQuery
 
-        method = method or (
-            self.method if self.method in ("cqrs", "cqrs_ell") else "cqrs"
-        )
+        if method is None:
+            method = (self.method if self.method in ("cqrs", "cqrs_ell")
+                      else "cqrs")
+            from repro.graph.shardlog import ShardedWindowView
+
+            if method == "cqrs_ell" and isinstance(view, ShardedWindowView):
+                # the sharded engine has no ELL path yet (ROADMAP): fall back
+                # rather than reject the view — explicit method still raises
+                method = "cqrs"
         key = (id(view), str(query), int(source), method)
-        sq = self._streams.get(key)
-        if sq is None:
+        entry = self._streams.get(key)
+        if entry is not None:
+            # touch BEFORE housekeeping: a re-watch is exactly the liveness
+            # signal TTL measures, so the warm state must survive it
+            self._stream_hits += 1
+            entry.last_used = self._clock()
+            self._streams.move_to_end(key)
+        self._evict_stale(exempt_view=view)
+        if entry is None:
+            self._stream_misses += 1
             sq = StreamingQuery(view, str(query), int(source), method=method)
             sq.results  # prime eagerly: pay the cold solve before traffic
-            self._streams[key] = sq
-        return sq
+            entry = _StreamEntry(sq=sq, last_used=self._clock())
+            self._streams[key] = entry
+            while len(self._streams) > self.stream_capacity:
+                self._streams.popitem(last=False)  # LRU out
+                self._stream_evictions += 1
+        return entry.sq
 
     def watching(self, view=None) -> list:
         """Warm streaming queries (optionally restricted to one view)."""
-        return [sq for sq in self._streams.values()
-                if view is None or sq.view is view]
+        return [e.sq for e in self._streams.values()
+                if view is None or e.sq.view is view]
+
+    def cache_info(self) -> StreamCacheInfo:
+        """LRU/TTL/divergence statistics for the warm streaming-query cache."""
+        return StreamCacheInfo(
+            hits=self._stream_hits,
+            misses=self._stream_misses,
+            evictions=self._stream_evictions,
+            currsize=len(self._streams),
+            maxsize=self.stream_capacity,
+        )
+
+    def _is_divergent(self, sq) -> bool:
+        """True when ``sq``'s warm state cannot help its next advance.
+
+        Either the view's log has slid ≥ one full window past the view (every
+        cached row would be rebuilt), or the shared view pruned slide history
+        the query never consumed (it must re-prime).
+        """
+        view = sq.view
+        if view.log.num_snapshots - view.stop >= view.size:
+            return True
+        return sq.diff_pos < view.history_end - len(view.history)
+
+    def _evict_stale(self, exempt_view=None) -> int:
+        """Drop TTL-expired and divergent entries.
+
+        ``exempt_view`` guards only the *divergence* test (the view about to
+        be served may legitimately lag its log until ``slide_to_tip``); TTL
+        expiry applies to every entry, so abandoned watchers expire even on
+        a view that is advanced every slide.
+        """
+        now = self._clock()
+        dead = []
+        for key, e in self._streams.items():
+            expired = (self.stream_ttl is not None
+                       and now - e.last_used > self.stream_ttl)
+            divergent = e.sq.view is not exempt_view and self._is_divergent(e.sq)
+            if expired or divergent:
+                dead.append(key)
+        for key in dead:
+            del self._streams[key]
+            self._stream_evictions += 1
+        return len(dead)
 
     def advance_window(self, view, delta=None) -> dict:
         """Append ``delta`` to the view's log, slide, advance every watcher.
@@ -252,15 +352,36 @@ class QueryBatcher:
         entry — both engines are bit-for-bit identical by contract.)
 
         Slide history consumed by every watcher is pruned from the shared
-        view afterwards, so long-running serving loops stay bounded.
+        view afterwards (which also retires unreachable log history), so
+        long-running serving loops stay bounded; stale warm state is evicted
+        on the way (see :meth:`watch`).  Note that with ``stream_ttl`` set,
+        being served does NOT refresh a watcher's idleness — a client must
+        re-``watch`` within the TTL or its (query, source) expires and drops
+        out of subsequent results.
         """
+        self._evict_stale(exempt_view=view)
         if delta is not None:
             view.log.append_snapshot(*delta)
         view.slide_to_tip()
+        out = {}
+        for e in list(self._streams.values()):
+            if e.sq.view is not view:
+                continue
+            out[(e.sq.semiring.name, e.sq.source)] = e.sq.advance()
+            # deliberately NOT a recency touch: serving a watcher says nothing
+            # about whether any client still reads it — idleness (TTL) and
+            # LRU order are stamped only by client-side watch() calls, so an
+            # abandoned (query, source) does eventually expire even on a view
+            # that is advanced every slide
         watchers = self.watching(view)
-        out = {
-            (sq.semiring.name, sq.source): sq.advance() for sq in watchers
-        }
         if watchers:
             view.prune_history(min(sq.diff_pos for sq in watchers))
         return out
+
+
+@dataclasses.dataclass
+class _StreamEntry:
+    """One warm streaming query + its recency stamp (LRU/TTL bookkeeping)."""
+
+    sq: object
+    last_used: float

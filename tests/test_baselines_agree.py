@@ -51,6 +51,30 @@ def test_kickstarter_trims_equal_value_cycle():
     assert got[1, 1] == sr.identity and got[1, 2] == sr.identity
 
 
+@pytest.mark.parametrize("name", ["ssnp", "sswp", "viterbi"])
+def test_non_strict_extend_agreement_under_churn(name):
+    """Regression for the example-scale "commongraph disagrees" failure.
+
+    The failure was a mis-attribution: under a non-strict ``extend`` (ssnp's
+    max, sswp's min, viterbi at w=1) *kickstarter* — the example's reference
+    — kept stale too-good values when an equal-value plateau survived its
+    support edge's deletion, and the next method compared (commongraph, whose
+    direct-hop bootstrap is provably conservative: G∩ ⊆ every snapshot) got
+    blamed by the assert.  This fixture (the make_evolving defaults, seed 0)
+    reproduces the divergence on the pre-acyclic-parent-forest trim at tier-1
+    size — tier-1's smaller 56-vertex fixture never tripped it.
+    """
+    eg = make_evolving(num_vertices=64, num_edges=256, num_snapshots=6,
+                       batch_size=24, seed=0, readd_prob=0.3)
+    sr = SEMIRINGS[name]
+    ref, _ = run_full(eg, sr, 0)
+    for method in ("kickstarter", "commongraph", "qrs", "cqrs"):
+        got, _ = BASELINES[method](eg, sr, 0)
+        np.testing.assert_allclose(
+            got, ref, rtol=1e-6, err_msg=f"{method} != full for {name}"
+        )
+
+
 def test_qrs_reduces_edges():
     """Fig. 9 analog: QRS keeps a small fraction of edges under light churn."""
     eg = make_evolving(num_vertices=256, num_edges=1500, num_snapshots=8, batch_size=30)

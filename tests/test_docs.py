@@ -65,3 +65,13 @@ def test_architecture_covers_streaming_layer():
     for sym in ("SnapshotLog", "WindowView", "StreamingBounds", "PatchableQRS",
                 "StreamingQuery", "advance_window"):
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
+def test_architecture_covers_sharded_streaming_layer():
+    """The sharded-streaming section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Sharded streaming" in text
+    for sym in ("ShardedSnapshotLog", "ShardedWindowView", "ShardSlideDiff",
+                "ShardedStreamingBounds", "ShardedStreamingQuery",
+                "retire_history", "cache_info", "host_mesh"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"

@@ -1,0 +1,242 @@
+"""Sharded streaming subsystem: dst-range delta log + SPMD window serving.
+
+Two layers of coverage:
+
+* host-side structure tests (single device, run in-process): delta routing,
+  multi-shard append atomicity, materialize equivalence, slide-diff lockstep,
+  and the 1-shard SPMD query (a real ``shard_map`` on the one local device,
+  so tier-1 exercises the sharded code path without a forced host mesh);
+* 8-device mesh checks (subprocess, because
+  ``xla_force_host_platform_device_count`` must be set before jax
+  initializes): bit-for-bit advance equivalence across semirings × slides,
+  capacity growth under a live query, SPMD serving via ``QueryBatcher``,
+  shard-locality of appends, and the one-collective-per-superstep HLO
+  invariant — see ``tests/_stream_shard_checks.py``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.api import EvolvingQuery, StreamingQuery
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+from repro.graph.stream import SnapshotLog, WindowView
+
+V = 48
+WINDOW = 3
+SCRIPT = os.path.join(os.path.dirname(__file__), "_stream_shard_checks.py")
+
+
+def make_stream(seed: int, *, num_snapshots: int = 8, batch_size: int = 20):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return generate_evolving_stream(
+        src, dst, w, V, num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=0.4, seed=seed + 2,
+    )
+
+
+def paired_logs(seed: int, n_shards: int, *, n_prime: int = WINDOW):
+    base, deltas = make_stream(seed)
+    log = SnapshotLog(V, capacity=512)
+    slog = ShardedSnapshotLog(V, n_shards, capacity=64)
+    log.append_snapshot(*base)
+    slog.append_snapshot(*base)
+    for d in deltas[: n_prime - 1]:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+    return log, slog, deltas[n_prime - 1:]
+
+
+# ----------------------------------------------------------- host structures
+def test_append_routes_edges_to_dst_owners():
+    log, slog, pending = paired_logs(seed=0, n_shards=4)
+    for d in pending:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+    assert slog.num_snapshots == log.num_snapshots
+    assert slog.num_edges == log.num_edges
+    v_local = slog.v_local
+    for s, sh in enumerate(slog.shards):
+        n = sh.num_edges
+        if n:
+            assert ((sh.dst[:n] // v_local) == s).all()
+    # the union of shard universes is the single-host universe
+    pairs = set()
+    for sh in slog.shards:
+        n = sh.num_edges
+        pairs |= set(zip(sh.src[:n].tolist(), sh.dst[:n].tolist()))
+    n = log.num_edges
+    assert pairs == set(zip(log.src[:n].tolist(), log.dst[:n].tolist()))
+
+
+def test_sharded_append_is_atomic_across_shards():
+    slog = ShardedSnapshotLog(V, 4, capacity=64)
+    # edges on two different shards
+    slog.append_snapshot([0, 1], [1, V - 1], [1.0, 2.0])
+    # second deletion is absent (dst V-2 on the last shard): the whole delta
+    # must be rejected with NO shard advanced — not just the failing one
+    with pytest.raises(KeyError):
+        slog.append_snapshot([], [], [], [0, 1], [1, V - 2])
+    assert all(sh.num_snapshots == 1 for sh in slog.shards)
+    with pytest.raises(ValueError):
+        slog.append_snapshot([0], [V + 3], [1.0])
+    with pytest.raises(ValueError):
+        slog.append_snapshot([0, 1], [2], [1.0, 1.0])
+    with pytest.raises(ValueError):
+        slog.append_snapshot([], [], [], [0], [1, 2])
+    assert all(sh.num_snapshots == 1 for sh in slog.shards)
+    t = slog.append_snapshot([], [], [])
+    assert t == 1
+
+
+def test_sharded_log_shape_validation():
+    with pytest.raises(ValueError):
+        ShardedSnapshotLog(V, 5)  # 48 % 5 != 0
+    with pytest.raises(ValueError):
+        ShardedSnapshotLog(V, 0)
+
+
+def test_sharded_from_stream_roundtrip():
+    base, deltas = make_stream(seed=5)
+    log = SnapshotLog.from_stream(base, deltas, V)
+    slog = ShardedSnapshotLog.from_stream(base, deltas, V, n_shards=4)
+    assert slog.num_snapshots == log.num_snapshots
+    assert slog.num_edges == log.num_edges
+    ref = EvolvingQuery(
+        WindowView(log).materialize(pad_to_capacity=False), "sssp", 0
+    ).evaluate("cqrs")
+    got = EvolvingQuery(
+        ShardedWindowView(slog).materialize(pad_to_capacity=False), "sssp", 0
+    ).evaluate("cqrs")
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_sharded_materialize_matches_single_host():
+    log, slog, pending = paired_logs(seed=1, n_shards=4)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    for d in pending:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+        view.slide()
+        sview.slide()
+        ref = EvolvingQuery(view.materialize(), "sssp", 0).evaluate("cqrs")
+        got = EvolvingQuery(sview.materialize(), "sssp", 0).evaluate("cqrs")
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_shard_slide_diffs_partition_the_global_diff():
+    """Per-shard diffs, mapped back to (src, dst) pairs, must exactly tile
+    the single-host diff — no transition lost or duplicated across shards."""
+    log, slog, pending = paired_logs(seed=2, n_shards=4)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+
+    def pairs_of(sh, ids):
+        return set(zip(sh.src[ids].tolist(), sh.dst[ids].tolist()))
+
+    for d in pending:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+        gd = view.slide()
+        sd = sview.slide()
+        assert (sd.appended, sd.retired) == (gd.appended, gd.retired)
+        for field in ("union_gained", "union_lost", "inter_gained",
+                      "inter_lost", "wmin_shrunk", "wmax_grown"):
+            want = set(zip(log.src[getattr(gd, field)].tolist(),
+                           log.dst[getattr(gd, field)].tolist()))
+            got = set()
+            for sh, part in zip(slog.shards, sd.shards):
+                ids = getattr(part, field)
+                local = pairs_of(sh, ids)
+                assert not (got & local)  # shard-disjoint
+                got |= local
+            assert got == want, field
+        assert sd.is_empty() == gd.is_empty()
+
+
+def test_one_shard_spmd_query_in_process():
+    """n_shards=1 runs the full shard_map path on the lone CPU device, so
+    tier-1 covers the sharded engine without a forced host mesh."""
+    from repro.distributed.stream_shard import ShardedStreamingQuery
+
+    log, slog, pending = paired_logs(seed=3, n_shards=1)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0)
+    ssq = StreamingQuery(sview, "sssp", 0)
+    assert isinstance(ssq, ShardedStreamingQuery)  # __new__ dispatch
+    np.testing.assert_array_equal(sq.results, ssq.results)
+    for d in pending:
+        np.testing.assert_array_equal(sq.advance(d), ssq.advance(d))
+    assert ssq.stats["method"] == "stream[cqrs]"
+    assert ssq.stats["qrs_edges"] == sq.stats["qrs_edges"]
+
+
+def test_ell_batcher_falls_back_to_cqrs_on_sharded_view():
+    """A cqrs_ell QueryBatcher must still serve sharded views (no ELL path
+    on the sharded engine yet): the default method falls back to cqrs."""
+    from repro.serving.scheduler import QueryBatcher
+
+    log, slog, pending = paired_logs(seed=6, n_shards=1)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    qb = QueryBatcher(method="cqrs_ell")
+    sq = qb.watch(sview, "sssp", 0)
+    assert sq.method == "cqrs"
+    view = WindowView(log, size=WINDOW)
+    ref = qb.watch(view, "sssp", 0)
+    assert ref.method == "cqrs_ell"  # single-host default unchanged
+    got = qb.advance_window(sview, pending[0])
+    want = qb.advance_window(view, pending[0])
+    np.testing.assert_array_equal(got[("sssp", 0)], want[("sssp", 0)])
+    with pytest.raises(ValueError):
+        qb.watch(sview, "sssp", 1, method="cqrs_ell")  # explicit: still loud
+
+
+def test_sharded_query_validation():
+    _, slog, _ = paired_logs(seed=4, n_shards=1)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    with pytest.raises(ValueError):
+        StreamingQuery(sview, "sssp", 0, method="cqrs_ell")
+    with pytest.raises(ValueError):
+        StreamingQuery(sview, "sssp", 0, window=WINDOW + 1)
+    with pytest.raises(RuntimeError):
+        # more shards than visible devices → actionable host-mesh error
+        from repro.distributed.stream_shard import host_mesh
+
+        host_mesh(1024)
+
+
+# ------------------------------------------------------- 8-device mesh checks
+def _run(check: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep
+        + os.path.dirname(__file__)
+    )
+    out = subprocess.run(
+        [sys.executable, SCRIPT, check],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert out.returncode == 0, f"{check} failed:\n{out.stdout}\n{out.stderr}"
+    assert "CHECK_OK" in out.stdout
+
+
+@pytest.mark.parametrize(
+    "check",
+    ["equivalence", "growth", "serving", "shard_local", "collectives"],
+)
+def test_stream_shard_mesh(check):
+    _run(check)

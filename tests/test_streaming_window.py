@@ -370,6 +370,169 @@ def test_private_view_history_is_pruned():
     assert sq.view.history_end == len(pending)
 
 
+# ------------------------------------------------------- history compaction
+def test_prune_history_retires_log_prefix():
+    """A pruning consumer retires pre-window id arrays to delta storage."""
+    log, pending = make_log(seed=12)
+    sq = StreamingQuery(log, "sssp", 0, window=WINDOW)  # private view: prunes
+    sq.results
+    for delta in pending:
+        sq.advance(delta)
+    view = sq.view
+    assert view.start == len(pending)
+    assert log.retired_upto == view.start  # everything pre-window retired
+    for t in range(log.retired_upto):
+        with pytest.raises(LookupError):
+            log.snapshot_edges(t)
+        log.snapshot_delta(t)  # the bounded per-snapshot record survives
+    # live window still fully materializable and correct
+    np.testing.assert_array_equal(sq.advance(), fresh_eval(view, "sssp", 0))
+
+
+def test_new_consumer_on_compacted_log():
+    """A new StreamingQuery/WindowView on a shared log must stay
+    constructible after history compaction retired the log's prefix —
+    the default window starts at the earliest materializable snapshot."""
+    log, pending = make_log(seed=21)
+    sq1 = StreamingQuery(log, "sssp", 0, window=WINDOW)
+    sq1.results
+    for delta in pending:
+        sq1.advance(delta)
+    assert log.retired_upto > 0
+    sq2 = StreamingQuery(log, "bfs", 1, window=WINDOW)  # post-compaction
+    np.testing.assert_array_equal(sq2.results, fresh_eval(sq2.view, "bfs", 1))
+    with pytest.raises(LookupError):
+        WindowView(log, size=WINDOW, start=0)  # explicit retired start: loud
+
+
+def test_snapshot_delta_matches_membership_transitions():
+    log, _ = make_log(seed=13)
+    for t in range(1, log.num_snapshots):
+        prev = log.snapshot_edges(t - 1)
+        cur = log.snapshot_edges(t)
+        added, removed = log.snapshot_delta(t)
+        np.testing.assert_array_equal(np.sort(added), np.setdiff1d(cur, prev))
+        np.testing.assert_array_equal(np.sort(removed), np.setdiff1d(prev, cur))
+    added0, removed0 = log.snapshot_delta(0)
+    np.testing.assert_array_equal(np.sort(added0), log.snapshot_edges(0))
+    assert len(removed0) == 0
+
+
+def test_retirement_respects_every_registered_view():
+    """The watermark is the min over live views; a straggler view pins it."""
+    log, pending = make_log(seed=14)
+    for d in pending:
+        log.append_snapshot(*d)
+    lagging = WindowView(log, size=WINDOW, start=0)  # never slides
+    leading = WindowView(log, size=WINDOW, start=0)
+    leading.slide_to_tip()
+    leading.prune_history(leading.history_end)
+    assert log.retired_upto == 0  # pinned by the lagging view
+    assert lagging.union_mask() is not None  # still usable
+    del lagging  # weakly registered: dropping the view unpins it
+    leading.prune_history(leading.history_end)
+    assert log.retired_upto == leading.start
+    # history replay still possible from the leading view's retained state
+    with pytest.raises(LookupError):
+        log.snapshot_mask(0)
+
+
+def test_no_retirement_without_views():
+    log, pending = make_log(seed=15)
+    assert log.retire_history() == 0  # make_log's views died; none registered
+    for t in range(log.num_snapshots):
+        log.snapshot_edges(t)  # everything still materializable
+
+
+# --------------------------------------------------- warm-state cache bounds
+def test_stream_cache_lru_eviction_and_info():
+    log, pending = make_log(seed=16)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher(stream_capacity=2)
+    sq1 = qb.watch(view, "sssp", 0)
+    qb.watch(view, "bfs", 1)
+    assert qb.cache_info() == (0, 2, 0, 2, 2)  # hits, misses, evictions, size, max
+    assert qb.watch(view, "sssp", 0) is sq1  # hit refreshes recency
+    qb.watch(view, "sswp", 2)  # evicts LRU = ("bfs", 1)
+    info = qb.cache_info()
+    assert (info.hits, info.misses, info.evictions) == (1, 3, 1)
+    assert info.currsize == 2 and info.maxsize == 2
+    names = {(sq.semiring.name, sq.source) for sq in qb.watching(view)}
+    assert names == {("sssp", 0), ("sswp", 2)}
+    # the evicted entry re-primes on the next watch (a miss, not an error)
+    qb.watch(view, "bfs", 1)  # evicts the now-LRU sssp entry
+    assert qb.cache_info().misses == 4
+    out = qb.advance_window(view, pending[0])
+    assert len(out) == 2  # the two resident watchers (sswp, bfs) are served
+    for (qname, s), res in out.items():
+        np.testing.assert_array_equal(res, fresh_eval(view, qname, s))
+
+
+def test_stream_cache_ttl_eviction():
+    log_a, _ = make_log(seed=17)
+    log_b, _ = make_log(seed=18)
+    view_a = WindowView(log_a, size=WINDOW)
+    view_b = WindowView(log_b, size=WINDOW)
+    now = [0.0]
+    qb = QueryBatcher(stream_ttl=10.0, clock=lambda: now[0])
+    qb.watch(view_a, "sssp", 0)
+    now[0] = 5.0
+    qb.watch(view_b, "bfs", 1)  # within TTL: A survives (and is not exempt)
+    assert qb.cache_info().currsize == 2
+    now[0] = 16.0  # A idle for 16s > ttl; B idle 11s > ttl
+    qb.watch(view_b, "bfs", 1)  # housekeeping: A evicted; B exempt (its view)
+    info = qb.cache_info()
+    assert info.evictions == 1 and info.currsize == 1
+    assert {sq.view for sq in qb.watching()} == {view_b}
+
+
+def test_abandoned_watcher_expires_on_served_view():
+    """Serving must not refresh TTL idleness: a watcher nobody re-watches
+    expires even though advance_window serves its view every slide."""
+    log, pending = make_log(seed=22)
+    view = WindowView(log, size=WINDOW)
+    now = [0.0]
+    qb = QueryBatcher(stream_ttl=10.0, clock=lambda: now[0])
+    qb.watch(view, "sssp", 0)     # kept alive by re-watching below
+    qb.watch(view, "bfs", 1)      # abandoned after registration
+    for k, delta in enumerate(pending):
+        now[0] += 6.0
+        qb.watch(view, "sssp", 0)  # the live client touches its entry
+        out = qb.advance_window(view, delta)
+        if k == 0:
+            assert set(out) == {("sssp", 0), ("bfs", 1)}
+    # bfs idled past the TTL despite being served every slide
+    assert set(out) == {("sssp", 0)}
+    assert qb.cache_info().evictions == 1
+    np.testing.assert_array_equal(out[("sssp", 0)], fresh_eval(view, "sssp", 0))
+
+
+def test_stream_cache_divergence_eviction():
+    """A watcher whose log slid ≥ a window past its view is dead weight."""
+    log_a, pending_a = make_log(seed=19)
+    log_b, _ = make_log(seed=20)
+    view_a = WindowView(log_a, size=WINDOW)
+    view_b = WindowView(log_b, size=WINDOW)
+    qb = QueryBatcher()
+    qb.watch(view_a, "sssp", 0)
+    qb.watch(view_b, "bfs", 1)
+    # the log moves on without view_a being served (appends only)
+    for d in pending_a:
+        log_a.append_snapshot(*d)
+    assert log_a.num_snapshots - view_a.stop >= view_a.size
+    qb.watch(view_b, "bfs", 1)  # housekeeping evicts the diverged watcher
+    info = qb.cache_info()
+    assert info.evictions == 1
+    assert {sq.view for sq in qb.watching()} == {view_b}
+    # re-watching the diverged view re-primes cleanly at the current window
+    sq = qb.watch(view_a, "sssp", 0)
+    out = qb.advance_window(view_a)
+    np.testing.assert_array_equal(
+        out[("sssp", 0)], fresh_eval(view_a, "sssp", 0)
+    )
+    assert sq.view is view_a
+
+
 def test_log_from_stream_roundtrip():
     base, deltas = make_stream(seed=6)
     log = SnapshotLog.from_stream(base, deltas, V)
