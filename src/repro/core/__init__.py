@@ -31,6 +31,7 @@ from repro.core.api import (
     EvolvingQuery,          # one (source, window) query, every baseline method
     MultiQuery,             # Q same-semiring sources through one shared pipeline
     StreamingQuery,         # warm sliding-window query: advance() per snapshot
+    StreamingQueryBatch,    # Q sliding-window queries advanced in one launch
     evaluate_evolving_query,
 )
 
@@ -57,5 +58,6 @@ __all__ = [
     "EvolvingQuery",
     "MultiQuery",
     "StreamingQuery",
+    "StreamingQueryBatch",
     "evaluate_evolving_query",
 ]

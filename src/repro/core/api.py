@@ -47,6 +47,18 @@ they shrank), patches the compacted QRS from the UVV-mask diff, evaluates
 *only the appended snapshot* (rows for surviving snapshots are reused — they
 are exact per-snapshot fixpoints, which are unique), and returns results
 bit-for-bit identical to a fresh :class:`EvolvingQuery` on the slid window.
+
+Batched streaming — a serving window is typically watched by MANY standing
+queries, so :class:`StreamingQueryBatch` folds the query axis into the warm
+state itself: ``(Q, V)`` bounds and witness parents, one shared patched QRS
+over the union of per-query frontiers, and one batched launch per advance::
+
+    sqb = StreamingQueryBatch(view, "sssp", sources=[0, 7, 42])
+    sqb.advance(next_delta)                     # (Q, S, V), one launch
+    sqb.result_for(7)                           # (S, V) slice
+
+``QueryBatcher.watch``/``advance_window`` group same-(view, query, method)
+watchers into these batches automatically.
 """
 from __future__ import annotations
 
@@ -330,13 +342,11 @@ class StreamingQuery:
             self._bounds = None
             self._ensure_primed()
             return self.results
-        if len(pending) > 1 and any(
-            len(d.wmin_shrunk) or len(d.wmax_grown) for d in pending
-        ):
-            # lifetime weight extrema already reflect the whole queue, so an
-            # intermediate slide cannot be folded in with the weights it saw
-            # — its trims would run against post-widening parents.  Widening
-            # mid-queue is rare; rebuild from the final window instead.
+        if len(pending) > 1 and any(d.weights_changed() for d in pending):
+            # the view's window extrema already reflect the whole queue, so
+            # an intermediate slide cannot be folded in with the weights it
+            # saw — its trims would run against post-change parents.  Weight
+            # movement mid-queue is rare; rebuild from the final window.
             self._bounds = None
             self._ensure_primed()
             return self.results
@@ -356,11 +366,12 @@ class StreamingQuery:
                 for key in ("qrs_entered", "qrs_left", "qrs_touched"):
                     patch_stats[key] = patch_stats.get(key, 0) + ps[key]
                 patch_stats["qrs_edges"] = ps["qrs_edges"]
-                # rows evaluate with the G∩ safe weight, so only that
-                # direction of extrema widening makes the cached rows stale
-                cap_side = (diff.wmax_grown if self.semiring.minimize
-                            else diff.wmin_shrunk)
-                weights_dirty |= bool(len(cap_side))
+                # rows evaluate with the G∩ safe weight, so any movement of
+                # that extremum — widening OR narrowing — stales cached rows
+                weights_dirty |= any(
+                    len(a) for a in
+                    diff.cap_weight_transitions(self.semiring.minimize)
+                )
                 self._slides += 1
             if pending:
                 k = len(pending)
@@ -417,33 +428,37 @@ class StreamingQuery:
             qrs_edges=self._qrs.num_edges,
         )
 
-    def _eval_snapshot(self, t: int) -> tuple[np.ndarray, int]:
-        """Exact values for log snapshot ``t``: warm-start from R∩ over the QRS."""
+    def _eval_snapshot(self, t: int, bounds=None) -> tuple[np.ndarray, int]:
+        """Exact values for log snapshot ``t``: warm-start from R∩ over the QRS.
+
+        ``bounds`` overrides the warm bounds supplying the R∩ bootstrap —
+        the batched subclasses pass a single new lane's scalar bounds here
+        to prime just that lane.
+        """
+        bounds = self._bounds if bounds is None else bounds
         sr = self.semiring
         v = self.view.log.num_vertices
         mask = self._qrs.snapshot_mask(t)
         if self.method == "cqrs":
             src, dst, w = self._qrs.device_arrays()
             vals, it = incremental_fixpoint(
-                self._bounds.val_cap, src, dst, w, jnp.asarray(mask), sr, v,
+                bounds.val_cap, src, dst, w, jnp.asarray(mask), sr, v,
                 sorted_edges=False,
             )
         else:  # cqrs_ell — Pallas vrelax kernel over row-split ELL
-            from repro.graph.ell import pack_ell
             from repro.kernels.vrelax.ops import (
                 build_presence_ell,
                 concurrent_fixpoint_ell,
             )
 
-            res = self._qrs.valid
-            ell = pack_ell(
-                self._qrs.src[res], self._qrs.dst[res], self._qrs.weight[res],
-                v, row_align=256,
-            )
-            words = mask[res].astype(np.uint32).reshape(-1, 1)  # S=1: bit 0
+            # full slot capacity at sticky row count: shapes — and therefore
+            # the jitted kernel path — are stable across slides; invalid
+            # slots carry all-zero presence words and mask out in-kernel
+            ell = self._qrs.ell_pack()
+            words = mask.astype(np.uint32).reshape(-1, 1)  # S=1: bit 0
             presence_ell = build_presence_ell(jnp.asarray(words), ell)
             vals, it = concurrent_fixpoint_ell(
-                self._bounds.val_cap, ell, presence_ell, sr, v, 1
+                bounds.val_cap, ell, presence_ell, sr, v, 1
             )
             vals = vals[0]
         return np.asarray(vals), int(it)
@@ -453,6 +468,196 @@ class StreamingQuery:
             "method": f"stream[{self.method}]",
             "query": self.semiring.name,
             "source": self.source,
+            "window": (self.view.start, self.view.stop),
+            "slides": self._slides,
+            "frac_uvv": float(np.asarray(self._bounds.uvv).mean()),
+            "qrs_edges": self._qrs.num_edges,
+            **kw,
+        }
+
+
+class StreamingQueryBatch(StreamingQuery):
+    """Q same-semiring sources over ONE sliding window, advanced together.
+
+    The streaming counterpart of :class:`MultiQuery`: warm state carries a
+    leading query axis — ``(Q, V)`` bound fixpoints with ``(Q, V)`` witness
+    parents (:class:`~repro.core.bounds.StreamingBounds` in batched mode)
+    and a SHARED patched QRS over the union of the per-query non-UVV
+    frontiers (:class:`~repro.core.qrs.PatchableQRS` with a folded ``(Q,V)``
+    mask) — so each ``advance()`` folds the slide into every watcher with
+    ONE vmapped launch per maintenance pass and evaluates the appended
+    snapshot for all Q queries in one
+    :func:`~repro.core.concurrent.concurrent_fixpoint_batch` (``cqrs``) or
+    one Pallas vrelax launch with Q folded into the kernel's snapshot axis
+    (``cqrs_ell``).  Results are **bit-for-bit** identical to Q independent
+    :class:`StreamingQuery` instances advanced in a loop: vmapped
+    ``while_loop`` lanes freeze once their own convergence holds, and the
+    extra supersteps the joint kernel loop runs for early-converged queries
+    are idempotent monotone relaxations.
+
+    ``add_source``/``remove_source`` change the query set between advances
+    (the serving membership operations behind
+    ``QueryBatcher.watch``/eviction): adding a lane primes only that lane;
+    existing lanes keep their warm state.
+
+    Passing a dst-range-sharded stream constructs a
+    :class:`~repro.distributed.stream_shard.ShardedStreamingQueryBatch`:
+    the same Q-fold under ``shard_map``, with one all-gather of the
+    ``(Q, V)`` vertex state per superstep.
+    """
+
+    def __new__(cls, stream=None, *args, **kwargs):
+        if cls is StreamingQueryBatch:
+            from repro.graph.shardlog import (
+                ShardedSnapshotLog, ShardedWindowView,
+            )
+
+            if isinstance(stream, (ShardedSnapshotLog, ShardedWindowView)):
+                from repro.distributed.stream_shard import (
+                    ShardedStreamingQueryBatch,
+                )
+
+                return super().__new__(ShardedStreamingQueryBatch)
+        return super().__new__(cls)
+
+    def __init__(
+        self,
+        stream: Union[SnapshotLog, WindowView],
+        query: Union[str, Semiring],
+        sources: Sequence[int],
+        *,
+        window: Optional[int] = None,
+        method: str = "cqrs",
+    ):
+        srcs = [int(s) for s in sources]
+        if not srcs:
+            raise ValueError("StreamingQueryBatch needs at least one source")
+        if len(set(srcs)) != len(srcs):
+            raise ValueError(f"duplicate sources in batch: {srcs}")
+        self.sources = srcs
+        super().__init__(stream, query, srcs[0], window=window, method=method)
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.sources)
+
+    # -- batched substitutions ------------------------------------------------
+    def _make_bounds(self):
+        return StreamingBounds(self.view, self.semiring, self.sources)
+
+    def _lane_bounds(self, source: int):
+        """Scalar bounds solve for one NEW lane (overridden by the sharded
+        subclass); the cold cost a standalone watcher would pay anyway."""
+        return StreamingBounds(self.view, self.semiring, source)
+
+    def _eval_snapshot(self, t: int) -> tuple[np.ndarray, int]:
+        """Exact ``(Q, V)`` values for log snapshot ``t`` in ONE launch."""
+        sr = self.semiring
+        v = self.view.log.num_vertices
+        mask = self._qrs.snapshot_mask(t)
+        if self.method == "cqrs":
+            from repro.core.concurrent import concurrent_fixpoint_batch
+
+            src, dst, w = self._qrs.device_arrays()
+            presence = jnp.asarray(mask.astype(np.uint32).reshape(-1, 1))
+            vals, it = concurrent_fixpoint_batch(
+                self._bounds.val_cap, src, dst, w, presence,
+                jnp.asarray(mask), sr, v, 1, sorted_edges=False,
+            )
+            vals = vals[:, 0]
+        else:  # cqrs_ell: Q folded into the kernel's snapshot axis
+            from repro.kernels.vrelax.ops import (
+                build_presence_ell,
+                concurrent_fixpoint_ell_batch,
+                tile_presence_words,
+            )
+
+            ell = self._qrs.ell_pack()
+            q = len(self.sources)
+            words = tile_presence_words(
+                mask.astype(np.uint32).reshape(-1, 1), 1, q
+            )
+            presence_ell = build_presence_ell(jnp.asarray(words), ell)
+            vals, it = concurrent_fixpoint_ell_batch(
+                self._bounds.val_cap, ell, presence_ell, sr, v, 1, q
+            )
+            vals = vals[:, 0]
+        return np.asarray(vals), int(it)
+
+    # -- results --------------------------------------------------------------
+    @property
+    def results(self) -> np.ndarray:
+        """``(Q, S, V)`` values for the current window."""
+        self._ensure_primed()
+        return np.stack(self._rows, axis=1)
+
+    def result_for(self, source: int) -> np.ndarray:
+        """``(S, V)`` slice of the current window for one source."""
+        try:
+            i = self.sources.index(int(source))
+        except ValueError:
+            raise KeyError(
+                f"source {source} not in this batch; sources: {self.sources}"
+            ) from None
+        return self.results[i]
+
+    # -- serving membership ---------------------------------------------------
+    def add_source(self, source: int) -> None:
+        """Add one query lane; primes ONLY the new lane (warm lanes kept).
+
+        The lane's bounds are solved on the current window (the same cold
+        cost a standalone watcher would pay), appended to the ``(Q, V)``
+        state, and the shared QRS keep rule is refreshed — it can only
+        loosen, so resident edges keep their slots.  Only the NEW lane's
+        rows are evaluated; surviving lanes' cached rows are exact
+        per-snapshot fixpoints independent of the keep superset and are
+        reused as-is.
+        """
+        s = int(source)
+        if s in self.sources:
+            return
+        if self._bounds is None:
+            self.sources.append(s)
+            return
+        self.advance()  # the lane joins at the log tip's window
+        lane = self._lane_bounds(s)
+        self._bounds.append_lane(lane)
+        self.sources.append(s)
+        self._qrs.refresh(np.asarray(self._bounds.uvv))
+        for i, t in enumerate(self.view.snapshots()):
+            row, _ = self._eval_lane_snapshot(t, lane)
+            self._rows[i] = np.concatenate([self._rows[i], row[None]], axis=0)
+
+    def remove_source(self, source: int) -> None:
+        """Drop one query lane (no-op if absent; the last lane must stay).
+
+        Pure state surgery: the lane's bound/parent/row slices are removed
+        and the shared QRS keep rule re-seated; no re-evaluation (the
+        remaining lanes' rows are exact regardless of the keep superset).
+        """
+        s = int(source)
+        if s not in self.sources:
+            return
+        if len(self.sources) == 1:
+            raise ValueError("cannot remove the last source of a batch")
+        i = self.sources.index(s)
+        self.sources.remove(s)
+        if self._bounds is None:
+            return
+        self._bounds.drop_lane(i)
+        self._qrs.refresh(np.asarray(self._bounds.uvv))
+        self._rows = [np.delete(row, i, axis=0) for row in self._rows]
+
+    def _eval_lane_snapshot(self, t: int, lane) -> tuple[np.ndarray, int]:
+        """Scalar-engine eval of snapshot ``t`` for ONE new lane's bounds."""
+        return StreamingQuery._eval_snapshot(self, t, bounds=lane)
+
+    def _set_stats(self, **kw):
+        self.stats = {
+            "method": f"stream[{self.method}]",
+            "query": self.semiring.name,
+            "sources": tuple(self.sources),
+            "num_queries": len(self.sources),
             "window": (self.view.start, self.view.stop),
             "slides": self._slides,
             "frac_uvv": float(np.asarray(self._bounds.uvv).mean()),

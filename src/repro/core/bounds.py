@@ -191,6 +191,23 @@ class StreamingBounds:
     ``val_cup`` are bit-for-bit identical to a fresh :func:`compute_bounds`
     on the slid window's materialized graph.
 
+    Window-local weight extrema add two more transitions: a *narrowing*
+    extremum (the snapshot carrying the extreme weight retired from the
+    window) can only *improve* the safe weight on one side — a plain
+    monotone re-relax — and only *worsen* it on the other, which is handled
+    exactly like a deletion of the old-weight edge (trim + re-relax).
+
+    ``source`` may be a single vertex or a **sequence of Q vertices**: in
+    batched mode every state array carries a leading query axis —
+    ``val_cap``/``val_cup``/``parent_cap``/``parent_cup`` are ``(Q, V)`` —
+    and every maintenance pass (cold solves, monotone re-relaxes,
+    KickStarter trims, parent rebuilds) runs as ONE vmapped launch for all
+    Q queries.  ``jax.vmap`` of ``lax.while_loop`` freezes each lane's
+    carry once its own convergence condition holds, so per-lane value
+    arrays are bit-for-bit identical to Q sequential maintainers (the
+    *reported* superstep count is the lockstep max over lanes; per-lane
+    accounting is a ROADMAP item).
+
     This class is single-host;
     :class:`repro.distributed.stream_shard.ShardedStreamingBounds` runs the
     same maintenance algebra over a dst-range-sharded log under ``shard_map``
@@ -198,14 +215,25 @@ class StreamingBounds:
     superstep) with bit-for-bit identical fixpoints.
     """
 
-    def __init__(self, view, sr: Semiring, source: int):
+    def __init__(self, view, sr: Semiring, source):
         self.view = view
         self.sr = sr
-        self.source = jnp.int32(int(source))
+        if np.ndim(source) == 0:
+            self.sources = None  # scalar mode: (V,) state
+            self.source = jnp.int32(int(source))
+        else:
+            self.sources = [int(s) for s in np.asarray(source).ravel()]
+            if not self.sources:
+                raise ValueError("StreamingBounds needs at least one source")
+            self.source = jnp.asarray(self.sources, jnp.int32)
         self.supersteps = 0
         self._weights_key = None
         self._w_cap = self._w_cup = None
         self._full_init()
+
+    @property
+    def batched(self) -> bool:
+        return self.sources is not None
 
     # -- device-side universe arrays ------------------------------------------
     def _edges(self):
@@ -214,45 +242,126 @@ class StreamingBounds:
     def _weights(self):
         """Safe per-edge weights (w_cap, w_cup), re-uploaded only when stale.
 
-        Keyed on the log's (generation, num_edges, weight_version): the host
-        arrays are mutated in place by edge registration and extrema widening,
-        and ``jnp.asarray`` copies.
+        Weights are the VIEW's window-local extrema (exact for the current
+        window), keyed on (generation, num_edges, weight_epoch): the host
+        arrays are mutated in place by edge registration and extrema
+        refreshes, and ``jnp.asarray`` copies.
         """
-        log = self.view.log
-        key = (log.generation, log.num_edges, log.weight_version)
+        view, log = self.view, self.view.log
+        view._sync_weights()
+        key = (log.generation, log.num_edges, view.weight_epoch)
         if self._weights_key != key:
             sr = self.sr
             self._w_cap = jnp.asarray(
-                sr.intersection_weight(log.weight_min, log.weight_max)
+                sr.intersection_weight(view.weight_min, view.weight_max)
             )
             self._w_cup = jnp.asarray(
-                sr.union_weight(log.weight_min, log.weight_max)
+                sr.union_weight(view.weight_min, view.weight_max)
             )
             self._weights_key = key
         return self._w_cap, self._w_cup
 
+    # -- engine dispatch (scalar ↔ vmapped-Q launches) ------------------------
+    def _cold(self, src, dst, w, mask):
+        sr, v = self.sr, self.view.log.num_vertices
+        if not self.batched:
+            return compute_fixpoint(
+                src, dst, w, mask, sr, self.source, v, sorted_edges=False
+            )
+        vals, iters = jax.vmap(
+            lambda s: compute_fixpoint(
+                src, dst, w, mask, sr, s, v, sorted_edges=False
+            )
+        )(self.source)
+        return vals, iters.max()
+
+    def _refix(self, values, src, dst, w, mask):
+        sr, v = self.sr, self.view.log.num_vertices
+        if not self.batched:
+            return incremental_fixpoint(
+                values, src, dst, w, mask, sr, v, sorted_edges=False
+            )
+        vals, iters = jax.vmap(
+            lambda v0: incremental_fixpoint(
+                v0, src, dst, w, mask, sr, v, sorted_edges=False
+            )
+        )(values)
+        return vals, iters.max()
+
+    def _parents(self, values, src, dst, w, mask):
+        sr, v = self.sr, self.view.log.num_vertices
+        if not self.batched:
+            return compute_parents(
+                values, src, dst, w, mask, sr, self.source, v,
+                sorted_edges=False,
+            )
+        return jax.vmap(
+            lambda v0, s: compute_parents(
+                v0, src, dst, w, mask, sr, s, v, sorted_edges=False
+            )
+        )(values, self.source)
+
+    def _invalidate(self, values, parent, dropped, src):
+        sr, v = self.sr, self.view.log.num_vertices
+        if not self.batched:
+            vals, _ = invalidate_from_deletions(
+                values, parent, dropped, src, sr, self.source, v
+            )
+            return vals
+        vals, _ = jax.vmap(
+            lambda v0, p, s: invalidate_from_deletions(
+                v0, p, dropped, src, sr, s, v
+            )
+        )(values, parent, self.source)
+        return vals
+
     # -- full solve (cold start) ----------------------------------------------
     def _full_init(self):
-        sr, v = self.sr, self.view.log.num_vertices
         src, dst = self._edges()
         w_cap, w_cup = self._weights()
         inter = jnp.asarray(self.view.intersection_mask())
         union = jnp.asarray(self.view.union_mask())
-        self.val_cap, it_cap = compute_fixpoint(
-            src, dst, w_cap, inter, sr, self.source, v, sorted_edges=False
-        )
-        self.val_cup, it_cup = incremental_fixpoint(
-            self.val_cap, src, dst, w_cup, union, sr, v, sorted_edges=False
-        )
-        self.parent_cap = compute_parents(
-            self.val_cap, src, dst, w_cap, inter, sr, self.source, v,
-            sorted_edges=False,
-        )
-        self.parent_cup = compute_parents(
-            self.val_cup, src, dst, w_cup, union, sr, self.source, v,
-            sorted_edges=False,
-        )
+        self.val_cap, it_cap = self._cold(src, dst, w_cap, inter)
+        self.val_cup, it_cup = self._refix(self.val_cap, src, dst, w_cup, union)
+        self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
+        self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
         self.supersteps += int(it_cap) + int(it_cup)
+
+    # -- batched-mode lane membership ----------------------------------------
+    def append_lane(self, lane: "StreamingBounds") -> None:
+        """Append one scalar maintainer's state as a new query lane.
+
+        Owns the lane↔array bookkeeping so callers (the serving batch) never
+        touch per-field internals; keeps the (Q, V) arrays and the source
+        list index-aligned by construction.
+        """
+        if not self.batched or lane.batched:
+            raise ValueError("append_lane needs a batched self + scalar lane")
+        self.sources.append(int(lane.source))
+        self.source = jnp.asarray(self.sources, jnp.int32)
+        self.val_cap = jnp.concatenate([self.val_cap, lane.val_cap[None]], 0)
+        self.val_cup = jnp.concatenate([self.val_cup, lane.val_cup[None]], 0)
+        self.parent_cap = jnp.concatenate(
+            [self.parent_cap, lane.parent_cap[None]], 0
+        )
+        self.parent_cup = jnp.concatenate(
+            [self.parent_cup, lane.parent_cup[None]], 0
+        )
+        self.supersteps += lane.supersteps
+
+    def drop_lane(self, index: int) -> None:
+        """Remove query lane ``index`` from the (Q, V) state."""
+        if not self.batched:
+            raise ValueError("drop_lane needs a batched maintainer")
+        self.sources.pop(index)
+        self.source = jnp.asarray(self.sources, jnp.int32)
+        keep = np.asarray(
+            [j for j in range(self.val_cap.shape[0]) if j != index], np.int32
+        )
+        self.val_cap = self.val_cap[keep]
+        self.val_cup = self.val_cup[keep]
+        self.parent_cap = self.parent_cap[keep]
+        self.parent_cup = self.parent_cup[keep]
 
     # -- one slide ------------------------------------------------------------
     def apply_slide(self, diff, inter_mask=None, union_mask=None) -> int:
@@ -265,15 +374,15 @@ class StreamingBounds:
         intermediate window's masks (``WindowView.rolling_masks``) — the trim
         argument is per-slide: parents recorded on window *k* justify
         invalidations against window *k+1*, not against a window several
-        slides ahead.  Weights, however, are always the log's *current*
-        lifetime extrema: if any queued slide widened them, intermediate
-        slides cannot be folded in consistently and the caller must rebuild
+        slides ahead.  Weights, however, are always the view's *current*
+        window extrema: if any queued slide moved them, intermediate slides
+        cannot be folded in consistently and the caller must rebuild
         instead (``StreamingQuery.advance`` does).
 
         Returns the number of relaxation supersteps spent (0 when the slide
         left both G∩ and G∪ untouched).
         """
-        sr, v = self.sr, self.view.log.num_vertices
+        sr = self.sr
         cap_n = self.view.log.capacity
         if inter_mask is None:
             inter_mask = self.view.intersection_mask()
@@ -283,35 +392,35 @@ class StreamingBounds:
         w_cap, w_cup = self._weights()
         steps = 0
 
-        # Edges whose G∩ safe weight worsened behave like deletions for R∩;
-        # the G∪ safe weight only ever improves, so its side needs a plain
-        # re-relax (and only when the cup-relevant extremum actually moved).
-        cap_weight_worse = diff.wmax_grown if sr.minimize else diff.wmin_shrunk
-        cup_weight_better = diff.wmin_shrunk if sr.minimize else diff.wmax_grown
+        # Window-extrema transitions map onto the two maintenance moves:
+        # a WORSE safe weight behaves like a deletion of the old-weight edge
+        # (trim + re-relax), a BETTER one is a plain monotone re-relax.
+        # Widening worsens the G∩ side and improves the G∪ side; narrowing
+        # (an extreme-weight snapshot retired from the window) the reverse.
+        cap_weight_worse, cap_weight_better = diff.cap_weight_transitions(
+            sr.minimize
+        )
+        cup_weight_worse, cup_weight_better = diff.cup_weight_transitions(
+            sr.minimize
+        )
 
         cap_dropped = _as_mask(cap_n, diff.inter_lost, cap_weight_worse)
         cap_changed = (
             cap_dropped is not None
             or len(diff.inter_gained)
-            or len(cap_weight_worse)
+            or len(cap_weight_better)
         )
         if cap_changed:
             inter = jnp.asarray(inter_mask)
             if cap_dropped is not None:
-                self.val_cap, _ = invalidate_from_deletions(
-                    self.val_cap, self.parent_cap, jnp.asarray(cap_dropped),
-                    src, sr, self.source, v,
+                self.val_cap = self._invalidate(
+                    self.val_cap, self.parent_cap, jnp.asarray(cap_dropped), src
                 )
-            self.val_cap, it = incremental_fixpoint(
-                self.val_cap, src, dst, w_cap, inter, sr, v, sorted_edges=False
-            )
-            self.parent_cap = compute_parents(
-                self.val_cap, src, dst, w_cap, inter, sr, self.source, v,
-                sorted_edges=False,
-            )
+            self.val_cap, it = self._refix(self.val_cap, src, dst, w_cap, inter)
+            self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
             steps += int(it)
 
-        cup_dropped = _as_mask(cap_n, diff.union_lost)
+        cup_dropped = _as_mask(cap_n, diff.union_lost, cup_weight_worse)
         cup_changed = (
             cup_dropped is not None
             or len(diff.union_gained)
@@ -320,17 +429,11 @@ class StreamingBounds:
         if cup_changed:
             union = jnp.asarray(union_mask)
             if cup_dropped is not None:
-                self.val_cup, _ = invalidate_from_deletions(
-                    self.val_cup, self.parent_cup, jnp.asarray(cup_dropped),
-                    src, sr, self.source, v,
+                self.val_cup = self._invalidate(
+                    self.val_cup, self.parent_cup, jnp.asarray(cup_dropped), src
                 )
-            self.val_cup, it = incremental_fixpoint(
-                self.val_cup, src, dst, w_cup, union, sr, v, sorted_edges=False
-            )
-            self.parent_cup = compute_parents(
-                self.val_cup, src, dst, w_cup, union, sr, self.source, v,
-                sorted_edges=False,
-            )
+            self.val_cup, it = self._refix(self.val_cup, src, dst, w_cup, union)
+            self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
             steps += int(it)
 
         self.supersteps += steps

@@ -96,7 +96,9 @@ def concurrent_fixpoint(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters")
+    jax.jit,
+    static_argnames=("sr", "num_vertices", "num_snapshots", "max_iters",
+                     "sorted_edges"),
 )
 def concurrent_fixpoint_batch(
     bootstrap: jax.Array,
@@ -109,6 +111,7 @@ def concurrent_fixpoint_batch(
     num_vertices: int,
     num_snapshots: int,
     max_iters: Optional[int] = None,
+    sorted_edges: bool = True,
 ):
     """Batched multi-query relaxation: value state ``(Q, S, V)``.
 
@@ -125,13 +128,15 @@ def concurrent_fixpoint_batch(
         or ``(Q, S, V)`` per-(query, snapshot) initial state.
       src/dst/weight/valid: shared compacted QRS edge arrays ``(E',)``.
       presence: ``(E', W) uint32`` snapshot bitmask.
+      sorted_edges: edge arrays are dst-sorted (default); the streaming
+        patched-QRS slot layout is unsorted and passes ``False``.
     Returns:
       ``(values (Q, S, V), iters)``.
     """
     values, iters = jax.vmap(
         lambda b: concurrent_fixpoint(
             b, src, dst, weight, presence, valid, sr, num_vertices,
-            num_snapshots, max_iters,
+            num_snapshots, max_iters, sorted_edges,
         )
     )(bootstrap)
     return values, iters.max()

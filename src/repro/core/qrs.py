@@ -246,6 +246,18 @@ class PatchableQRS:
     the resident edge *set* is asserted identical to a fresh :func:`build_qrs`
     in the test suite.
 
+    **Shared (batched) mode** — the streaming analogue of
+    :class:`SharedQRS`: passing a ``(Q, V)`` UVV mask folds it to the union
+    of the per-query non-UVV frontiers (an edge is dropped only when its
+    sink is UVV for *every* query), so Q streaming queries patch and relax
+    ONE compacted edge set.  The per-query safety argument is exactly
+    :class:`SharedQRS`'s.  :meth:`refresh` re-evaluates residency from
+    scratch when the query set itself changes (a serving batch gained or
+    lost a lane).  Safe weights are the view's window-local extrema, and
+    :meth:`ell_pack` exposes the slot arrays as a row-split ELL packing at
+    sticky (amortized-doubling) row capacity so the Pallas kernel path
+    compiles once per capacity class instead of once per slide.
+
     On the dst-range-sharded streaming path the same Algorithm-1 keep rule
     is evaluated as per-shard masks over slide-stable stacked shapes instead
     of compacted slots — see
@@ -253,12 +265,18 @@ class PatchableQRS:
     reads shard-owned destinations, so patching stays shard-local).
     """
 
+    @staticmethod
+    def _fold(uvv) -> np.ndarray:
+        """Fold a per-query ``(Q, V)`` UVV mask to the shared keep-rule mask."""
+        uvv = np.asarray(uvv)
+        return uvv.all(axis=0) if uvv.ndim == 2 else uvv
+
     def __init__(self, view, uvv, sr: Semiring, *, align: int = PAD_ALIGN):
         self.view = view
         self.sr = sr
         self.align = int(align)
         log = view.log
-        self.uvv = np.asarray(uvv).copy()
+        self.uvv = self._fold(uvv).copy()
         n = log.num_edges
         keep = view.union_mask().copy()
         keep[:n] &= ~self.uvv[log.dst[:n]]
@@ -282,6 +300,12 @@ class PatchableQRS:
         self._version = 0
         self._dev_version = -1
         self._dev: tuple = ()
+        # sticky-shape ELL packing of the slot arrays (kernel engine path)
+        from repro.graph.ell import StableEllPacker
+
+        self._ell_packer = StableEllPacker(log.num_vertices)
+        self._ell = None
+        self._ell_version = -1
 
     # -- introspection --------------------------------------------------------
     @property
@@ -297,10 +321,15 @@ class PatchableQRS:
         return self.slot_edge[self.valid]
 
     def _edge_weights(self, ids: np.ndarray) -> np.ndarray:
-        """G∩ safe weights for the given universe ids (gather, not full scan)."""
-        log = self.view.log
+        """G∩ safe weights for the given universe ids (gather, not full scan).
+
+        Reads the view's window-local extrema — exact for the current
+        window, narrowing back when a widening snapshot retires.
+        """
+        view = self.view
+        view._sync_weights()
         return np.asarray(
-            self.sr.intersection_weight(log.weight_min[ids], log.weight_max[ids])
+            self.sr.intersection_weight(view.weight_min[ids], view.weight_max[ids])
         )
 
     # -- patching -------------------------------------------------------------
@@ -315,9 +344,12 @@ class PatchableQRS:
         :meth:`repro.core.bounds.StreamingBounds.apply_slide` — otherwise the
         intermediate QRS states mix slide-``k`` membership transitions with
         final-window residency.
+
+        ``uvv_new`` may be ``(V,)`` or, in shared (batched) mode, ``(Q, V)``
+        — folded to the union of the per-query non-UVV frontiers.
         """
         log = self.view.log
-        uvv_new = np.asarray(uvv_new)
+        uvv_new = self._fold(uvv_new)
         if union_mask is None:
             union_mask = self.view.union_mask()
         if len(self.slot_of) != log.capacity:
@@ -331,31 +363,15 @@ class PatchableQRS:
         if len(touched):
             new_keep = union_mask[touched] & ~uvv_new[log.dst[touched]]
             resident = self.slot_of[touched] >= 0
-            leave_ids = touched[resident & ~new_keep]
-            enter_ids = touched[new_keep & ~resident]
-            left, entered = len(leave_ids), len(enter_ids)
+            left, entered = self._patch_slots(
+                touched[resident & ~new_keep], touched[new_keep & ~resident]
+            )
 
-            if left:
-                slots = self.slot_of[leave_ids]
-                self.valid[slots] = False
-                self.slot_edge[slots] = -1
-                self.slot_of[leave_ids] = -1
-                self._free.extend(int(s) for s in slots)
-            if entered:
-                if entered > len(self._free):
-                    self._grow(self.capacity - len(self._free) + entered)
-                slots = np.asarray(
-                    [self._free.pop() for _ in range(entered)], np.int32
-                )
-                self.slot_edge[slots] = enter_ids
-                self.slot_of[enter_ids] = slots
-                self.src[slots] = log.src[enter_ids]
-                self.dst[slots] = log.dst[enter_ids]
-                self.weight[slots] = self._edge_weights(enter_ids)
-                self.valid[slots] = True
-
-        # safe-weight refresh for resident edges whose extrema widened
-        reweighted = np.concatenate([diff.wmin_shrunk, diff.wmax_grown])
+        # safe-weight refresh for resident edges whose window extrema moved
+        reweighted = np.concatenate([
+            diff.wmin_shrunk, diff.wmax_grown,
+            diff.wmin_grown, diff.wmax_shrunk,
+        ])
         if len(reweighted):
             slots = self.slot_of[reweighted]
             slots = slots[slots >= 0]
@@ -369,6 +385,63 @@ class PatchableQRS:
             "qrs_entered": int(entered),
             "qrs_left": int(left),
             "qrs_touched": int(len(touched)),
+        }
+
+    def _patch_slots(self, leave_ids, enter_ids) -> tuple[int, int]:
+        """Point-update slot residency; returns ``(left, entered)`` counts."""
+        log = self.view.log
+        left, entered = len(leave_ids), len(enter_ids)
+        if left:
+            slots = self.slot_of[leave_ids]
+            self.valid[slots] = False
+            self.slot_edge[slots] = -1
+            self.slot_of[leave_ids] = -1
+            self._free.extend(int(s) for s in slots)
+        if entered:
+            if entered > len(self._free):
+                self._grow(self.capacity - len(self._free) + entered)
+            slots = np.asarray(
+                [self._free.pop() for _ in range(entered)], np.int32
+            )
+            self.slot_edge[slots] = enter_ids
+            self.slot_of[enter_ids] = slots
+            self.src[slots] = log.src[enter_ids]
+            self.dst[slots] = log.dst[enter_ids]
+            self.weight[slots] = self._edge_weights(enter_ids)
+            self.valid[slots] = True
+        return left, entered
+
+    def refresh(self, uvv_new) -> dict:
+        """Re-evaluate residency from scratch against a new UVV mask.
+
+        For UVV changes *caused by a slide*, :meth:`apply_slide` touches only
+        the affected in-edges.  When the **query set** sharing this QRS
+        changes instead (a serving batch gained or lost a lane), the folded
+        mask can flip anywhere, so the Algorithm-1 keep rule is re-evaluated
+        over every universe edge; surviving edges keep their slots (warm
+        device state stays valid where unchanged).  Same-window only.
+        """
+        log = self.view.log
+        uvv_new = self._fold(uvv_new)
+        if len(self.slot_of) != log.capacity:
+            self.slot_of = pad_to(self.slot_of, log.capacity, -1)
+        n = log.num_edges
+        keep = self.view.union_mask().copy()
+        keep[:n] &= ~uvv_new[log.dst[:n]]
+        keep[n:] = False
+        resident = self.slot_of[: log.capacity] >= 0
+        left, entered = self._patch_slots(
+            np.flatnonzero(resident & ~keep).astype(np.int64),
+            np.flatnonzero(keep & ~resident).astype(np.int64),
+        )
+        if entered or left:
+            self._version += 1
+        self.uvv = uvv_new.copy()
+        return {
+            "qrs_edges": self.num_edges,
+            "qrs_entered": int(entered),
+            "qrs_left": int(left),
+            "qrs_touched": int(entered + left),
         }
 
     def _grow(self, needed: int):
@@ -392,6 +465,21 @@ class PatchableQRS:
             )
             self._dev_version = self._version
         return self._dev
+
+    def ell_pack(self):
+        """Row-split ELL packing of the slot arrays at stable shapes.
+
+        The FULL slot capacity is packed — invalid slots carry all-zero
+        presence words, so the kernel masks them exactly like padding — and
+        the row count is held at the packer's sticky amortized capacity, so
+        the jitted kernel path compiles once per (slot, row) capacity class
+        instead of once per slide.  Re-packed only when a slide actually
+        patched the slots.
+        """
+        if self._ell is None or self._ell_version != self._version:
+            self._ell = self._ell_packer.pack(self.src, self.dst, self.weight)
+            self._ell_version = self._version
+        return self._ell
 
     def snapshot_mask(self, t: int) -> np.ndarray:
         """``(capacity,) bool``: resident edges present in log snapshot ``t``."""

@@ -26,6 +26,12 @@ superstep sequence — so partitioning changes which device computes a float,
 never the float.  A host-mesh fallback
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) makes the whole
 subsystem testable in CI.
+
+Serving Q-fold: :class:`ShardedStreamingQueryBatch` carries a leading query
+axis through the same machinery — ``(Q, V)`` state split on the VERTEX axis
+(:func:`_kernels_q`), so one ``shard_map`` launch maintains/evaluates all Q
+watchers with the collective schedule unchanged (the all-gather tile is Q
+rows tall, but it is still exactly one all-gather per superstep).
 """
 from __future__ import annotations
 
@@ -37,9 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.api import StreamingQuery
-from repro.core.bounds import BoundsResult, detect_uvv
+from repro.core.api import StreamingQuery, StreamingQueryBatch
+from repro.core.bounds import BoundsResult, StreamingBounds, detect_uvv
 from repro.core.engine import PARENT_FRAGILE
+from repro.core.qrs import PatchableQRS
 from repro.core.semiring import Semiring
 from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
 from repro.utils.padding import pad_to
@@ -76,6 +83,11 @@ def _kernels(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
     split by vertex range.  Inside the shard body every index is local:
     ``dst_local`` scatters into the shard's own ``v_local`` segment, and
     parent edge ids index the shard's own ``e_cap`` slice.
+
+    MIRROR WARNING: :func:`_kernels_q` carries the same three bodies with a
+    leading query axis (different shapes/specs keep this scalar HLO pinned
+    unchanged) — any fix to the maintenance algebra here MUST be applied
+    there too, and vice versa.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -214,20 +226,193 @@ def _kernels(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
     return {"fixpoint": fixpoint, "parents": parents, "invalidate": invalidate}
 
 
+@functools.lru_cache(maxsize=None)
+def _kernels_q(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
+               model_axis: str, num_queries: int):
+    """Q-batched shard_map maintenance kernels (the serving Q-fold).
+
+    Same bodies as :func:`_kernels` with a leading query axis on every
+    per-vertex array — state is ``(Q, V)`` split on the VERTEX axis, so the
+    per-superstep collective schedule is unchanged: exactly ONE all-gather
+    (now of the ``(Q, v_local)`` tile, one op regardless of Q) plus the
+    scalar convergence ``psum``.  The joint ``while_loop`` runs until the
+    slowest query converges; the extra supersteps for already-converged
+    lanes are idempotent monotone relaxations, so per-lane results are
+    bit-for-bit identical to Q scalar-kernel runs.
+
+    MIRROR WARNING: these are the :func:`_kernels` bodies with a leading
+    query axis — any fix to the maintenance algebra in either function MUST
+    be applied to both (the bit-for-bit batch≡loop tests sample only some
+    semirings/seeds and may not catch a one-sided edit).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    ax = model_axis
+    n_shards = int(mesh.shape[ax])
+    if num_vertices % n_shards:
+        raise ValueError(
+            f"num_vertices {num_vertices} must be divisible by the "
+            f"{n_shards} mesh shards"
+        )
+    del num_queries  # shapes are taken from the operands; key only
+    v_local = num_vertices // n_shards
+    identity = jnp.float32(sr.identity)
+    limit = num_vertices + 1
+    unreached = jnp.int32(num_vertices + 1)
+
+    def local_vertex_ids():
+        return (jnp.arange(v_local, dtype=jnp.int32)
+                + jax.lax.axis_index(ax) * v_local)
+
+    def seg_min_q(data, dst_local):
+        return jax.vmap(
+            lambda c: jax.ops.segment_min(
+                c, dst_local, v_local, indices_are_sorted=False
+            )
+        )(data)
+
+    def fixpoint_body(values_l, src, dst_local, weight, active):
+        # values_l (Q, v_local); one all-gather per superstep, Q-wide
+        def relax(vals_l):
+            vals_full = jax.lax.all_gather(vals_l, ax, axis=1, tiled=True)
+            cand = sr.extend(vals_full[:, src], weight[None, :])  # (Q, E)
+            cand = jnp.where(active[None, :], cand, identity)
+            upd = jax.vmap(
+                lambda c: sr.segment_reduce(
+                    c, dst_local, v_local, indices_are_sorted=False
+                )
+            )(cand)
+            return sr.improve(vals_l, upd)
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < limit)
+
+        def body(state):
+            vals, _, it = state
+            new = relax(vals)
+            changed = jax.lax.psum(
+                jnp.any(new != vals).astype(jnp.int32), ax
+            ) > 0
+            return new, changed, it + 1
+
+        vals, _, iters = jax.lax.while_loop(
+            cond, body, (values_l, jnp.bool_(True), jnp.int32(0))
+        )
+        return vals, iters
+
+    def parents_body(values_l, src, dst_local, weight, active, sources):
+        # per-lane BFS levels over each lane's achieving subgraph
+        vals_full = jax.lax.all_gather(values_l, ax, axis=1, tiled=True)
+        cand = sr.extend(vals_full[:, src], weight[None, :])
+        achieving = (active[None, :] & (cand == values_l[:, dst_local])
+                     & (values_l[:, dst_local] != identity))
+        local_ids = local_vertex_ids()
+        is_source = local_ids[None, :] == sources[:, None]
+        level0 = jnp.where(is_source, 0, unreached).astype(jnp.int32)
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            level, _ = state
+            lvl_full = jax.lax.all_gather(level, ax, axis=1, tiled=True)
+            cand_lvl = jnp.where(
+                achieving & (lvl_full[:, src] < unreached),
+                lvl_full[:, src] + 1, unreached,
+            )
+            upd = seg_min_q(cand_lvl, dst_local)
+            new = jnp.minimum(level, upd)
+            changed = jax.lax.psum(
+                jnp.any(new != level).astype(jnp.int32), ax
+            ) > 0
+            return new, changed
+
+        level, _ = jax.lax.while_loop(cond, body, (level0, jnp.bool_(True)))
+        lvl_full = jax.lax.all_gather(level, ax, axis=1, tiled=True)
+        on_forest = achieving & (lvl_full[:, src] + 1 == level[:, dst_local])
+        eid = jnp.where(
+            on_forest, jnp.arange(e_cap, dtype=jnp.int32)[None, :], e_cap
+        )
+        parent = seg_min_q(eid, dst_local)
+        parent = jnp.where(parent >= e_cap, -1, parent)
+        fragile = (values_l != identity) & (level == unreached)
+        parent = jnp.where(fragile, jnp.int32(PARENT_FRAGILE), parent)
+        return jnp.where(is_source, -1, parent)
+
+    def invalidate_body(values_l, parent_l, deleted, src, sources):
+        # deleted is shared across lanes (slide transitions are structural);
+        # parents are per-lane, so the invalid frontier is too
+        has_parent = parent_l >= 0
+        pidx = jnp.maximum(parent_l, 0)  # (Q, v_local) shard-local edge ids
+        invalid0 = (has_parent & deleted[pidx]) | (parent_l == PARENT_FRAGILE)
+        parent_src = src[pidx]  # (Q, v_local) global vertex ids
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            invalid, _ = state
+            inv_full = jax.lax.all_gather(invalid, ax, axis=1, tiled=True)
+            nxt = invalid | (
+                has_parent & jnp.take_along_axis(inv_full, parent_src, axis=1)
+            )
+            changed = jax.lax.psum(
+                jnp.any(nxt != invalid).astype(jnp.int32), ax
+            ) > 0
+            return nxt, changed
+
+        invalid, _ = jax.lax.while_loop(
+            cond, body, (invalid0, jnp.bool_(True))
+        )
+        new_values = jnp.where(invalid, identity, values_l)
+        new_values = jnp.where(
+            local_vertex_ids()[None, :] == sources[:, None],
+            jnp.float32(sr.source), new_values,
+        )
+        return new_values, invalid
+
+    vq = P(None, ax)  # (Q, V) state split on the vertex axis
+    e = P(ax)  # flat per-shard stacks
+    r = P()  # replicated: (Q,) sources
+    fixpoint = jax.jit(shard_map(
+        fixpoint_body, mesh=mesh,
+        in_specs=(vq, e, e, e, e), out_specs=(vq, r), check_rep=False,
+    ))
+    parents = jax.jit(shard_map(
+        parents_body, mesh=mesh,
+        in_specs=(vq, e, e, e, e, r), out_specs=vq, check_rep=False,
+    ))
+    invalidate = jax.jit(shard_map(
+        invalidate_body, mesh=mesh,
+        in_specs=(vq, vq, e, e, r), out_specs=(vq, vq), check_rep=False,
+    ))
+    return {"fixpoint": fixpoint, "parents": parents, "invalidate": invalidate}
+
+
 class ShardedStreamingBounds:
     """Sharded drop-in for :class:`~repro.core.bounds.StreamingBounds`.
 
     Same maintenance algebra — monotone re-relax where G∩/G∪ grew,
-    witness-parent trims where they shrank, G∩ weight widening treated as
-    deletion — but every pass runs shard-locally under ``shard_map`` with one
-    per-superstep all-gather of the per-vertex state.  ``apply_slide``
-    consumes a :class:`~repro.graph.shardlog.ShardSlideDiff` (per-shard ids)
-    and per-shard mask lists; ``val_cap``/``val_cup`` remain global ``(V,)``
+    witness-parent trims where they shrank, safe-weight worsening treated as
+    deletion and improvement as re-relax — but every pass runs shard-locally
+    under ``shard_map`` with one per-superstep all-gather of the per-vertex
+    state.  ``apply_slide`` consumes a
+    :class:`~repro.graph.shardlog.ShardSlideDiff` (per-shard ids) and
+    per-shard mask lists; ``val_cap``/``val_cup`` remain global ``(V,)``
     arrays (device-sharded by vertex range), bit-for-bit equal to the
-    single-host maintenance.
+    single-host maintenance.  Safe weights are the per-shard views'
+    window-local extrema (exact, narrowing when a widening snapshot
+    retires).
+
+    ``source`` may be a sequence of Q vertices (batched mode, mirroring
+    :class:`~repro.core.bounds.StreamingBounds`): state becomes ``(Q, V)``
+    split on the VERTEX axis and every pass is one Q-batched ``shard_map``
+    launch (:func:`_kernels_q`) with still exactly one all-gather per
+    superstep.
     """
 
-    def __init__(self, view: ShardedWindowView, sr: Semiring, source: int,
+    def __init__(self, view: ShardedWindowView, sr: Semiring, source,
                  mesh: Optional[Mesh] = None, *, model_axis: str = MODEL_AXIS):
         self.view = view
         self.sr = sr
@@ -241,31 +426,50 @@ class ShardedStreamingBounds:
                 f"{view.log.n_shards} shards"
             )
         self.model_axis = model_axis
-        self.source = jnp.int32(int(source))
+        if np.ndim(source) == 0:
+            self.sources = None  # scalar mode: (V,) state
+            self.source = jnp.int32(int(source))
+        else:
+            self.sources = [int(s) for s in np.asarray(source).ravel()]
+            if not self.sources:
+                raise ValueError("ShardedStreamingBounds needs ≥1 source")
+            self.source = jnp.asarray(self.sources, jnp.int32)
         self.supersteps = 0
         self._dev_key = None
         self._dev: dict = {}
         self._full_init()
 
+    @property
+    def batched(self) -> bool:
+        return self.sources is not None
+
     # -- device-side stacked arrays -------------------------------------------
     def _kernels(self):
+        if self.batched:
+            return _kernels_q(
+                self.mesh, self.sr, self.view.log.num_vertices,
+                self.view.log.capacity, self.model_axis, len(self.sources),
+            )
         return _kernels(self.mesh, self.sr, self.view.log.num_vertices,
                         self.view.log.capacity, self.model_axis)
 
     def _device(self) -> dict:
-        """Stacked edge arrays + safe weights, re-uploaded only when stale."""
+        """Stacked edge arrays + safe weights, re-uploaded only when stale.
+
+        Weights are the per-shard views' window-local extrema, keyed on the
+        view's ``weight_epoch`` on top of the log's structural state.
+        """
         log = self.view.log
         arrs = log.stacked_arrays()
-        key = (log.state_key(), arrs["e_cap"])
+        key = (log.state_key(), arrs["e_cap"], self.view.weight_epoch)
         if self._dev_key != key:
             sr = self.sr
+            wmin, wmax = self.view.stacked_weight_extrema()
             self._dev = {
                 "src": jnp.asarray(arrs["src"]),
                 "dst_local": jnp.asarray(arrs["dst_local"]),
-                "w_cap": jnp.asarray(sr.intersection_weight(
-                    arrs["weight_min"], arrs["weight_max"])),
-                "w_cup": jnp.asarray(sr.union_weight(
-                    arrs["weight_min"], arrs["weight_max"])),
+                "w_cap": jnp.asarray(sr.intersection_weight(wmin, wmax)),
+                "w_cup": jnp.asarray(sr.union_weight(wmin, wmax)),
             }
             self._dev_key = key
         return self._dev
@@ -279,8 +483,14 @@ class ShardedStreamingBounds:
         dev, k = self._device(), self._kernels()
         inter = self._stack(self.view.intersection_masks())
         union = self._stack(self.view.union_masks())
-        boot = np.full(v, sr.identity, np.float32)
-        boot[int(self.source)] = np.float32(sr.source)
+        if self.batched:
+            boot = np.full((len(self.sources), v), sr.identity, np.float32)
+            boot[np.arange(len(self.sources)), self.sources] = np.float32(
+                sr.source
+            )
+        else:
+            boot = np.full(v, sr.identity, np.float32)
+            boot[int(self.source)] = np.float32(sr.source)
         self.val_cap, it_cap = k["fixpoint"](
             jnp.asarray(boot), dev["src"], dev["dst_local"], dev["w_cap"], inter
         )
@@ -296,6 +506,12 @@ class ShardedStreamingBounds:
             self.source,
         )
         self.supersteps += int(it_cap) + int(it_cup)
+
+    # batched-mode lane membership: the state layout (sources/source +
+    # val/parent arrays + supersteps) deliberately matches StreamingBounds,
+    # so the bookkeeping is shared rather than re-encoded
+    append_lane = StreamingBounds.append_lane
+    drop_lane = StreamingBounds.drop_lane
 
     # -- one slide ------------------------------------------------------------
     def apply_slide(self, diff, inter_masks=None, union_masks=None) -> int:
@@ -316,12 +532,16 @@ class ShardedStreamingBounds:
         per = diff.shards
         steps = 0
 
-        cap_weight_worse = [
-            d.wmax_grown if sr.minimize else d.wmin_shrunk for d in per
-        ]
-        cup_weight_better = [
-            d.wmin_shrunk if sr.minimize else d.wmax_grown for d in per
-        ]
+        # window-extrema transitions: a WORSE safe weight behaves like a
+        # deletion of the old-weight edge, a BETTER one is a plain monotone
+        # re-relax (per-shard, via the SlideDiff single-source-of-truth
+        # mapping — same moves as the single-host StreamingBounds)
+        cap_trans = [d.cap_weight_transitions(sr.minimize) for d in per]
+        cup_trans = [d.cup_weight_transitions(sr.minimize) for d in per]
+        cap_weight_worse = [t[0] for t in cap_trans]
+        cap_weight_better = [t[1] for t in cap_trans]
+        cup_weight_worse = [t[0] for t in cup_trans]
+        cup_weight_better = [t[1] for t in cup_trans]
 
         cap_drop_ids = [
             np.concatenate([d.inter_lost, w]) for d, w in zip(per, cap_weight_worse)
@@ -330,7 +550,7 @@ class ShardedStreamingBounds:
         cap_changed = bool(
             n_cap_drop
             or any(len(d.inter_gained) for d in per)
-            or any(len(a) for a in cap_weight_worse)
+            or any(len(a) for a in cap_weight_better)
         )
         if cap_changed:
             inter = self._stack(inter_masks)
@@ -349,7 +569,9 @@ class ShardedStreamingBounds:
             )
             steps += int(it)
 
-        cup_drop_ids = [d.union_lost for d in per]
+        cup_drop_ids = [
+            np.concatenate([d.union_lost, w]) for d, w in zip(per, cup_weight_worse)
+        ]
         n_cup_drop = sum(len(a) for a in cup_drop_ids)
         cup_changed = bool(
             n_cup_drop
@@ -411,7 +633,8 @@ class ShardedQRSMask:
     def __init__(self, view: ShardedWindowView, uvv, sr: Semiring):
         self.view = view
         self.sr = sr
-        self.uvv = np.asarray(uvv).copy()
+        # (Q, V) masks fold to the shared keep rule (see PatchableQRS)
+        self.uvv = PatchableQRS._fold(uvv).copy()
         self._keep = self._compute_keep(view.union_masks(), self.uvv)
 
     def _compute_keep(self, union_masks, uvv) -> list[np.ndarray]:
@@ -430,7 +653,7 @@ class ShardedQRSMask:
 
     def apply_slide(self, diff, uvv_new, union_mask=None) -> dict:
         """Recompute per-shard keep masks for one slide; returns patch stats."""
-        uvv_new = np.asarray(uvv_new)
+        uvv_new = PatchableQRS._fold(uvv_new)
         unions = (union_mask if union_mask is not None
                   else self.view.union_masks())
         new_keep = self._compute_keep(unions, uvv_new)
@@ -448,6 +671,23 @@ class ShardedQRSMask:
             "qrs_touched": int(entered + left),
         }
 
+    def refresh(self, uvv_new) -> dict:
+        """Re-evaluate the keep masks for a new UVV mask (same window).
+
+        The masks are recomputed in full on every slide anyway, so a query-
+        set change (serving batch gained/lost a lane) is just another
+        recompute against the view's current union masks.
+        """
+        uvv_new = PatchableQRS._fold(uvv_new)
+        self._keep = self._compute_keep(self.view.union_masks(), uvv_new)
+        self.uvv = uvv_new.copy()
+        return {
+            "qrs_edges": self.num_edges,
+            "qrs_entered": 0,
+            "qrs_left": 0,
+            "qrs_touched": 0,
+        }
+
     def snapshot_masks(self, t: int) -> list[np.ndarray]:
         """Per-shard ``keep ∧ present-in-snapshot-t`` evaluation masks."""
         out = []
@@ -457,7 +697,57 @@ class ShardedQRSMask:
         return out
 
 
-class ShardedStreamingQuery(StreamingQuery):
+class _ShardedEllCache:
+    """Sticky-shape ELL packing of the stacked shard universes (global dst).
+
+    The ``cqrs_ell`` engine needs global-dst edge arrays; they change only
+    when a shard registers edges or window weight extrema move, so the pack
+    is cached on ``(state_key, weight_epoch)`` and rows are held at the
+    packer's amortized capacity (compile-once per capacity class).  Padding
+    and non-QRS slots are masked per snapshot by all-zero presence words.
+    """
+
+    def __init__(self, view: ShardedWindowView, sr: Semiring):
+        self.view = view
+        self.sr = sr
+        self._packer = None
+        self._ell = None
+        self._key = None
+
+    def pack(self):
+        from repro.graph.ell import StableEllPacker
+
+        log = self.view.log
+        key = (log.state_key(), self.view.weight_epoch)
+        if self._key != key:
+            cap, n = log.capacity, log.n_shards
+            src = np.zeros((n, cap), np.int32)
+            dst = np.zeros((n, cap), np.int32)
+            for s, sh in enumerate(log.shards):
+                k = sh.num_edges
+                src[s, :k] = sh.src[:k]
+                dst[s, :k] = sh.dst[:k]
+            wmin, wmax = self.view.stacked_weight_extrema()
+            w = np.asarray(self.sr.intersection_weight(wmin, wmax))
+            if self._packer is None:
+                self._packer = StableEllPacker(log.num_vertices)
+            self._ell = self._packer.pack(
+                src.reshape(-1), dst.reshape(-1), w
+            )
+            self._key = key
+        return self._ell
+
+
+class _ShardedEllMixin:
+    """Shared ``cqrs_ell`` packing hook for the sharded query classes."""
+
+    def _ell_pack(self):
+        if getattr(self, "_ell_cache", None) is None:
+            self._ell_cache = _ShardedEllCache(self.view, self.semiring)
+        return self._ell_cache.pack()
+
+
+class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
     """:class:`~repro.core.api.StreamingQuery` over a dst-range-sharded log.
 
     Constructed automatically when ``StreamingQuery(...)`` receives a
@@ -470,8 +760,12 @@ class ShardedStreamingQuery(StreamingQuery):
     single-host query on the same stream.
 
     ``mesh`` defaults to a 1-D host mesh over ``n_shards`` local devices
-    (:func:`host_mesh`); only the flat-XLA ``method="cqrs"`` engine is
-    supported on the sharded path.
+    (:func:`host_mesh`).  ``method="cqrs"`` evaluates the appended snapshot
+    through the SPMD fixpoint kernel; ``method="cqrs_ell"`` runs the Pallas
+    vrelax kernel over a sticky-shape ELL packing of the stacked shard
+    universes (bounds maintenance stays SPMD; the single-snapshot kernel
+    launch is replicated data-parallel — row-split min/max reductions are
+    order-exact, so the floats match the flat path bit-for-bit).
     """
 
     def __init__(self, stream, query, source: int, *,
@@ -490,14 +784,11 @@ class ShardedStreamingQuery(StreamingQuery):
                 f"window={window} conflicts with the shared view's size "
                 f"{stream.size}"
             )
-        if method != "cqrs":
-            raise ValueError(
-                f"sharded streaming supports method='cqrs' only, got {method!r}"
-            )
         self.mesh = mesh if mesh is not None else host_mesh(
             stream.log.n_shards, model_axis
         )
         self.model_axis = model_axis
+        self._ell_cache = None
         super().__init__(stream, query, source, method=method)
         self._owns_view = owns_view
 
@@ -513,13 +804,121 @@ class ShardedStreamingQuery(StreamingQuery):
             self.view, np.asarray(self._bounds.uvv), self.semiring
         )
 
-    def _eval_snapshot(self, t: int):
+    def _eval_snapshot(self, t: int, bounds=None):
         """Exact values for log snapshot ``t``: warm-start from R∩ over the
-        shard-local ``keep ∧ present`` masks (one shard_map launch)."""
-        bounds = self._bounds
-        dev, k = bounds._device(), bounds._kernels()
-        mask = bounds._stack(self._qrs.snapshot_masks(t))
-        vals, it = k["fixpoint"](
-            bounds.val_cap, dev["src"], dev["dst_local"], dev["w_cap"], mask
+        shard-local ``keep ∧ present`` masks (one launch).
+
+        ``bounds`` overrides the warm bounds supplying the R∩ bootstrap and
+        the device/kernel caches — the batched subclass passes one new
+        lane's scalar bounds here to prime just that lane.
+        """
+        bounds = self._bounds if bounds is None else bounds
+        if self.method == "cqrs":
+            dev, k = bounds._device(), bounds._kernels()
+            mask = bounds._stack(self._qrs.snapshot_masks(t))
+            vals, it = k["fixpoint"](
+                bounds.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
+                mask,
+            )
+            return np.asarray(vals), int(it)
+        # cqrs_ell — Pallas vrelax over the stacked universe, sticky shapes
+        from repro.kernels.vrelax.ops import (
+            build_presence_ell, concurrent_fixpoint_ell,
         )
-        return np.asarray(vals), int(it)
+
+        sr, v = self.semiring, self.view.log.num_vertices
+        ell = self._ell_pack()
+        mask = self.view.log.stack_masks(self._qrs.snapshot_masks(t))
+        words = mask.astype(np.uint32).reshape(-1, 1)  # S=1: bit 0
+        presence_ell = build_presence_ell(jnp.asarray(words), ell)
+        vals, it = concurrent_fixpoint_ell(
+            bounds.val_cap, ell, presence_ell, sr, v, 1
+        )
+        return np.asarray(vals[0]), int(it)
+
+
+class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
+    """Q-batched sharded streaming query — the serving Q-fold under SPMD.
+
+    Constructed automatically when ``StreamingQueryBatch(...)`` receives a
+    sharded stream.  Warm state is ``(Q, V)`` split on the VERTEX axis:
+    every maintenance pass runs as one Q-batched ``shard_map`` launch
+    (:func:`_kernels_q`) with still exactly ONE all-gather of the per-vertex
+    state per superstep, and the appended snapshot is evaluated for all Q
+    queries in one launch (``cqrs``: the batched SPMD fixpoint kernel;
+    ``cqrs_ell``: the Pallas vrelax kernel with Q folded into its snapshot
+    axis).  Results are bit-for-bit identical to Q sequential
+    :class:`ShardedStreamingQuery` instances — and to the single-host loop.
+    """
+
+    def __init__(self, stream, query, sources, *,
+                 window: Optional[int] = None, method: str = "cqrs",
+                 mesh: Optional[Mesh] = None, model_axis: str = MODEL_AXIS):
+        owns_view = isinstance(stream, ShardedSnapshotLog)
+        if owns_view:
+            stream = ShardedWindowView(stream, size=window)
+            window = None
+        elif not isinstance(stream, ShardedWindowView):
+            raise TypeError(
+                f"ShardedStreamingQueryBatch needs a ShardedSnapshotLog or "
+                f"ShardedWindowView, got {type(stream).__name__}"
+            )
+        self.mesh = mesh if mesh is not None else host_mesh(
+            stream.log.n_shards, model_axis
+        )
+        self.model_axis = model_axis
+        self._ell_cache = None
+        super().__init__(stream, query, sources, window=window, method=method)
+        self._owns_view = owns_view
+
+    # -- sharded substitutions ------------------------------------------------
+    def _make_bounds(self):
+        return ShardedStreamingBounds(
+            self.view, self.semiring, self.sources, self.mesh,
+            model_axis=self.model_axis,
+        )
+
+    def _lane_bounds(self, source: int):
+        return ShardedStreamingBounds(
+            self.view, self.semiring, source, self.mesh,
+            model_axis=self.model_axis,
+        )
+
+    def _make_qrs(self):
+        return ShardedQRSMask(
+            self.view, np.asarray(self._bounds.uvv), self.semiring
+        )
+
+    def _eval_snapshot(self, t: int):
+        """Exact ``(Q, V)`` values for log snapshot ``t`` in ONE launch."""
+        bounds = self._bounds
+        if self.method == "cqrs":
+            dev, k = bounds._device(), bounds._kernels()
+            mask = bounds._stack(self._qrs.snapshot_masks(t))
+            vals, it = k["fixpoint"](
+                bounds.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
+                mask,
+            )
+            return np.asarray(vals), int(it)
+        # cqrs_ell: Q folded into the kernel's snapshot axis
+        from repro.kernels.vrelax.ops import (
+            build_presence_ell, concurrent_fixpoint_ell_batch,
+            tile_presence_words,
+        )
+
+        sr, v = self.semiring, self.view.log.num_vertices
+        ell = self._ell_pack()
+        mask = self.view.log.stack_masks(self._qrs.snapshot_masks(t))
+        q = len(self.sources)
+        words = tile_presence_words(
+            mask.astype(np.uint32).reshape(-1, 1), 1, q
+        )
+        presence_ell = build_presence_ell(jnp.asarray(words), ell)
+        vals, it = concurrent_fixpoint_ell_batch(
+            bounds.val_cap, ell, presence_ell, sr, v, 1, q
+        )
+        return np.asarray(vals[:, 0]), int(it)
+
+    def _eval_lane_snapshot(self, t: int, lane):
+        """Scalar shard_map eval of snapshot ``t`` for ONE new lane."""
+        return ShardedStreamingQuery._eval_snapshot(self, t, bounds=lane)

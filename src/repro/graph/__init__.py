@@ -6,7 +6,7 @@ from repro.graph.generators import (
     generate_evolving_stream,
     generate_uniform_weights,
 )
-from repro.graph.ell import EllPack, pack_ell
+from repro.graph.ell import EllPack, StableEllPacker, pack_ell
 from repro.graph.sampler import NeighborSampler
 
 __all__ = [
@@ -24,6 +24,7 @@ __all__ = [
     "generate_evolving_stream",
     "generate_uniform_weights",
     "EllPack",
+    "StableEllPacker",
     "pack_ell",
     "NeighborSampler",
 ]

@@ -56,8 +56,14 @@ def pack_ell(
     *,
     slot_width: int = 128,
     row_align: int = 8,
+    min_rows: int = 0,
 ) -> EllPack:
-    """Pack (src→dst, w) incoming edges into row-split ELL (host side)."""
+    """Pack (src→dst, w) incoming edges into row-split ELL (host side).
+
+    ``min_rows`` pads the packed row count up to a caller-chosen floor, so a
+    consumer re-packing a churning edge set can hold its array shapes stable
+    (see :class:`StableEllPacker`).
+    """
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
     weight = np.asarray(weight, np.float32)
@@ -71,7 +77,7 @@ def pack_ell(
     # vertices with zero degree get no row at all
     rows_per_vertex = np.where(deg == 0, 0, rows_per_vertex)
     n_rows = int(rows_per_vertex.sum())
-    n_rows_pad = round_up(max(n_rows, 1), row_align)
+    n_rows_pad = round_up(max(n_rows, min_rows, 1), row_align)
 
     row2vertex = np.zeros(n_rows_pad, np.int32)
     out_src = np.zeros((n_rows_pad, slot_width), np.int32)
@@ -105,3 +111,48 @@ def pack_ell(
         num_vertices=int(num_vertices),
         slot_width=int(slot_width),
     )
+
+
+class StableEllPacker:
+    """Re-pack a churning edge set into ELL at sticky row capacity.
+
+    Per-slide ``pack_ell`` calls on a streaming edge set can change the
+    packed row count every slide, retriggering XLA compilation of every
+    consumer whose shapes include it.  This helper keeps the row count at an
+    **amortized-doubling capacity** (the same policy the streaming substrate
+    uses for flat edge arrays): packs reuse the previous row capacity while
+    the edges fit, and growth jumps past the immediate need so at most
+    O(log rows) distinct shapes — hence compilations — occur over a stream's
+    lifetime.
+    """
+
+    def __init__(self, num_vertices: int, *, slot_width: int = 128,
+                 row_align: int = 8):
+        self.num_vertices = int(num_vertices)
+        self.slot_width = int(slot_width)
+        self.row_align = int(row_align)
+        self.num_rows = 0  # current sticky row capacity (0 = unset)
+
+    def _natural_rows(self, dst) -> int:
+        """Row count the edge set needs, from the dst degree histogram
+        alone (much cheaper than a probe pack)."""
+        deg = np.bincount(
+            np.asarray(dst, np.int64), minlength=self.num_vertices
+        )
+        rows = np.maximum(1, (deg + self.slot_width - 1) // self.slot_width)
+        return int(np.where(deg == 0, 0, rows).sum())
+
+    def pack(self, src, dst, weight) -> EllPack:
+        """``pack_ell`` at the sticky row capacity, growing it if needed."""
+        need = self._natural_rows(dst)
+        if need > self.num_rows:
+            # growth: double past the immediate need, then pack exactly once
+            floor = max(need, 2 * self.num_rows) if self.num_rows else need
+            self.num_rows = round_up(floor, self.row_align)
+        ell = pack_ell(
+            src, dst, weight, self.num_vertices,
+            slot_width=self.slot_width, row_align=self.row_align,
+            min_rows=self.num_rows,
+        )
+        self.num_rows = ell.num_rows
+        return ell

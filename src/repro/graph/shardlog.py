@@ -71,6 +71,23 @@ class ShardSlideDiff:
     def wmax_grown(self) -> np.ndarray:  # shard-local ids; lengths only
         return self._concat("wmax_grown")
 
+    @property
+    def wmin_grown(self) -> np.ndarray:  # shard-local ids; lengths only
+        return self._concat("wmin_grown")
+
+    @property
+    def wmax_shrunk(self) -> np.ndarray:  # shard-local ids; lengths only
+        return self._concat("wmax_shrunk")
+
+    def weights_changed(self) -> bool:
+        """True when any shard's window weight extremum moved this slide."""
+        return any(d.weights_changed() for d in self.shards)
+
+    # same worse/better mapping as SlideDiff, over the concatenated ids
+    # (lengths only — see class docstring); reused, not re-encoded
+    cap_weight_transitions = SlideDiff.cap_weight_transitions
+    cup_weight_transitions = SlideDiff.cup_weight_transitions
+
     def is_empty(self) -> bool:
         return all(d.is_empty() for d in self.shards)
 
@@ -339,7 +356,31 @@ class ShardedWindowView:
             out.append(self.slide())
         return out
 
-    # -- per-shard masks ------------------------------------------------------
+    # -- per-shard masks / weights --------------------------------------------
+    @property
+    def weight_epoch(self) -> int:
+        """Bumped whenever any shard's window weight extrema change."""
+        return sum(v.weight_epoch for v in self.views)
+
+    def stacked_weight_extrema(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-shard window-local ``(weight_min, weight_max)`` stacked flat.
+
+        Matches the :meth:`ShardedSnapshotLog.stacked_arrays` layout
+        (``(n_shards * capacity,)``, each shard padded to the uniform
+        capacity) so the SPMD bounds kernels can consume exact window
+        extrema instead of the log's lifetime ones.
+        """
+        cap = self.log.capacity
+        for v in self.views:
+            v._sync_capacity()
+        wmin = np.stack(
+            [pad_to(v.weight_min[: cap], cap, 0.0) for v in self.views]
+        ).reshape(-1)
+        wmax = np.stack(
+            [pad_to(v.weight_max[: cap], cap, 0.0) for v in self.views]
+        ).reshape(-1)
+        return wmin, wmax
+
     def union_masks(self) -> list[np.ndarray]:
         return [v.union_mask() for v in self.views]
 
@@ -376,14 +417,16 @@ class ShardedWindowView:
         bit-for-bit.
         """
         log = self.log
+        for v in self.views:
+            v._sync_capacity()
         counts = [sh.num_edges for sh in log.shards]
         src = np.concatenate([sh.src[:k] for sh, k in zip(log.shards, counts)])
         dst = np.concatenate([sh.dst[:k] for sh, k in zip(log.shards, counts)])
         wmin = np.concatenate(
-            [sh.weight_min[:k] for sh, k in zip(log.shards, counts)]
+            [v.weight_min[:k] for v, k in zip(self.views, counts)]
         )
         wmax = np.concatenate(
-            [sh.weight_max[:k] for sh, k in zip(log.shards, counts)]
+            [v.weight_max[:k] for v, k in zip(self.views, counts)]
         )
         offsets = np.cumsum([0] + counts[:-1])
         n = int(sum(counts))

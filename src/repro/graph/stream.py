@@ -23,11 +23,19 @@ module provides the streaming counterpart:
 
 ``WindowView.materialize()`` produces a canonical (dst-sorted, bit-packed)
 :class:`EvolvingGraph` for the current window — the reference substrate the
-streaming engine must match bit-for-bit.  Weight extrema are tracked over the
-log lifetime (monotonically widening), which keeps them *safe* for both bound
-directions on every window; they coincide with per-window extrema whenever an
-edge's weight is stable across re-adds (the regime of the paper's update
-streams and of :func:`repro.graph.generators.generate_evolving_stream`).
+streaming engine must match bit-for-bit.  Weight extrema are **window-local
+and exact**: the log records every per-edge weight *assignment* (a re-add
+whose weight differs from the one in effect), and each view maintains the
+min/max of the weights in effect over the snapshots of *its* window where
+the edge is present — so a weight-widening snapshot retiring from the window
+narrows the extrema back, matching a from-deltas
+:func:`repro.graph.structures.build_evolving_graph` of the same window.
+Narrowing/widening transitions are emitted per slide
+(:class:`SlideDiff` ``wmin_*``/``wmax_*`` fields) for the incremental bounds
+layers.  For edges with one lifetime weight (the regime of the paper's
+update streams and of
+:func:`repro.graph.generators.generate_evolving_stream`) the extrema are the
+degenerate ``(w, w)`` and never change.
 """
 from __future__ import annotations
 
@@ -52,8 +60,11 @@ class SlideDiff:
 
     All fields are arrays of universe edge ids (append-order, stable).  The
     ``union_*`` / ``inter_*`` transitions are derived from the witness-count
-    array; ``wmin_shrunk`` / ``wmax_grown`` list edges whose lifetime weight
-    extrema widened during the append that produced this slide.
+    array.  The ``wmin_*`` / ``wmax_*`` fields track the view's
+    **window-local** weight extrema: ``wmin_shrunk`` / ``wmax_grown`` list
+    edges whose extrema *widened* this slide (a new weight entered the
+    window), ``wmin_grown`` / ``wmax_shrunk`` edges whose extrema *narrowed*
+    (the snapshot carrying an extreme weight retired from the window).
     """
 
     appended: int  # log index of the snapshot that entered the window
@@ -62,15 +73,40 @@ class SlideDiff:
     union_lost: np.ndarray  # witness >0 → 0
     inter_gained: np.ndarray  # witness <size → ==size
     inter_lost: np.ndarray  # witness ==size → <size
-    wmin_shrunk: np.ndarray  # weight_min decreased during this append
-    wmax_grown: np.ndarray  # weight_max increased during this append
+    wmin_shrunk: np.ndarray  # window weight_min decreased (widened)
+    wmax_grown: np.ndarray  # window weight_max increased (widened)
+    wmin_grown: np.ndarray = _EMPTY  # window weight_min increased (narrowed)
+    wmax_shrunk: np.ndarray = _EMPTY  # window weight_max decreased (narrowed)
 
     def is_empty(self) -> bool:
         return not (
             len(self.union_gained) or len(self.union_lost)
             or len(self.inter_gained) or len(self.inter_lost)
             or len(self.wmin_shrunk) or len(self.wmax_grown)
+            or len(self.wmin_grown) or len(self.wmax_shrunk)
         )
+
+    def weights_changed(self) -> bool:
+        """True when any window weight extremum moved this slide."""
+        return bool(
+            len(self.wmin_shrunk) or len(self.wmax_grown)
+            or len(self.wmin_grown) or len(self.wmax_shrunk)
+        )
+
+    # The single source of truth for which extremum transition worsens or
+    # improves which bound side, per semiring direction: w_cap is wmax for
+    # CASMIN (minimize) queries and wmin for CASMAX, w_cup the reverse.
+    # Every consumer (both bounds maintainers, row staleness in advance())
+    # goes through these two accessors so the mapping cannot diverge.
+    def cap_weight_transitions(self, minimize: bool):
+        """``(worse, better)`` edge ids for the G∩ safe weight this slide."""
+        return ((self.wmax_grown, self.wmax_shrunk) if minimize
+                else (self.wmin_shrunk, self.wmin_grown))
+
+    def cup_weight_transitions(self, minimize: bool):
+        """``(worse, better)`` edge ids for the G∪ safe weight this slide."""
+        return ((self.wmin_grown, self.wmin_shrunk) if minimize
+                else (self.wmax_shrunk, self.wmax_grown))
 
 
 class SnapshotLog:
@@ -92,6 +128,11 @@ class SnapshotLog:
         self.dst = np.zeros(self._capacity, np.int32)
         self.weight_min = np.zeros(self._capacity, np.float32)
         self.weight_max = np.zeros(self._capacity, np.float32)
+        self.weight_tip = np.zeros(self._capacity, np.float32)  # in effect now
+        # per-edge weight assignment history, ONLY for edges whose weight ever
+        # changed: id → [(snapshot, w), ...] ascending, seeded with (-1, w0)
+        # so weight_at() resolves any snapshot ≥ the edge's first appearance
+        self._wevents: dict[int, list] = {}
         self._index: dict[int, int] = {}  # (src * V + dst) key → universe id
         self._n_edges = 0
         self._generation = 0  # bumped on capacity growth
@@ -135,7 +176,7 @@ class SnapshotLog:
 
     @property
     def weight_version(self) -> int:
-        """Bumped whenever any edge's lifetime weight extrema widen."""
+        """Bumped whenever any edge's weight assignment changes."""
         return self._weight_version
 
     # -- append ---------------------------------------------------------------
@@ -233,8 +274,10 @@ class SnapshotLog:
         if del_ids:
             self._tip[del_ids] = False
 
+        t_new = len(self._snapshots)
         wmin_shrunk: list[int] = []
         wmax_grown: list[int] = []
+        weights_changed = False
         for k, w in zip((add_src * v + add_dst).tolist(), add_w.tolist()):
             j = self._index.get(int(k))
             if j is None:
@@ -246,6 +289,16 @@ class SnapshotLog:
                 if w > self.weight_max[j]:
                     self.weight_max[j] = w
                     wmax_grown.append(j)
+                if w != self.weight_tip[j]:
+                    # a re-add re-assigned the edge's weight: record the
+                    # event so views can resolve weight-in-effect per
+                    # snapshot (window-local extrema)
+                    ev = self._wevents.setdefault(
+                        j, [(-1, np.float32(self.weight_tip[j]))]
+                    )
+                    ev.append((t_new, np.float32(w)))
+                    self.weight_tip[j] = w
+                    weights_changed = True
             self._tip[j] = True
 
         ids = np.flatnonzero(self._tip).astype(np.int32)
@@ -260,7 +313,7 @@ class SnapshotLog:
         self._weight_changes.append(
             (np.asarray(wmin_shrunk, np.int32), np.asarray(wmax_grown, np.int32))
         )
-        if wmin_shrunk or wmax_grown:
+        if weights_changed:
             self._weight_version += 1
         return len(self._snapshots) - 1
 
@@ -272,6 +325,7 @@ class SnapshotLog:
         self.dst[j] = key % self.num_vertices
         self.weight_min[j] = w
         self.weight_max[j] = w
+        self.weight_tip[j] = w
         self._index[key] = j
         self._n_edges = j + 1
         return j
@@ -282,6 +336,7 @@ class SnapshotLog:
         self.dst = pad_to(self.dst, new_cap, 0)
         self.weight_min = pad_to(self.weight_min, new_cap, 0.0)
         self.weight_max = pad_to(self.weight_max, new_cap, 0.0)
+        self.weight_tip = pad_to(self.weight_tip, new_cap, 0.0)
         self._tip = pad_to(self._tip, new_cap, False)
         self._capacity = new_cap
         self._generation += 1
@@ -362,12 +417,59 @@ class SnapshotLog:
             if self._snapshots[t] is not None:
                 self._snapshots[t] = None
                 retired += 1
+        if retired and self._wevents:
+            # weight-event compaction: assignments at snapshots no live view
+            # can reach (time < upto; every live window starts ≥ the
+            # watermark) fold into the seed entry, so event lists stay
+            # O(reachable changes) instead of growing with log lifetime.
+            # An edge whose events ALL folded is constant again — restore
+            # the lifetime extrema to that constant so new views seed
+            # exactly, and drop its entry.
+            for j, ev in list(self._wevents.items()):
+                cut = 0
+                while cut < len(ev) and ev[cut][0] < upto:
+                    cut += 1
+                if cut == len(ev):
+                    self.weight_min[j] = self.weight_max[j] = self.weight_tip[j]
+                    del self._wevents[j]
+                elif cut > 1:
+                    self._wevents[j] = [(-1, ev[cut - 1][1])] + ev[cut:]
         self._retired_upto = max(self._retired_upto, upto)
         return retired
 
     def weight_changes(self, t: int) -> tuple[np.ndarray, np.ndarray]:
-        """(wmin_shrunk ids, wmax_grown ids) recorded when ``t`` was appended."""
+        """(wmin_shrunk ids, wmax_grown ids) of the LIFETIME extrema at ``t``.
+
+        Kept for introspection; window consumers use the per-view
+        window-local extrema (see :class:`WindowView`) instead.
+        """
         return self._weight_changes[t]
+
+    def weight_at(self, j: int, t: int) -> np.float32:
+        """Weight of universe edge ``j`` in effect at snapshot ``t``.
+
+        The weight in effect is the latest assignment (registration or
+        differing re-add) at a snapshot ≤ ``t``; it survives retirement of
+        the snapshot id arrays because assignments are recorded as events.
+        """
+        ev = self._wevents.get(int(j))
+        if ev is None:
+            return self.weight_tip[j]
+        w = ev[0][1]
+        for et, ew in ev[1:]:
+            if et > t:
+                break
+            w = ew
+        return w
+
+    @property
+    def has_weight_events(self) -> bool:
+        """True when any edge ever changed weight (the rare case)."""
+        return bool(self._wevents)
+
+    def multi_weight_ids(self) -> np.ndarray:
+        """Universe ids of edges with more than one recorded weight (rare)."""
+        return np.fromiter(self._wevents, np.int64, len(self._wevents))
 
     def device_edges(self):
         """``(src, dst)`` as device arrays, re-uploaded when edges register."""
@@ -441,6 +543,17 @@ class WindowView:
         self.witness = np.zeros(log.capacity, np.int32)
         for t in range(self.start, self.stop):
             self.witness[log.snapshot_edges(t)] += 1
+        # window-local weight extrema: exact min/max of the weights in effect
+        # over the window snapshots where each edge is present.  Seeded from
+        # the lifetime extrema (exact for single-weight edges — the common
+        # case) and corrected for the rare multi-weight edges.
+        self.weight_min = log.weight_min[: log.capacity].copy()
+        self.weight_max = log.weight_max[: log.capacity].copy()
+        self._weights_synced_n = log.num_edges
+        self._weight_epoch = 0
+        multi = log.multi_weight_ids()
+        if len(multi):
+            self._refresh_window_extrema(multi[self.witness[multi] > 0])
         self.history: list[SlideDiff] = []
         self._history_offset = 0  # absolute index of history[0]
         log.register_view(self)  # pins [start - len(history), ∞) against retirement
@@ -485,9 +598,73 @@ class WindowView:
     def snapshots(self) -> range:
         return range(self.start, self.stop)
 
+    @property
+    def weight_epoch(self) -> int:
+        """Bumped whenever any window-local weight extremum changes."""
+        return self._weight_epoch
+
     def _sync_capacity(self):
         if len(self.witness) != self.log.capacity:
             self.witness = pad_to(self.witness, self.log.capacity, 0)
+        self._sync_weights()
+
+    def _sync_weights(self):
+        """Adopt extrema for edges registered since the last sync.
+
+        A freshly registered edge has a single lifetime weight, so the
+        log's lifetime extrema are its exact window extrema; if it was
+        already re-weighted before entering this view's window, the slide
+        that brings it in refreshes it (it is in that slide's ``new_ids``
+        and in the log's multi-weight set).
+        """
+        cap = self.log.capacity
+        if len(self.weight_min) != cap:
+            self.weight_min = pad_to(self.weight_min, cap, 0.0)
+            self.weight_max = pad_to(self.weight_max, cap, 0.0)
+        n0, n1 = self._weights_synced_n, self.log.num_edges
+        if n1 > n0:
+            self.weight_min[n0:n1] = self.log.weight_min[n0:n1]
+            self.weight_max[n0:n1] = self.log.weight_max[n0:n1]
+            self._weights_synced_n = n1
+
+    def _refresh_window_extrema(self, ids) -> tuple:
+        """Recompute window extrema for universe edges ``ids`` (in place).
+
+        Returns ``(wmin_shrunk, wmax_grown, wmin_grown, wmax_shrunk)`` id
+        arrays classifying each change (widened vs narrowed).  Edges present
+        nowhere in the current window are left untouched — their extrema are
+        masked out by G∪ everywhere downstream and refreshed on re-entry.
+        """
+        log = self.log
+        ids = np.asarray(ids, np.int64).ravel()
+        if len(ids) == 0:
+            return (_EMPTY,) * 4
+        vals: dict[int, list] = {int(j): [] for j in ids}
+        for t in range(self.start, self.stop):
+            snap = log.snapshot_edges(t)
+            pos = np.searchsorted(snap, ids)
+            ok = pos < len(snap)
+            ok[ok] = snap[pos[ok]] == ids[ok]
+            for j in ids[ok]:
+                vals[int(j)].append(log.weight_at(int(j), t))
+        out: tuple = ([], [], [], [])
+        for j, ws in vals.items():
+            if not ws:
+                continue
+            lo, hi = min(ws), max(ws)
+            if lo < self.weight_min[j]:
+                out[0].append(j)  # wmin widened
+            elif lo > self.weight_min[j]:
+                out[2].append(j)  # wmin narrowed
+            if hi > self.weight_max[j]:
+                out[1].append(j)  # wmax widened
+            elif hi < self.weight_max[j]:
+                out[3].append(j)  # wmax narrowed
+            self.weight_min[j] = lo
+            self.weight_max[j] = hi
+        if any(out):
+            self._weight_epoch += 1
+        return tuple(np.asarray(o, np.int32) for o in out)
 
     # -- sliding --------------------------------------------------------------
     def slide(self) -> SlideDiff:
@@ -507,7 +684,20 @@ class WindowView:
         self.witness[old_ids] -= 1
         after = self.witness[touched]
         s = self.size
-        wmin_shrunk, wmax_grown = self.log.weight_changes(t_new)
+        self.start += 1
+        # window-local extrema can move only for multi-weight edges touched
+        # by the entering/retiring snapshots; recompute those over the NEW
+        # window and classify each change as widened or narrowed.  With no
+        # weight events anywhere (the paper's stable-weight regime) this
+        # whole branch is a single bool check per slide.
+        if self.log.has_weight_events:
+            wmin_shrunk, wmax_grown, wmin_grown, wmax_shrunk = (
+                self._refresh_window_extrema(
+                    np.intersect1d(touched, self.log.multi_weight_ids())
+                )
+            )
+        else:
+            wmin_shrunk = wmax_grown = wmin_grown = wmax_shrunk = _EMPTY
         diff = SlideDiff(
             appended=t_new,
             retired=t_old,
@@ -517,8 +707,9 @@ class WindowView:
             inter_lost=touched[(before == s) & (after < s)],
             wmin_shrunk=wmin_shrunk,
             wmax_grown=wmax_grown,
+            wmin_grown=wmin_grown,
+            wmax_shrunk=wmax_shrunk,
         )
-        self.start += 1
         self.history.append(diff)
         return diff
 
@@ -575,10 +766,14 @@ class WindowView:
 
         This is the reference substrate: a fresh
         :class:`~repro.core.api.EvolvingQuery` on the materialized graph is
-        what the streaming engine must match bit-for-bit.  With
-        ``pad_to_capacity`` (default) the edge arrays are padded to the log
-        capacity so the reference path compiles once per capacity class too.
+        what the streaming engine must match bit-for-bit.  Weight extrema
+        are the view's exact window-local extrema (what a from-deltas
+        :func:`~repro.graph.structures.build_evolving_graph` of the same
+        window yields).  With ``pad_to_capacity`` (default) the edge arrays
+        are padded to the log capacity so the reference path compiles once
+        per capacity class too.
         """
+        self._sync_capacity()
         log = self.log
         n = log.num_edges
         order = np.lexsort((log.src[:n], log.dst[:n]))
@@ -590,8 +785,8 @@ class WindowView:
         return EvolvingGraph(
             src=jnp.asarray(pad_to(log.src[:n][order], cap, 0)),
             dst=jnp.asarray(pad_to(log.dst[:n][order], cap, 0)),
-            weight_min=jnp.asarray(pad_to(log.weight_min[:n][order], cap, 0.0)),
-            weight_max=jnp.asarray(pad_to(log.weight_max[:n][order], cap, 0.0)),
+            weight_min=jnp.asarray(pad_to(self.weight_min[:n][order], cap, 0.0)),
+            weight_max=jnp.asarray(pad_to(self.weight_max[:n][order], cap, 0.0)),
             presence=jnp.asarray(pad_to(packed, cap, 0, axis=0)),
             num_vertices=log.num_vertices,
             num_snapshots=self.size,

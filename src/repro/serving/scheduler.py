@@ -13,17 +13,20 @@ Three front-ends share this module:
   CQRS batch (``repro.core.baselines.run_cqrs_batch``), amortizing bounds,
   shared-QRS compaction, and the concurrent fixpoint across the group.
 * ``QueryBatcher.watch``/``advance_window`` — standing queries over a
-  *sliding* window.  Each watched (query, source) keeps a warm
-  :class:`~repro.core.api.StreamingQuery` (bounds + witness parents +
-  patched QRS + cached rows) on a shared
-  :class:`~repro.graph.stream.WindowView` — or, for SPMD serving, a
-  :class:`~repro.distributed.stream_shard.ShardedStreamingQuery` on a
+  *sliding* window.  Watchers sharing a (view, query, method) are grouped
+  into ONE warm :class:`~repro.core.api.StreamingQueryBatch` (``(Q, V)``
+  bounds + witness parents + one shared patched QRS + cached ``(Q, V)``
+  rows) on a shared :class:`~repro.graph.stream.WindowView` — or, for SPMD
+  serving, a
+  :class:`~repro.distributed.stream_shard.ShardedStreamingQueryBatch` on a
   :class:`~repro.graph.shardlog.ShardedWindowView`; ``advance_window``
-  appends a snapshot delta, slides the shared view once, and advances every
-  watcher incrementally instead of re-evaluating their windows from scratch.
-  Warm state is bounded (LRU capacity + watch-stamped TTL +
-  evict-on-divergence, see ``cache_info``) so serving memory stays bounded
-  under rotating traffic.
+  appends a snapshot delta, slides the shared view once, and folds the
+  slide into every watcher group with one batched advance per group — NOT Q
+  sequential per-watcher advances — bit-for-bit equal to the sequential
+  loop.  Warm state is bounded (LRU capacity + watch-stamped TTL +
+  evict-on-divergence, see ``cache_info``; evicting a watcher drops its
+  lane from the group) so serving memory stays bounded under rotating
+  traffic.
 """
 from __future__ import annotations
 
@@ -171,9 +174,12 @@ class QueryBatcher:
         self._clock = clock
         self.queue: deque[QueryRequest] = deque()
         self._uid = itertools.count()
-        # warm StreamingQuery state, LRU-ordered (oldest first); each value
-        # is a _StreamEntry so eviction can reason about idleness/divergence
+        # warm watcher handles, LRU-ordered (oldest first); each value is a
+        # _StreamEntry so eviction can reason about idleness/divergence.
+        # The actual warm state lives in _batches: one StreamingQueryBatch
+        # per (view, query, method) group, shared by its watchers' lanes.
         self._streams: "OrderedDict[tuple, _StreamEntry]" = OrderedDict()
+        self._batches: dict = {}
         self._stream_hits = 0
         self._stream_misses = 0
         self._stream_evictions = 0
@@ -246,33 +252,34 @@ class QueryBatcher:
     def watch(self, view, query: str, source: int, *, method: Optional[str] = None):
         """Register a standing query on a shared sliding window.
 
-        Returns the warm :class:`~repro.core.api.StreamingQuery` (idempotent:
-        watching the same (view, query, source, method) again returns the
-        existing instance with its state intact).  ``method`` defaults to the
-        batcher's method when it is a streaming engine, else ``"cqrs"``.
+        Returns a warm watcher handle (idempotent: watching the same (view,
+        query, source, method) again returns the existing handle with its
+        state intact).  ``method`` defaults to the batcher's method when it
+        is a streaming engine, else ``"cqrs"``.
 
-        Warm state is bounded: at most ``stream_capacity`` entries are kept,
-        least-recently-*watched* evicted first, and entries are also dropped
-        when idle past ``stream_ttl`` seconds or *divergent* — their view's
-        log has slid at least a full window past them, or the shared view
-        pruned slide history they never consumed — since such state would be
-        rebuilt from scratch on its next advance anyway.  Recency/idleness is
-        stamped by ``watch()`` calls only, never by ``advance_window`` —
-        being served says nothing about whether a client still reads the
-        result, so abandoned watchers expire even on a view that advances
-        every slide.  :meth:`cache_info` exposes the counters.
+        Watchers sharing a (view, query, method) are folded into ONE
+        :class:`~repro.core.api.StreamingQueryBatch` — the handle is a lane
+        of that group: registration primes only the new lane, and
+        ``advance_window`` serves the whole group with one batched advance.
+
+        Warm state is bounded: at most ``stream_capacity`` watchers are
+        kept, least-recently-*watched* evicted first, and watchers are also
+        dropped when idle past ``stream_ttl`` seconds or *divergent* — their
+        view's log has slid at least a full window past them, or the shared
+        view pruned slide history they never consumed — since such state
+        would be rebuilt from scratch on its next advance anyway.  Evicting
+        a watcher drops its lane from the group (the group itself is dropped
+        with its last lane).  Recency/idleness is stamped by ``watch()``
+        calls only, never by ``advance_window`` — being served says nothing
+        about whether a client still reads the result, so abandoned watchers
+        expire even on a view that advances every slide.  :meth:`cache_info`
+        exposes the counters.
         """
-        from repro.core.api import StreamingQuery
+        from repro.core.api import StreamingQueryBatch
 
         if method is None:
             method = (self.method if self.method in ("cqrs", "cqrs_ell")
                       else "cqrs")
-            from repro.graph.shardlog import ShardedWindowView
-
-            if method == "cqrs_ell" and isinstance(view, ShardedWindowView):
-                # the sharded engine has no ELL path yet (ROADMAP): fall back
-                # rather than reject the view — explicit method still raises
-                method = "cqrs"
         key = (id(view), str(query), int(source), method)
         entry = self._streams.get(key)
         if entry is not None:
@@ -284,14 +291,37 @@ class QueryBatcher:
         self._evict_stale(exempt_view=view)
         if entry is None:
             self._stream_misses += 1
-            sq = StreamingQuery(view, str(query), int(source), method=method)
-            sq.results  # prime eagerly: pay the cold solve before traffic
-            entry = _StreamEntry(sq=sq, last_used=self._clock())
+            gkey = (id(view), str(query), method)
+            batch = self._batches.get(gkey)
+            if batch is None:
+                batch = StreamingQueryBatch(
+                    view, str(query), [int(source)], method=method
+                )
+                batch.results  # prime eagerly: pay the cold solve pre-traffic
+                self._batches[gkey] = batch
+            else:
+                batch.add_source(int(source))  # primes only the new lane
+            entry = _StreamEntry(
+                sq=_BatchWatcher(batch=batch, source=int(source)),
+                last_used=self._clock(),
+            )
             self._streams[key] = entry
             while len(self._streams) > self.stream_capacity:
-                self._streams.popitem(last=False)  # LRU out
+                old_key, old_entry = self._streams.popitem(last=False)  # LRU
+                self._drop_lane(old_key, old_entry)
                 self._stream_evictions += 1
         return entry.sq
+
+    def _drop_lane(self, key: tuple, entry) -> None:
+        """Remove an evicted watcher's lane from its batch group."""
+        gkey = (key[0], key[1], key[3])
+        batch = self._batches.get(gkey)
+        if batch is None or batch is not entry.sq.batch:
+            return
+        if any((k[0], k[1], k[3]) == gkey for k in self._streams):
+            batch.remove_source(entry.sq.source)
+        else:
+            del self._batches[gkey]  # last lane: drop the whole group
 
     def watching(self, view=None) -> list:
         """Warm streaming queries (optionally restricted to one view)."""
@@ -337,7 +367,8 @@ class QueryBatcher:
             if expired or divergent:
                 dead.append(key)
         for key in dead:
-            del self._streams[key]
+            entry = self._streams.pop(key)
+            self._drop_lane(key, entry)
             self._stream_evictions += 1
         return len(dead)
 
@@ -345,13 +376,17 @@ class QueryBatcher:
         """Append ``delta`` to the view's log, slide, advance every watcher.
 
         The shared view slides exactly once per appended snapshot; each
-        watcher folds the slide diff into its warm bounds/QRS state and
-        evaluates only the appended snapshot.  Returns
-        ``{(query, source): (S, V) results}`` for the watchers on ``view``.
-        (A (query, source) watched under both engine methods yields one
-        entry — both engines are bit-for-bit identical by contract.)
+        (query, method) GROUP of watchers then folds the slide diff into its
+        warm ``(Q, V)`` bounds/QRS state and evaluates the appended snapshot
+        for all its lanes with ONE batched advance
+        (:meth:`~repro.core.api.StreamingQueryBatch.advance`) — not Q
+        sequential per-watcher advances; results are bit-for-bit equal to
+        the sequential loop.  Returns ``{(query, source): (S, V) results}``
+        for the watchers on ``view``.  (A (query, source) watched under both
+        engine methods yields one entry — both engines are bit-for-bit
+        identical by contract.)
 
-        Slide history consumed by every watcher is pruned from the shared
+        Slide history consumed by every group is pruned from the shared
         view afterwards (which also retires unreachable log history), so
         long-running serving loops stay bounded; stale warm state is evicted
         on the way (see :meth:`watch`).  Note that with ``stream_ttl`` set,
@@ -364,24 +399,76 @@ class QueryBatcher:
             view.log.append_snapshot(*delta)
         view.slide_to_tip()
         out = {}
-        for e in list(self._streams.values()):
-            if e.sq.view is not view:
+        served = []
+        for batch in list(self._batches.values()):
+            if batch.view is not view:
                 continue
-            out[(e.sq.semiring.name, e.sq.source)] = e.sq.advance()
+            batch.advance()  # one launch for the whole (query, method) group
+            served.append(batch)
+            res = batch.results  # (Q, S, V), stacked once per group
+            lanes = {s: i for i, s in enumerate(batch.sources)}
+            for e in self._streams.values():
+                sq = e.sq
+                if sq.batch is batch:
+                    out[(sq.semiring.name, sq.source)] = res[lanes[sq.source]]
             # deliberately NOT a recency touch: serving a watcher says nothing
             # about whether any client still reads it — idleness (TTL) and
             # LRU order are stamped only by client-side watch() calls, so an
             # abandoned (query, source) does eventually expire even on a view
             # that is advanced every slide
-        watchers = self.watching(view)
-        if watchers:
-            view.prune_history(min(sq.diff_pos for sq in watchers))
+        if served:
+            view.prune_history(min(b.diff_pos for b in served))
         return out
 
 
 @dataclasses.dataclass
 class _StreamEntry:
-    """One warm streaming query + its recency stamp (LRU/TTL bookkeeping)."""
+    """One warm watcher handle + its recency stamp (LRU/TTL bookkeeping)."""
 
     sq: object
     last_used: float
+
+
+@dataclasses.dataclass
+class _BatchWatcher:
+    """One standing (query, source) watcher — a lane of a shared batch.
+
+    The identity-stable handle :meth:`QueryBatcher.watch` returns: repeated
+    watches of the same (view, query, source, method) are cache hits on the
+    same object, while the warm state lives in the underlying
+    :class:`~repro.core.api.StreamingQueryBatch` shared by every
+    same-(view, query, method) watcher.
+    """
+
+    batch: object  # StreamingQueryBatch
+    source: int
+
+    @property
+    def view(self):
+        return self.batch.view
+
+    @property
+    def semiring(self):
+        return self.batch.semiring
+
+    @property
+    def method(self) -> str:
+        return self.batch.method
+
+    @property
+    def stats(self) -> dict:
+        return self.batch.stats
+
+    @property
+    def diff_pos(self) -> int:
+        return self.batch.diff_pos
+
+    @property
+    def results(self):
+        """``(S, V)`` values of this watcher's lane for the current window."""
+        return self.batch.result_for(self.source)
+
+    def advance(self, delta=None):
+        """Advance the whole group; returns this lane's ``(S, V)`` results."""
+        self.batch.advance(delta)
+        return self.batch.result_for(self.source)

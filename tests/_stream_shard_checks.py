@@ -204,6 +204,58 @@ def check_shard_local():
     print("CHECK_OK")
 
 
+def check_qbatch():
+    """Batched SPMD serving (the Q-fold): Q=8 watchers on one sharded view
+    grouped into ONE ShardedStreamingQueryBatch, each advance one Q-folded
+    shard_map launch, bit-for-bit equal to single-host sequential watchers
+    — for 2 semirings on cqrs plus an ELL group."""
+    import numpy as np
+
+    from repro.core.api import StreamingQuery, StreamingQueryBatch
+    from repro.distributed.stream_shard import ShardedStreamingQueryBatch
+    from repro.graph.shardlog import ShardedWindowView
+    from repro.graph.stream import WindowView
+    from repro.serving.scheduler import QueryBatcher
+
+    base, deltas = _stream(seed=6)
+    sources = [0, 5, 7, 11, 13, 21, 33, 40]
+    for query in ("sssp", "sswp"):
+        log, slog, pending = _paired_logs(base, deltas, WINDOW)
+        view = WindowView(log, size=WINDOW)
+        sview = ShardedWindowView(slog, size=WINDOW)
+        qb = QueryBatcher()
+        watchers = [qb.watch(sview, query, s) for s in sources]
+        assert len({id(w.batch) for w in watchers}) == 1, \
+            "watchers did not group into one batch entry"
+        assert isinstance(watchers[0].batch, ShardedStreamingQueryBatch)
+        assert watchers[0].batch.num_queries == len(sources)
+        seqs = [StreamingQuery(view, query, s) for s in sources]
+        for w, sq in zip(watchers, seqs):
+            np.testing.assert_array_equal(w.results, sq.results)
+        for d in pending[:4]:
+            log.append_snapshot(*d)
+            out = qb.advance_window(sview, d)
+            assert set(out) == {(query, s) for s in sources}
+            for s, sq in zip(sources, seqs):
+                np.testing.assert_array_equal(
+                    out[(query, s)], sq.advance(), err_msg=f"{query}/{s}"
+                )
+    # ELL group on the sharded path (Q folded into the kernel snapshot axis)
+    log, slog, pending = _paired_logs(base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sqb = StreamingQueryBatch(sview, "bfs", sources[:4], method="cqrs_ell")
+    seqs = [StreamingQuery(view, "bfs", s) for s in sources[:4]]
+    for i, sq in enumerate(seqs):
+        np.testing.assert_array_equal(sqb.results[i], sq.results)
+    for d in pending[:2]:
+        log.append_snapshot(*d)
+        got = sqb.advance(d)
+        for i, sq in enumerate(seqs):
+            np.testing.assert_array_equal(got[i], sq.advance())
+    print("CHECK_OK")
+
+
 def check_collectives():
     """One-collective-per-superstep invariant, against the compiled HLO.
 
@@ -257,6 +309,27 @@ def check_collectives():
     c = ops(kernels["parents"], vals, src, dstl, w, active, source)
     assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
     assert c.get("all-gather", 0) <= 3, c  # values + level loop + final level
+
+    # The Q-batched serving kernels must keep the SAME schedule: the (Q, V)
+    # state is split on the vertex axis, so each superstep still carries
+    # exactly one all-gather (one op, Q rows tall) + the convergence psum.
+    from repro.distributed.stream_shard import _kernels_q
+
+    q = 8
+    kq = _kernels_q(mesh, SEMIRINGS["sssp"], V, e_cap, "model", q)
+    vals_q = jnp.zeros((q, V), jnp.float32)
+    parent_q = jnp.zeros((q, V), jnp.int32)
+    sources_q = jnp.zeros(q, jnp.int32)
+    c = ops(kq["fixpoint"], vals_q, src, dstl, w, active)
+    assert c.get("all-gather", 0) == 1, c
+    assert c.get("all-reduce", 0) == 1, c
+    assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
+    c = ops(kq["invalidate"], vals_q, parent_q, active, src, sources_q)
+    assert c.get("all-gather", 0) == 1, c
+    assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
+    c = ops(kq["parents"], vals_q, src, dstl, w, active, sources_q)
+    assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
+    assert c.get("all-gather", 0) <= 3, c
     print("CHECK_OK")
 
 

@@ -75,3 +75,13 @@ def test_architecture_covers_sharded_streaming_layer():
                 "ShardedStreamingBounds", "ShardedStreamingQuery",
                 "retire_history", "cache_info", "host_mesh"):
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
+def test_architecture_covers_batched_streaming_serving():
+    """The batched-serving section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Batched streaming serving" in text
+    for sym in ("StreamingQueryBatch", "ShardedStreamingQueryBatch",
+                "StableEllPacker", "add_source", "remove_source",
+                "advance_window", "tile_presence_words"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"

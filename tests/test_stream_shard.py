@@ -152,7 +152,8 @@ def test_shard_slide_diffs_partition_the_global_diff():
         sd = sview.slide()
         assert (sd.appended, sd.retired) == (gd.appended, gd.retired)
         for field in ("union_gained", "union_lost", "inter_gained",
-                      "inter_lost", "wmin_shrunk", "wmax_grown"):
+                      "inter_lost", "wmin_shrunk", "wmax_grown",
+                      "wmin_grown", "wmax_shrunk"):
             want = set(zip(log.src[getattr(gd, field)].tolist(),
                            log.dst[getattr(gd, field)].tolist()))
             got = set()
@@ -183,31 +184,30 @@ def test_one_shard_spmd_query_in_process():
     assert ssq.stats["qrs_edges"] == sq.stats["qrs_edges"]
 
 
-def test_ell_batcher_falls_back_to_cqrs_on_sharded_view():
-    """A cqrs_ell QueryBatcher must still serve sharded views (no ELL path
-    on the sharded engine yet): the default method falls back to cqrs."""
+def test_ell_batcher_serves_sharded_view():
+    """A cqrs_ell QueryBatcher serves sharded views through the sharded ELL
+    path (sticky-shape ELL over the stacked shard universes) — no silent
+    fallback to cqrs, and bit-for-bit equal to the single-host watcher."""
     from repro.serving.scheduler import QueryBatcher
 
     log, slog, pending = paired_logs(seed=6, n_shards=1)
     sview = ShardedWindowView(slog, size=WINDOW)
     qb = QueryBatcher(method="cqrs_ell")
     sq = qb.watch(sview, "sssp", 0)
-    assert sq.method == "cqrs"
+    assert sq.method == "cqrs_ell"
     view = WindowView(log, size=WINDOW)
     ref = qb.watch(view, "sssp", 0)
     assert ref.method == "cqrs_ell"  # single-host default unchanged
     got = qb.advance_window(sview, pending[0])
     want = qb.advance_window(view, pending[0])
     np.testing.assert_array_equal(got[("sssp", 0)], want[("sssp", 0)])
-    with pytest.raises(ValueError):
-        qb.watch(sview, "sssp", 1, method="cqrs_ell")  # explicit: still loud
 
 
 def test_sharded_query_validation():
     _, slog, _ = paired_logs(seed=4, n_shards=1)
     sview = ShardedWindowView(slog, size=WINDOW)
     with pytest.raises(ValueError):
-        StreamingQuery(sview, "sssp", 0, method="cqrs_ell")
+        StreamingQuery(sview, "sssp", 0, method="kickstarter")
     with pytest.raises(ValueError):
         StreamingQuery(sview, "sssp", 0, window=WINDOW + 1)
     with pytest.raises(RuntimeError):
@@ -236,7 +236,8 @@ def _run(check: str):
 
 @pytest.mark.parametrize(
     "check",
-    ["equivalence", "growth", "serving", "shard_local", "collectives"],
+    ["equivalence", "growth", "serving", "shard_local", "qbatch",
+     "collectives"],
 )
 def test_stream_shard_mesh(check):
     _run(check)

@@ -1,0 +1,473 @@
+"""Batched streaming serving: StreamingQueryBatch ≡ per-watcher loop.
+
+The core contract of the serving Q-fold: ``StreamingQueryBatch.advance()``
+— one vmapped bounds refresh + one shared-QRS patch + one batched appended-
+snapshot launch for all Q queries — is **bit-for-bit** equal to Q
+independent ``StreamingQuery`` instances advanced in a sequential loop, for
+≥3 semirings × both engines (``cqrs``/``cqrs_ell``) × single-host/sharded.
+
+Also covered: the window-local weight-extrema regression (a widening
+snapshot retiring from the window must NARROW the extrema — the pre-PR
+lifetime extrema stayed loose), stable ELL shapes across slides (jit
+cache-miss counter), serving-batch membership (add/remove lanes), and
+``QueryBatcher.advance_window`` issuing one batched advance per watcher
+group instead of Q sequential per-watcher advances.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.api import (
+    EvolvingQuery,
+    StreamingQuery,
+    StreamingQueryBatch,
+)
+from repro.core.bounds import compute_bounds
+from repro.core.semiring import SEMIRINGS
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.graph.structures import build_evolving_graph
+from repro.serving.scheduler import QueryBatcher
+from _prop import given, settings, st
+
+V = 48
+WINDOW = 3
+SOURCES = [0, 7, 13, 21]
+NO_DELTA = ((), (), (), (), ())
+
+
+def make_stream(seed: int, *, num_snapshots: int = WINDOW + 3, batch_size: int = 20):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return generate_evolving_stream(
+        src, dst, w, V, num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=0.4, seed=seed + 2,
+    )
+
+
+def make_log(seed: int, *, capacity: int = 512):
+    base, deltas = make_stream(seed)
+    log = SnapshotLog(V, capacity=capacity)
+    log.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+    return log, deltas[WINDOW - 1:]
+
+
+def fresh_eval(view, query: str, source: int) -> np.ndarray:
+    return EvolvingQuery(view.materialize(), query, source).evaluate("cqrs")
+
+
+# ------------------------------------------------------- batch ≡ loop (host)
+@pytest.mark.parametrize("query", ["sssp", "sswp", "ssnp"])
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_batch_equals_sequential_loop(query, method):
+    """K batched advances ≡ K advances of Q sequential watchers, bit-for-bit."""
+    log, pending = make_log(seed=0)
+    view = WindowView(log, size=WINDOW)
+    loop_view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, query, SOURCES, method=method)
+    seqs = [StreamingQuery(loop_view, query, s, method=method) for s in SOURCES]
+    got = sqb.results
+    for i, sq in enumerate(seqs):
+        np.testing.assert_array_equal(got[i], sq.results)
+        np.testing.assert_array_equal(got[i], fresh_eval(view, query, SOURCES[i]))
+    for k, delta in enumerate(pending):
+        got = sqb.advance(delta)
+        for i, sq in enumerate(seqs):
+            np.testing.assert_array_equal(
+                got[i], sq.advance(),
+                err_msg=f"{query}/{method} slide {k} lane {i}",
+            )
+    assert sqb.stats["slides"] == len(pending)
+    assert sqb.stats["num_queries"] == len(SOURCES)
+    np.testing.assert_array_equal(
+        sqb.result_for(SOURCES[1]), sqb.results[1]
+    )
+
+
+@settings(max_examples=6)
+@given(
+    seed=st.integers(0, 10_000),
+    query=st.sampled_from(["bfs", "sssp", "viterbi"]),
+    s0=st.integers(0, V - 1),
+)
+def test_batch_advance_property(seed, query, s0):
+    """Seed-swept: batched advance ≡ per-watcher loop on random streams."""
+    log, pending = make_log(seed=seed)
+    view = WindowView(log, size=WINDOW)
+    loop_view = WindowView(log, size=WINDOW)
+    sources = sorted({s0, (s0 + 11) % V, (s0 + 29) % V})
+    sqb = StreamingQueryBatch(view, query, sources)
+    seqs = [StreamingQuery(loop_view, query, s) for s in sources]
+    for i, sq in enumerate(seqs):
+        np.testing.assert_array_equal(sqb.results[i], sq.results)
+    for delta in pending[:2]:
+        got = sqb.advance(delta)
+        for i, sq in enumerate(seqs):
+            np.testing.assert_array_equal(got[i], sq.advance())
+
+
+# --------------------------------------------------------- batch ≡ loop (SPMD)
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_sharded_batch_equals_loop_one_shard(method):
+    """n_shards=1 runs the full Q-batched shard_map path on the lone CPU
+    device, so tier-1 covers the sharded serving Q-fold without a forced
+    host mesh (the 8-device variant lives in _stream_shard_checks.py)."""
+    from repro.distributed.stream_shard import ShardedStreamingQueryBatch
+
+    base, deltas = make_stream(seed=3)
+    log = SnapshotLog(V, capacity=512)
+    slog = ShardedSnapshotLog(V, 1, capacity=64)
+    log.append_snapshot(*base)
+    slog.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sqb = StreamingQueryBatch(sview, "sssp", SOURCES, method=method)
+    assert isinstance(sqb, ShardedStreamingQueryBatch)  # __new__ dispatch
+    seqs = [StreamingQuery(view, "sssp", s) for s in SOURCES]
+    for i, sq in enumerate(seqs):
+        np.testing.assert_array_equal(sqb.results[i], sq.results)
+    for k, d in enumerate(deltas[WINDOW - 1:]):
+        log.append_snapshot(*d)
+        got = sqb.advance(d)
+        for i, sq in enumerate(seqs):
+            np.testing.assert_array_equal(
+                got[i], sq.advance(), err_msg=f"{method} slide {k} lane {i}"
+            )
+
+
+# --------------------------------------------- window-local extrema narrowing
+@pytest.mark.parametrize("query,worse,better,cap_before,cap_after", [
+    # sssp: wmax widens to 9 then narrows to 2; val_cap[1] = min(direct, 0→2→1=9)
+    ("sssp", 9.0, 2.0, 9.0, 2.0),
+    # sswp: wmin widens to 0.5 then narrows to 8; val_cap[1] = max(direct, 0→2→1=4)
+    ("sswp", 0.5, 8.0, 4.0, 8.0),
+])
+def test_weight_narrowing_when_widening_snapshot_retires(
+    query, worse, better, cap_before, cap_after
+):
+    """Regression: the snapshot that widened an edge's weight extrema
+    retires from the window — the window-local extrema must NARROW, changing
+    a bound the old lifetime extrema left loose.
+
+    Pre-PR behavior (lifetime extrema never narrow): after the slide the
+    G∩ safe weight of 0→1 stayed ``worse`` and val_cap[1] stayed at the
+    loose value, disagreeing with a from-deltas build of the same window.
+    """
+    sr = SEMIRINGS[query]
+    log = SnapshotLog(4, capacity=64)
+    log.append_snapshot([0, 0, 2], [1, 2, 1], [worse, 5.0, 4.0])  # t0
+    log.append_snapshot([0], [1], [better])  # t1: re-assign 0→1
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, query, 0)
+    sq.results
+    # window [0,2): both weights in effect → extrema = {better, worse}
+    assert float(np.asarray(sq.bounds.val_cap)[1]) == cap_before
+
+    got = sq.advance(NO_DELTA)  # t2: window [1,3) — only `better` in effect
+    assert float(np.asarray(sq.bounds.val_cap)[1]) == cap_after, \
+        "window extrema did not narrow when the widening snapshot retired"
+    # exactness vs a from-deltas build of the same window
+    ref_graph = build_evolving_graph(
+        [0, 0, 2], [1, 2, 1], [better, 5.0, 4.0], [NO_DELTA], 4
+    )
+    ref = compute_bounds(ref_graph, sr, 0)
+    np.testing.assert_array_equal(
+        np.asarray(sq.bounds.val_cap), np.asarray(ref.val_cap)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sq.bounds.val_cup), np.asarray(ref.val_cup)
+    )
+    # and the streamed rows still match fresh evaluation of the window
+    np.testing.assert_array_equal(got, fresh_eval(view, query, 0))
+
+
+def test_narrowing_mid_catch_up_rebuilds():
+    """Queued slides where one narrows extrema must rebuild, not fold stale."""
+    log = SnapshotLog(4, capacity=64)
+    log.append_snapshot([0, 0, 2], [1, 2, 1], [9.0, 5.0, 4.0])
+    log.append_snapshot([0], [1], [2.0])
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, "sssp", 0)
+    sq.results
+    log.append_snapshot([], [], [])          # queued slide 1: t1 retires t0
+    log.append_snapshot([1], [3], [1.0], [], [])  # queued slide 2
+    got = sq.advance()  # one catch-up over both queued slides
+    np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+    assert float(np.asarray(sq.bounds.val_cap)[1]) == 2.0
+
+
+def test_window_extrema_match_from_deltas_build_under_churn():
+    """Seeded stream with per-edge weight CHANGES on re-add: the view's
+    materialize() must equal streaming results on every slide (both use the
+    exact window extrema, unlike the pre-PR lifetime extrema)."""
+    rng = np.random.default_rng(7)
+    log = SnapshotLog(8, capacity=64)
+    edges = [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (1, 5), (5, 6)]
+    w0 = {e: float(1 + rng.integers(1, 16)) / 4 for e in edges}
+    log.append_snapshot(
+        [s for s, _ in edges], [d for _, d in edges], [w0[e] for e in edges]
+    )
+    log.append_snapshot([], [], [])
+    view = WindowView(log, size=2)
+    sq = StreamingQuery(view, "sssp", 0)
+    sq.results
+    present = set(edges)
+    for k in range(6):
+        adds, dels = [], []
+        for e in edges:
+            r = rng.random()
+            if e in present and r < 0.25:
+                dels.append(e)
+                present.discard(e)
+            elif r < 0.6:
+                # (re-)add, sometimes with a different weight
+                wmod = float(1 + rng.integers(1, 16)) / 4
+                adds.append((e, wmod))
+                present.add(e)
+        delta = (
+            [s for (s, _), _ in adds], [d for (_, d), _ in adds],
+            [w for _, w in adds],
+            [s for s, _ in dels], [d for _, d in dels],
+        )
+        got = sq.advance(delta)
+        np.testing.assert_array_equal(
+            got, fresh_eval(view, "sssp", 0), err_msg=f"slide {k}"
+        )
+
+
+# ----------------------------------------------------- stable ELL kernel path
+def test_ell_shapes_and_compile_count_stable_across_slides():
+    """Per-slide ELL packs keep identical shapes (sticky amortized rows), so
+    the jitted kernel path does not recompile per slide."""
+    from repro.kernels.vrelax.ops import concurrent_fixpoint_ell
+
+    base, deltas = make_stream(seed=5, num_snapshots=WINDOW + 9)
+    log = SnapshotLog(V, capacity=512)
+    log.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+    pending = deltas[WINDOW - 1:]
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs_ell")
+    sq.results
+    warm, check = pending[:4], pending[4:]
+    for delta in warm:  # amortized row growth settles during warmup
+        sq.advance(delta)
+    ell0 = sq._qrs.ell_pack()
+    shape0 = (ell0.src.shape, ell0.weight.shape, ell0.row2vertex.shape)
+    can_count = hasattr(concurrent_fixpoint_ell, "_cache_size")
+    misses0 = concurrent_fixpoint_ell._cache_size() if can_count else None
+    assert len(check) >= 4
+    for k, delta in enumerate(check):
+        got = sq.advance(delta)
+        ell = sq._qrs.ell_pack()
+        assert (ell.src.shape, ell.weight.shape, ell.row2vertex.shape) == \
+            shape0, f"ELL shapes changed on slide {k}"
+        np.testing.assert_array_equal(got, fresh_eval(view, "sssp", 0))
+    if can_count:
+        assert concurrent_fixpoint_ell._cache_size() == misses0, \
+            "kernel fixpoint recompiled during steady-state slides"
+
+
+# ------------------------------------------------------- serving batch groups
+def test_advance_window_issues_one_batched_advance(monkeypatch):
+    """Q=8 watchers on one (view, query): advance_window must run ONE
+    batched advance for the group, never Q sequential scalar advances."""
+    import repro.core.api as api_mod
+
+    log, pending = make_log(seed=4)
+    view = WindowView(log, size=WINDOW)
+    loop_view = WindowView(log, size=WINDOW)
+    sources = [0, 3, 7, 11, 19, 23, 31, 40]
+    qb = QueryBatcher()
+    watchers = [qb.watch(view, "sssp", s) for s in sources]
+    assert len({id(w.batch) for w in watchers}) == 1  # one group
+    assert watchers[0].batch.num_queries == len(sources)
+    seqs = [StreamingQuery(loop_view, "sssp", s) for s in sources]
+    [sq.results for sq in seqs]
+
+    calls = []
+    real_advance = api_mod.StreamingQuery.advance
+
+    def counting_advance(self, delta=None):
+        calls.append(type(self).__name__)
+        return real_advance(self, delta)
+
+    monkeypatch.setattr(api_mod.StreamingQuery, "advance", counting_advance)
+    for delta in pending:
+        calls.clear()
+        out = qb.advance_window(view, delta)
+        # one batched advance for the whole group — not Q scalar ones
+        assert calls == ["StreamingQueryBatch"], calls
+        assert set(out) == {("sssp", s) for s in sources}
+        for s, sq in zip(sources, seqs):
+            np.testing.assert_array_equal(
+                out[("sssp", s)], real_advance(sq), err_msg=f"source {s}"
+            )
+
+
+def test_watch_groups_by_query_and_method():
+    log, pending = make_log(seed=6)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher()
+    a = qb.watch(view, "sssp", 0)
+    b = qb.watch(view, "sssp", 7)          # same group, new lane
+    c = qb.watch(view, "bfs", 7)           # different semiring → new group
+    d = qb.watch(view, "sssp", 0, method="cqrs_ell")  # different engine
+    assert a.batch is b.batch
+    assert c.batch is not a.batch and d.batch is not a.batch
+    assert qb.watch(view, "sssp", 0) is a  # idempotent handle
+    out = qb.advance_window(view, pending[0])
+    # (sssp, 0) appears once even though watched under both engines
+    assert set(out) == {("sssp", 0), ("sssp", 7), ("bfs", 7)}
+    for (qname, s), res in out.items():
+        np.testing.assert_array_equal(res, fresh_eval(view, qname, s))
+
+
+def test_lane_eviction_keeps_group_serving():
+    """TTL-evicting one lane must drop only that lane; the group keeps
+    serving the remaining watchers correctly."""
+    log, pending = make_log(seed=8)
+    view = WindowView(log, size=WINDOW)
+    now = [0.0]
+    qb = QueryBatcher(stream_ttl=10.0, clock=lambda: now[0])
+    a = qb.watch(view, "sssp", 0)
+    qb.watch(view, "sssp", 7)   # abandoned lane
+    assert a.batch.num_queries == 2
+    out = qb.advance_window(view, pending[0])
+    assert set(out) == {("sssp", 0), ("sssp", 7)}
+    now[0] = 16.0
+    qb.watch(view, "sssp", 0)   # touch 0; lane 7 idles past the TTL
+    out = qb.advance_window(view, pending[1])
+    assert set(out) == {("sssp", 0)}
+    assert a.batch.num_queries == 1
+    assert qb.cache_info().evictions == 1
+    np.testing.assert_array_equal(out[("sssp", 0)], fresh_eval(view, "sssp", 0))
+
+
+def test_last_lane_eviction_drops_group():
+    log, _ = make_log(seed=9)
+    view = WindowView(log, size=WINDOW)
+    now = [0.0]
+    qb = QueryBatcher(stream_ttl=5.0, clock=lambda: now[0])
+    qb.watch(view, "sssp", 0)
+    assert len(qb._batches) == 1
+    now[0] = 11.0
+    qb.watch(view, "bfs", 1)  # housekeeping evicts the idle sssp lane
+    assert len(qb.watching(view)) == 1
+    assert len(qb._batches) == 1  # only the bfs group remains
+    assert next(iter(qb._batches.values())).semiring.name == "bfs"
+
+
+# ------------------------------------------------------------- batch plumbing
+def test_batch_membership_add_remove():
+    log, pending = make_log(seed=10)
+    view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, "sssp", [0, 7])
+    sqb.results
+    sqb.advance(pending[0])
+    sqb.add_source(13)
+    assert sqb.sources == [0, 7, 13]
+    for s in sqb.sources:
+        np.testing.assert_array_equal(sqb.result_for(s), fresh_eval(view, "sssp", s))
+    sqb.remove_source(7)
+    got = sqb.advance(pending[1])
+    assert got.shape[0] == 2
+    for s in sqb.sources:
+        np.testing.assert_array_equal(sqb.result_for(s), fresh_eval(view, "sssp", s))
+    sqb.add_source(0)  # idempotent
+    assert sqb.sources == [0, 13]
+
+
+def test_membership_changes_do_not_reevaluate_surviving_lanes(monkeypatch):
+    """add_source primes ONLY the new lane (scalar evals over the window);
+    remove_source is pure state surgery — neither re-runs the batched
+    window evaluation for lanes whose rows are already exact."""
+    import repro.core.api as api_mod
+
+    log, pending = make_log(seed=12)
+    view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, "sssp", [0, 7])
+    sqb.results
+    sqb.advance(pending[0])
+
+    batched_evals, lane_evals = [], []
+    real_batched = api_mod.StreamingQueryBatch._eval_snapshot
+    real_lane = api_mod.StreamingQueryBatch._eval_lane_snapshot
+    monkeypatch.setattr(
+        api_mod.StreamingQueryBatch, "_eval_snapshot",
+        lambda self, t: batched_evals.append(t) or real_batched(self, t),
+    )
+    monkeypatch.setattr(
+        api_mod.StreamingQueryBatch, "_eval_lane_snapshot",
+        lambda self, t, lane: (
+            lane_evals.append(t) or real_lane(self, t, lane)
+        ),
+    )
+    sqb.add_source(13)
+    assert batched_evals == []  # surviving lanes untouched
+    assert len(lane_evals) == WINDOW  # only the new lane, once per snapshot
+    lane_evals.clear()
+    sqb.remove_source(7)
+    assert batched_evals == [] and lane_evals == []  # pure surgery
+    for s in sqb.sources:
+        np.testing.assert_array_equal(
+            sqb.result_for(s), fresh_eval(view, "sssp", s)
+        )
+    # and the warm state stays coherent through the next slide
+    got = sqb.advance(pending[1])
+    for i, s in enumerate(sqb.sources):
+        np.testing.assert_array_equal(got[i], fresh_eval(view, "sssp", s))
+
+
+def test_weight_events_compact_with_history_retirement():
+    """Assignment events no live view can replay fold into the seed; an
+    edge whose events all folded becomes single-weight again (entry dropped,
+    lifetime extrema restored to the constant) — event storage is bounded
+    by the reachable history, not the log lifetime."""
+    log = SnapshotLog(4, capacity=64)
+    log.append_snapshot([0, 0, 2], [1, 2, 1], [9.0, 5.0, 4.0])
+    log.append_snapshot([0], [1], [2.0])   # event at t1
+    sq = StreamingQuery(log, "sssp", 0, window=2)  # private view: prunes
+    sq.results
+    assert log.has_weight_events
+    for _ in range(3):  # slide until t0/t1 retire from reachable history
+        sq.advance(NO_DELTA)
+        np.testing.assert_array_equal(
+            sq.results, fresh_eval(sq.view, "sssp", 0)
+        )
+    assert log.retired_upto >= 2
+    assert not log.has_weight_events  # folded to a constant and dropped
+    j = 0  # universe id of 0→1 (first registered)
+    assert log.weight_min[j] == log.weight_max[j] == np.float32(2.0)
+    # a NEW view on the compacted log seeds exact (narrow) extrema
+    sq2 = StreamingQuery(log, "sssp", 0, window=2)
+    np.testing.assert_array_equal(sq2.results, sq.results)
+    assert float(np.asarray(sq2.bounds.val_cap)[1]) == 2.0
+
+
+def test_batch_validation():
+    log, _ = make_log(seed=11)
+    view = WindowView(log, size=WINDOW)
+    with pytest.raises(ValueError):
+        StreamingQueryBatch(view, "sssp", [])
+    with pytest.raises(ValueError):
+        StreamingQueryBatch(view, "sssp", [1, 1])
+    with pytest.raises(ValueError):
+        StreamingQueryBatch(view, "sssp", [0], method="kickstarter")
+    sqb = StreamingQueryBatch(view, "sssp", [0])
+    with pytest.raises(KeyError):
+        sqb.result_for(42)
+    with pytest.raises(ValueError):
+        sqb.remove_source(0)  # the last lane must stay
