@@ -375,11 +375,16 @@ def bench_evolving_stream_sharded(fast: bool):
     """Per-slide sharded SPMD advance, asserted bit-for-bit vs single-host.
 
     Emits one row per (query, slide) — the CI artifact the host-mesh job
-    uploads — with both engines' per-slide latency in the derived column.
-    The sharded path's win is the *collective schedule* it lowers (shard-local
-    scatters, one per-vertex all-gather per superstep); on a forced host mesh
-    the 8-way partitioning of a laptop-scale graph is expected to be slower
-    than the single device, so no speedup is asserted here — only exactness.
+    uploads — with both engines' per-slide latency in the derived column,
+    running the naive dst-range and the degree-histogram **balanced**
+    assignments side by side: each row carries both modes' per-slide time,
+    per-shard occupancy spread (max/mean), and per-slide shard_map kernel
+    launches, and the balanced mode's spread is asserted ≤ 2× on the skewed
+    RMAT fixture (the naive ranges run far above that).  The sharded path's
+    win is the *collective schedule* it lowers (shard-local scatters, one
+    per-vertex all-gather per superstep); on a forced host mesh the 8-way
+    partitioning of a laptop-scale graph is expected to be slower than the
+    single device, so no speedup is asserted here — only exactness.
     """
     import jax
 
@@ -387,7 +392,9 @@ def bench_evolving_stream_sharded(fast: bool):
     from repro.graph.generators import (
         generate_evolving_stream, generate_rmat, generate_uniform_weights,
     )
-    from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+    from repro.graph.shardlog import (
+        ShardedSnapshotLog, ShardedWindowView, degree_histogram,
+    )
     from repro.graph.stream import SnapshotLog, WindowView
 
     # largest power-of-two shard count the host can mesh (always divides v)
@@ -402,43 +409,79 @@ def bench_evolving_stream_sharded(fast: bool):
         src, dst, w, v, num_snapshots=s + slides + 2, batch_size=batch, seed=9,
     )
     capacity = e + (s + slides + 2) * batch
+    hist = degree_histogram(base, deltas, v)
 
     for query in (["sssp"] if fast else ["sssp", "sswp"]):
         log = SnapshotLog(v, capacity=capacity)
-        slog = ShardedSnapshotLog(v, n_shards,
-                                  capacity=capacity // n_shards + batch)
+        shard_cap = capacity // n_shards + batch
+        slogs = {
+            "naive": ShardedSnapshotLog(v, n_shards, capacity=shard_cap),
+            "balanced": ShardedSnapshotLog(
+                v, n_shards, capacity=shard_cap, assignment="balanced",
+                degree_hist=hist,
+            ),
+        }
         log.append_snapshot(*base)
-        slog.append_snapshot(*base)
+        for sl in slogs.values():
+            sl.append_snapshot(*base)
         for d in deltas[: s - 1]:
             log.append_snapshot(*d)
-            slog.append_snapshot(*d)
+            for sl in slogs.values():
+                sl.append_snapshot(*d)
         view = WindowView(log, size=s)
-        sview = ShardedWindowView(slog, size=s)
         sq = StreamingQuery(view, query, 0)
-        ssq = StreamingQuery(sview, query, 0)
-        np.testing.assert_array_equal(sq.results, ssq.results)
-        sq.advance(deltas[s - 1])  # warm both advance paths
-        ssq.advance(deltas[s - 1])
+        ssqs = {
+            mode: StreamingQuery(ShardedWindowView(sl, size=s), query, 0)
+            for mode, sl in slogs.items()
+        }
+        for ssq in ssqs.values():
+            np.testing.assert_array_equal(sq.results, ssq.results)
+        sq.advance(deltas[s - 1])  # warm every advance path
+        for sl in slogs.values():
+            sl.append_snapshot(*deltas[s - 1])
+        for ssq in ssqs.values():
+            ssq.advance()
 
-        shard_ts = []
+        shard_ts = {mode: [] for mode in ssqs}
+        launches0 = {m: q.stats["kernel_launches"] for m, q in ssqs.items()}
         for k, d in enumerate(deltas[s : s + slides]):
             t0 = time.perf_counter()
             ref = sq.advance(d)
             t_host = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            got = ssq.advance(d)
-            t_shard = time.perf_counter() - t0
-            assert np.array_equal(got, ref), \
-                f"sharded != single-host on slide {k} ({query})"
-            shard_ts.append(t_shard)
-            emit(f"evolving-stream-sharded/{query}/slide{k}", t_shard * 1e6,
-                 f"shards={n_shards};window={s};single_host_us={t_host*1e6:.1f};"
+            row_t, row_l = {}, {}
+            for mode, ssq in ssqs.items():
+                slogs[mode].append_snapshot(*d)
+                t0 = time.perf_counter()
+                got = ssq.advance()
+                row_t[mode] = time.perf_counter() - t0
+                assert np.array_equal(got, ref), \
+                    f"sharded[{mode}] != single-host on slide {k} ({query})"
+                shard_ts[mode].append(row_t[mode])
+                row_l[mode] = ssq.stats["kernel_launches"] - launches0[mode]
+                launches0[mode] = ssq.stats["kernel_launches"]
+            emit(f"evolving-stream-sharded/{query}/slide{k}",
+                 row_t["naive"] * 1e6,
+                 f"shards={n_shards};window={s};"
+                 f"single_host_us={t_host*1e6:.1f};"
+                 f"balanced_us={row_t['balanced']*1e6:.1f};"
+                 f"occupancy_spread_naive={slogs['naive'].occupancy_spread():.2f};"
+                 f"occupancy_spread_balanced={slogs['balanced'].occupancy_spread():.2f};"
+                 f"launches_naive={row_l['naive']};"
+                 f"launches_balanced={row_l['balanced']};"
                  f"bit_for_bit=1")
+        spread = {m: sl.occupancy_spread() for m, sl in slogs.items()}
         emit(f"evolving-stream-sharded/{query}/S{s}_median",
-             float(np.median(shard_ts)) * 1e6,
+             float(np.median(shard_ts["naive"])) * 1e6,
              f"shards={n_shards};slides={slides};"
-             f"supersteps={ssq.stats['supersteps']};"
-             f"qrs_edges={ssq.stats['qrs_edges']}")
+             f"balanced_median_us={float(np.median(shard_ts['balanced']))*1e6:.1f};"
+             f"occupancy_spread_naive={spread['naive']:.2f};"
+             f"occupancy_spread_balanced={spread['balanced']:.2f};"
+             f"supersteps={ssqs['naive'].stats['supersteps']};"
+             f"qrs_edges={ssqs['naive'].stats['qrs_edges']}")
+        assert spread["balanced"] <= 2.0, (
+            f"balanced occupancy spread {spread['balanced']:.2f} > 2x "
+            f"(naive {spread['naive']:.2f}) on the RMAT fixture"
+        )
 
 
 # ---------------------------------------------------------------- roofline

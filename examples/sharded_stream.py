@@ -8,14 +8,18 @@ checks every slide bit-for-bit against the single-host ``StreamingQuery``:
 
 What to look at in the output:
 
-* per-shard universe occupancy — appends route each edge to the shard owning
-  its destination, so shard state (ids, witness counts, weight extrema,
-  bound trims) never crosses devices;
-* per-slide supersteps — each advance folds the slide diff into warm
-  per-shard bounds and evaluates only the appended snapshot, with ONE
-  all-gather of the per-vertex values per superstep as the only cross-shard
-  traffic (the invariant `tests/_stream_shard_checks.py::check_collectives`
-  pins against the compiled HLO).
+* per-shard universe occupancy, naive vs rebalanced — appends route each
+  edge to the shard owning its destination, so naive dst ranges inherit the
+  RMAT degree skew (~3x max/mean, ~18x max/min on this fixture); the
+  degree-histogram range rebalance (`assignment="balanced"`) evens the
+  per-shard edge mass out to ~1.1x max/mean while keeping every shard-local guarantee (and the serving
+  engine bit-for-bit);
+* per-slide supersteps and kernel launches — each advance folds the slide
+  diff into warm per-shard bounds and evaluates only the appended snapshot,
+  with ONE all-gather of the per-vertex values per superstep as the only
+  cross-shard traffic (the invariant
+  `tests/_stream_shard_checks.py::check_collectives` pins against the
+  compiled HLO, including the per-shard Pallas ELL kernels).
 """
 import argparse
 import os
@@ -41,7 +45,9 @@ def main():
     from repro.graph.generators import (
         generate_evolving_stream, generate_rmat, generate_uniform_weights,
     )
-    from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+    from repro.graph.shardlog import (
+        ShardedSnapshotLog, ShardedWindowView, degree_histogram,
+    )
     from repro.graph.stream import SnapshotLog, WindowView
 
     # largest power-of-two shard count the host can mesh (always divides v)
@@ -58,17 +64,28 @@ def main():
         src, dst, w, v, num_snapshots=window + slides, batch_size=batch, seed=2,
     )
 
+    # naive dst ranges inherit the RMAT degree skew; the degree-histogram
+    # rebalance moves the range boundaries so per-shard edge mass evens out
+    hist = degree_histogram(base, deltas, v)
     log = SnapshotLog(v, capacity=2 * e)
-    slog = ShardedSnapshotLog(v, n_shards, capacity=2 * e // n_shards)
+    naive = ShardedSnapshotLog(v, n_shards, capacity=2 * e // n_shards)
+    slog = ShardedSnapshotLog(v, n_shards, capacity=2 * e // n_shards,
+                              assignment="balanced", degree_hist=hist)
     log.append_snapshot(*base)
+    naive.append_snapshot(*base)
     slog.append_snapshot(*base)
     for d in deltas[: window - 1]:
         log.append_snapshot(*d)
+        naive.append_snapshot(*d)
         slog.append_snapshot(*d)
 
-    occupancy = [sh.num_edges for sh in slog.shards]
-    print(f"universe: {slog.num_edges} edges over {n_shards} dst-range shards")
-    print(f"per-shard occupancy: {occupancy}")
+    print(f"universe: {slog.num_edges} edges over {n_shards} dst shards")
+    print(f"per-shard occupancy, naive ranges:  "
+          f"{[sh.num_edges for sh in naive.shards]}  "
+          f"(max/mean {naive.occupancy_spread():.1f}x)")
+    print(f"per-shard occupancy, rebalanced:    "
+          f"{[sh.num_edges for sh in slog.shards]}  "
+          f"(max/mean {slog.occupancy_spread():.1f}x)")
 
     view = WindowView(log, size=window)
     sview = ShardedWindowView(slog, size=window)
@@ -82,7 +99,8 @@ def main():
     np.testing.assert_array_equal(results, ref_q.results)
 
     print(f"\n{'slide':>5s} {'ms':>8s} {'supersteps':>10s} "
-          f"{'qrs_edges':>9s}  check")
+          f"{'launches':>8s} {'qrs_edges':>9s}  check")
+    launches = sq.stats["kernel_launches"]
     for k, d in enumerate(deltas[window - 1:]):
         t0 = time.perf_counter()
         got = sq.advance(d)
@@ -90,8 +108,10 @@ def main():
         ref = ref_q.advance(d)
         ok = np.array_equal(got, ref)
         print(f"{k:5d} {dt * 1e3:8.1f} {sq.stats['supersteps']:10d} "
+              f"{sq.stats['kernel_launches'] - launches:8d} "
               f"{sq.stats['qrs_edges']:9d}  "
               f"{'bit-for-bit == single-host' if ok else 'MISMATCH'}")
+        launches = sq.stats["kernel_launches"]
         assert ok, f"sharded advance diverged at slide {k}"
 
     # shared views are pruned by whoever coordinates their consumers

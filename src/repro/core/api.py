@@ -500,6 +500,24 @@ class StreamingQueryBatch(StreamingQuery):
     ``QueryBatcher.watch``/eviction): adding a lane primes only that lane;
     existing lanes keep their warm state.
 
+    **Q-class compile amortization** — every jitted launch's shapes are
+    keyed by the lane count, so serving membership churn would recompile
+    per distinct Q.  The lane axis is therefore padded to a sticky
+    power-of-two **capacity class** (the same amortized-capacity trick the
+    substrate uses for edges and ELL rows): dead lanes duplicate lane 0 —
+    idempotent monotone work, sliced off at the API boundary — and
+    membership changes mutate lanes in place
+    (:meth:`~repro.core.bounds.StreamingBounds.set_lane` /
+    ``drop_lane_padded``), so under rotating traffic the engine compiles
+    O(log Q_max) times instead of once per distinct Q.
+
+    **Per-lane convergence accounting** — batched maintenance records each
+    lane's own freeze step (the superstep at which the vmapped/joint
+    ``while_loop`` stopped changing that lane) instead of only the lockstep
+    max; :attr:`lane_supersteps` maps each source to its accumulated count
+    so serving can spot pathological watchers
+    (``QueryBatcher.cache_info().lane_supersteps``).
+
     Passing a dst-range-sharded stream constructs a
     :class:`~repro.distributed.stream_shard.ShardedStreamingQueryBatch`:
     the same Q-fold under ``shard_map``, with one all-gather of the
@@ -535,15 +553,42 @@ class StreamingQueryBatch(StreamingQuery):
         if len(set(srcs)) != len(srcs):
             raise ValueError(f"duplicate sources in batch: {srcs}")
         self.sources = srcs
+        self._q_cap = _q_class(len(srcs))  # sticky lane-capacity class
         super().__init__(stream, query, srcs[0], window=window, method=method)
 
     @property
     def num_queries(self) -> int:
         return len(self.sources)
 
+    @property
+    def lane_capacity(self) -> int:
+        """Padded lane count every launch compiles for (sticky class)."""
+        return self._q_cap
+
+    def _lane_sources(self) -> list:
+        """Real sources padded to the capacity class with lane-0 duplicates."""
+        return self.sources + [self.sources[0]] * (
+            self._q_cap - len(self.sources)
+        )
+
+    @property
+    def lane_supersteps(self) -> dict:
+        """Accumulated per-lane maintenance supersteps, ``{source: steps}``.
+
+        Each lane reports its own freeze steps (the superstep at which a
+        batched maintenance pass stopped changing it), so a watcher whose
+        count runs far ahead of its peers is flagging pathological churn
+        around its source — the serving signal
+        ``QueryBatcher.cache_info()`` surfaces.
+        """
+        if self._bounds is None:  # unprimed: no maintenance has run
+            return {s: 0 for s in self.sources}
+        ls = self._bounds.lane_supersteps
+        return {s: int(ls[i]) for i, s in enumerate(self.sources)}
+
     # -- batched substitutions ------------------------------------------------
     def _make_bounds(self):
-        return StreamingBounds(self.view, self.semiring, self.sources)
+        return StreamingBounds(self.view, self.semiring, self._lane_sources())
 
     def _lane_bounds(self, source: int):
         """Scalar bounds solve for one NEW lane (overridden by the sharded
@@ -573,7 +618,7 @@ class StreamingQueryBatch(StreamingQuery):
             )
 
             ell = self._qrs.ell_pack()
-            q = len(self.sources)
+            q = self._q_cap  # padded lane count (sticky compile class)
             words = tile_presence_words(
                 mask.astype(np.uint32).reshape(-1, 1), 1, q
             )
@@ -587,9 +632,9 @@ class StreamingQueryBatch(StreamingQuery):
     # -- results --------------------------------------------------------------
     @property
     def results(self) -> np.ndarray:
-        """``(Q, S, V)`` values for the current window."""
+        """``(Q, S, V)`` values for the current window (dead lanes sliced)."""
         self._ensure_primed()
-        return np.stack(self._rows, axis=1)
+        return np.stack(self._rows, axis=1)[: len(self.sources)]
 
     def result_for(self, source: int) -> np.ndarray:
         """``(S, V)`` slice of the current window for one source."""
@@ -606,34 +651,53 @@ class StreamingQueryBatch(StreamingQuery):
         """Add one query lane; primes ONLY the new lane (warm lanes kept).
 
         The lane's bounds are solved on the current window (the same cold
-        cost a standalone watcher would pay), appended to the ``(Q, V)``
-        state, and the shared QRS keep rule is refreshed — it can only
-        loosen, so resident edges keep their slots.  Only the NEW lane's
-        rows are evaluated; surviving lanes' cached rows are exact
-        per-snapshot fixpoints independent of the keep superset and are
-        reused as-is.
+        cost a standalone watcher would pay) and written into the first
+        dead (padding) lane of the ``(Q_cap, V)`` state — shapes, and
+        therefore compiled launches, are untouched while the batch stays
+        within its capacity class; crossing the class doubles it (sticky).
+        The shared QRS keep rule is refreshed — it can only loosen, so
+        resident edges keep their slots.  Only the NEW lane's rows are
+        evaluated; surviving lanes' cached rows are exact per-snapshot
+        fixpoints independent of the keep superset and are reused as-is.
         """
         s = int(source)
         if s in self.sources:
             return
         if self._bounds is None:
             self.sources.append(s)
+            self._q_cap = max(self._q_cap, _q_class(len(self.sources)))
             return
         self.advance()  # the lane joins at the log tip's window
         lane = self._lane_bounds(s)
-        self._bounds.append_lane(lane)
+        q = len(self.sources)
+        if q == self._q_cap:  # class crossing: double the lane capacity
+            self._q_cap *= 2
+            self._bounds.pad_lanes(self._q_cap)
+            self._rows = [
+                np.concatenate(
+                    [r, np.broadcast_to(r[0:1], (self._q_cap - q,)
+                                        + r.shape[1:])]
+                ) for r in self._rows
+            ]
+        self._bounds.set_lane(q, lane)
         self.sources.append(s)
         self._qrs.refresh(np.asarray(self._bounds.uvv))
         for i, t in enumerate(self.view.snapshots()):
             row, _ = self._eval_lane_snapshot(t, lane)
-            self._rows[i] = np.concatenate([self._rows[i], row[None]], axis=0)
+            r = self._rows[i]
+            if not r.flags.writeable:  # np.asarray of a device array
+                r = r.copy()
+                self._rows[i] = r
+            r[q] = row
 
     def remove_source(self, source: int) -> None:
         """Drop one query lane (no-op if absent; the last lane must stay).
 
-        Pure state surgery: the lane's bound/parent/row slices are removed
-        and the shared QRS keep rule re-seated; no re-evaluation (the
-        remaining lanes' rows are exact regardless of the keep superset).
+        Pure state surgery at frozen shapes: real lanes after the dropped
+        one shift down a slot and the freed tail slot re-duplicates lane 0
+        (:meth:`~repro.core.bounds.StreamingBounds.drop_lane_padded`); the
+        shared QRS keep rule is re-seated; no re-evaluation (the remaining
+        lanes' rows are exact regardless of the keep superset).
         """
         s = int(source)
         if s not in self.sources:
@@ -641,12 +705,16 @@ class StreamingQueryBatch(StreamingQuery):
         if len(self.sources) == 1:
             raise ValueError("cannot remove the last source of a batch")
         i = self.sources.index(s)
+        q = len(self.sources)
         self.sources.remove(s)
         if self._bounds is None:
             return
-        self._bounds.drop_lane(i)
+        self._bounds.drop_lane_padded(i, q)
         self._qrs.refresh(np.asarray(self._bounds.uvv))
-        self._rows = [np.delete(row, i, axis=0) for row in self._rows]
+        from repro.core.bounds import _drop_lane_order
+
+        order = _drop_lane_order(i, q, self._q_cap)
+        self._rows = [row[order] for row in self._rows]
 
     def _eval_lane_snapshot(self, t: int, lane) -> tuple[np.ndarray, int]:
         """Scalar-engine eval of snapshot ``t`` for ONE new lane's bounds."""
@@ -658,12 +726,23 @@ class StreamingQueryBatch(StreamingQuery):
             "query": self.semiring.name,
             "sources": tuple(self.sources),
             "num_queries": len(self.sources),
+            "lane_capacity": self._q_cap,
             "window": (self.view.start, self.view.stop),
             "slides": self._slides,
-            "frac_uvv": float(np.asarray(self._bounds.uvv).mean()),
+            "frac_uvv": float(
+                np.asarray(self._bounds.uvv)[: len(self.sources)].mean()
+            ),
             "qrs_edges": self._qrs.num_edges,
             **kw,
         }
+
+
+def _q_class(q: int) -> int:
+    """Smallest power-of-two lane capacity ≥ ``q`` (sticky compile classes)."""
+    cap = 1
+    while cap < q:
+        cap *= 2
+    return cap
 
 
 def evaluate_evolving_query(

@@ -227,6 +227,14 @@ class StreamingBounds:
                 raise ValueError("StreamingBounds needs at least one source")
             self.source = jnp.asarray(self.sources, jnp.int32)
         self.supersteps = 0
+        # per-lane superstep accounting (batched mode): lane ``i`` accumulates
+        # its own freeze steps — the superstep at which the vmapped while_loop
+        # froze its carry — instead of the lockstep max, so serving can spot
+        # pathological watchers (see StreamingQueryBatch.lane_supersteps)
+        self.lane_supersteps = (
+            None if self.sources is None
+            else np.zeros(len(self.sources), np.int64)
+        )
         self._weights_key = None
         self._w_cap = self._w_cup = None
         self._full_init()
@@ -234,6 +242,19 @@ class StreamingBounds:
     @property
     def batched(self) -> bool:
         return self.sources is not None
+
+    def _tally(self, iters) -> int:
+        """Fold a fixpoint's iteration count(s) into the per-lane ledger.
+
+        Scalar mode passes a scalar through; batched mode accumulates the
+        per-lane (Q,) counts and returns their max (the lockstep superstep
+        count the aggregate ``supersteps`` stat always reported).
+        """
+        it = np.asarray(iters)
+        if it.ndim == 0:
+            return int(it)
+        self.lane_supersteps[: len(it)] += it.astype(np.int64)
+        return int(it.max()) if len(it) else 0
 
     # -- device-side universe arrays ------------------------------------------
     def _edges(self):
@@ -268,12 +289,11 @@ class StreamingBounds:
             return compute_fixpoint(
                 src, dst, w, mask, sr, self.source, v, sorted_edges=False
             )
-        vals, iters = jax.vmap(
+        return jax.vmap(
             lambda s: compute_fixpoint(
                 src, dst, w, mask, sr, s, v, sorted_edges=False
             )
         )(self.source)
-        return vals, iters.max()
 
     def _refix(self, values, src, dst, w, mask):
         sr, v = self.sr, self.view.log.num_vertices
@@ -281,12 +301,11 @@ class StreamingBounds:
             return incremental_fixpoint(
                 values, src, dst, w, mask, sr, v, sorted_edges=False
             )
-        vals, iters = jax.vmap(
+        return jax.vmap(
             lambda v0: incremental_fixpoint(
                 v0, src, dst, w, mask, sr, v, sorted_edges=False
             )
         )(values)
-        return vals, iters.max()
 
     def _parents(self, values, src, dst, w, mask):
         sr, v = self.sr, self.view.log.num_vertices
@@ -325,7 +344,7 @@ class StreamingBounds:
         self.val_cup, it_cup = self._refix(self.val_cap, src, dst, w_cup, union)
         self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
         self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
-        self.supersteps += int(it_cap) + int(it_cup)
+        self.supersteps += self._tally(it_cap) + self._tally(it_cup)
 
     # -- batched-mode lane membership ----------------------------------------
     def append_lane(self, lane: "StreamingBounds") -> None:
@@ -347,6 +366,9 @@ class StreamingBounds:
         self.parent_cup = jnp.concatenate(
             [self.parent_cup, lane.parent_cup[None]], 0
         )
+        self.lane_supersteps = np.concatenate(
+            [self.lane_supersteps, [lane.supersteps]]
+        )
         self.supersteps += lane.supersteps
 
     def drop_lane(self, index: int) -> None:
@@ -358,10 +380,68 @@ class StreamingBounds:
         keep = np.asarray(
             [j for j in range(self.val_cap.shape[0]) if j != index], np.int32
         )
-        self.val_cap = self.val_cap[keep]
-        self.val_cup = self.val_cup[keep]
-        self.parent_cap = self.parent_cap[keep]
-        self.parent_cup = self.parent_cup[keep]
+        self._permute_lanes(keep)
+
+    def _permute_lanes(self, order: np.ndarray) -> None:
+        """Re-index the lane axis of every (Q, V) array by ``order``."""
+        self.val_cap = self.val_cap[order]
+        self.val_cup = self.val_cup[order]
+        self.parent_cap = self.parent_cap[order]
+        self.parent_cup = self.parent_cup[order]
+        self.lane_supersteps = self.lane_supersteps[order]
+
+    # -- Q-class padding (sticky lane-capacity classes) -----------------------
+    # The (Q, V) shapes key every jitted maintenance launch, so serving
+    # membership churn (watch/evict) would recompile per distinct Q.
+    # StreamingQueryBatch therefore pads the lane axis to a sticky capacity
+    # class — dead lanes duplicate lane 0 (idempotent monotone work, sliced
+    # off at the API boundary) — and mutates membership through these three
+    # shape-preserving operations, the lane-axis analogue of the edge/ELL
+    # amortized-capacity trick.
+    def set_lane(self, index: int, lane: "StreamingBounds") -> None:
+        """Overwrite lane ``index`` with a scalar maintainer's warm state."""
+        if not self.batched or lane.batched:
+            raise ValueError("set_lane needs a batched self + scalar lane")
+        self.sources[index] = int(lane.source)
+        self.source = jnp.asarray(self.sources, jnp.int32)
+        self.val_cap = self.val_cap.at[index].set(lane.val_cap)
+        self.val_cup = self.val_cup.at[index].set(lane.val_cup)
+        self.parent_cap = self.parent_cap.at[index].set(lane.parent_cap)
+        self.parent_cup = self.parent_cup.at[index].set(lane.parent_cup)
+        self.lane_supersteps[index] = lane.supersteps
+        self.supersteps += lane.supersteps
+
+    def pad_lanes(self, cap: int) -> None:
+        """Grow the lane axis to ``cap`` entries by duplicating lane 0."""
+        if not self.batched:
+            raise ValueError("pad_lanes needs a batched maintainer")
+        reps = cap - len(self.sources)
+        if reps <= 0:
+            return
+        order = np.concatenate([
+            np.arange(len(self.sources)), np.zeros(reps, np.int64)
+        ])
+        self.sources.extend([self.sources[0]] * reps)
+        self.source = jnp.asarray(self.sources, jnp.int32)
+        self._permute_lanes(order)
+
+    def drop_lane_padded(self, index: int, num_real: int) -> None:
+        """Remove lane ``index`` WITHOUT changing the padded lane count.
+
+        Real lanes after ``index`` shift down one slot; the freed tail slot
+        (and everything past ``num_real``) re-duplicates the first
+        SURVIVING lane — never the dropped one, whose state (and UVV mask,
+        which the shared QRS keep rule folds over every lane) must stop
+        influencing the batch.  Shapes, and therefore compiled launches,
+        are untouched.
+        """
+        if not self.batched:
+            raise ValueError("drop_lane_padded needs a batched maintainer")
+        cap = len(self.sources)
+        order = _drop_lane_order(index, num_real, cap)
+        self.sources = [self.sources[j] for j in order]
+        self.source = jnp.asarray(self.sources, jnp.int32)
+        self._permute_lanes(order)
 
     # -- one slide ------------------------------------------------------------
     def apply_slide(self, diff, inter_mask=None, union_mask=None) -> int:
@@ -418,7 +498,7 @@ class StreamingBounds:
                 )
             self.val_cap, it = self._refix(self.val_cap, src, dst, w_cap, inter)
             self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
-            steps += int(it)
+            steps += self._tally(it)
 
         cup_dropped = _as_mask(cap_n, diff.union_lost, cup_weight_worse)
         cup_changed = (
@@ -434,7 +514,7 @@ class StreamingBounds:
                 )
             self.val_cup, it = self._refix(self.val_cup, src, dst, w_cup, union)
             self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
-            steps += int(it)
+            steps += self._tally(it)
 
         self.supersteps += steps
         return steps
@@ -457,6 +537,16 @@ class StreamingBounds:
             lower=lower, upper=upper, uvv=self.uvv,
             iters_cap=total, iters_cup=jnp.int32(0),
         )
+
+
+def _drop_lane_order(index: int, num_real: int, cap: int) -> np.ndarray:
+    """Lane permutation dropping ``index``: survivors shift down, every
+    freed/padding slot re-duplicates the first survivor.  Shared by the
+    bounds arrays and the cached result rows so they cannot disagree."""
+    survivors = [j for j in range(num_real) if j != index]
+    return np.asarray(
+        survivors + [survivors[0]] * (cap - num_real + 1), np.int64
+    )
 
 
 def _as_mask(n: int, *id_arrays) -> "np.ndarray | None":

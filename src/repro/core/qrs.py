@@ -396,6 +396,15 @@ class PatchableQRS:
             self.valid[slots] = False
             self.slot_edge[slots] = -1
             self.slot_of[leave_ids] = -1
+            # freed slots deliberately KEEP their stale src/dst/weight: the
+            # ELL packing (ell_pack) packs the full slot arrays, and a freed
+            # slot that keeps claiming its old vertex's row holds the packed
+            # row histogram — and therefore the sticky row capacity — steady
+            # across residency churn (zeroing them re-binned slots to vertex
+            # 0 and made the row count jumpy enough to retrigger kernel
+            # compiles; pinned by the ELL shape-stability test).  Stale
+            # entries are inert everywhere: valid=False masks the flat path
+            # and all-zero presence words mask the kernel path.
             self._free.extend(int(s) for s in slots)
         if entered:
             if entered > len(self._free):

@@ -1,12 +1,19 @@
 """SPMD sliding-window serving: sharded streaming bounds + query (shard_map).
 
 Device-side counterpart of :mod:`repro.graph.shardlog`.  The host structures
-partition the edge universe by dst range; this module runs the streaming
+partition the edge universe by destination; this module runs the streaming
 maintenance passes (:class:`~repro.core.bounds.StreamingBounds`'s monotone
 re-relaxations, KickStarter-style parent trims, and the per-snapshot
 incremental evaluation) as ``shard_map`` programs over a 1-D ``model`` mesh
-with shard ``s`` owning vertices ``[s * v_local, (s+1) * v_local)`` and all
-edges sinking there — the :func:`repro.distributed.evolve` layout.
+with each shard owning the vertices its log's
+:class:`~repro.graph.shardlog.ShardAssignment` names (equal dst ranges by
+default — the :func:`repro.distributed.evolve` layout — or the balanced /
+hash-of-dst rebalances) and all edges sinking there.  Per-vertex state
+lives in the assignment's flat position space, so the kernels are
+assignment-agnostic; ``method="cqrs_ell"`` additionally runs the Pallas
+vrelax kernel per shard INSIDE ``shard_map`` over per-shard row-split ELL
+tiles (:func:`_ell_kernels`) instead of a replicated stacked-universe
+launch.
 
 Communication contract (the §Roofline invariant, asserted by
 ``tests/_stream_shard_checks.py`` against the lowered HLO):
@@ -272,7 +279,18 @@ def _kernels_q(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
         )(data)
 
     def fixpoint_body(values_l, src, dst_local, weight, active):
-        # values_l (Q, v_local); one all-gather per superstep, Q-wide
+        # values_l (Q, v_local); one all-gather per superstep, Q-wide.
+        # Per-lane convergence accounting rides the SAME collective: the
+        # scalar convergence psum becomes one (Q,) psum of per-lane change
+        # flags (still exactly one all-reduce in the lowered HLO), and each
+        # lane records its freeze step — defined exactly as the vmapped
+        # single-host ledger does: the count of supersteps up to AND
+        # including the lane's own confirming (no-change) pass, so a lane
+        # last changing at superstep m reports m+1 and an instantly-
+        # converged lane reports 1.  Counts are therefore comparable across
+        # the single-host and sharded deployments.
+        q = values_l.shape[0]
+
         def relax(vals_l):
             vals_full = jax.lax.all_gather(vals_l, ax, axis=1, tiled=True)
             cand = sr.extend(vals_full[:, src], weight[None, :])  # (Q, E)
@@ -285,21 +303,24 @@ def _kernels_q(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
             return sr.improve(vals_l, upd)
 
         def cond(state):
-            _, changed, it = state
+            _, changed, it, _ = state
             return changed & (it < limit)
 
         def body(state):
-            vals, _, it = state
+            vals, _, it, lane_it = state
             new = relax(vals)
-            changed = jax.lax.psum(
-                jnp.any(new != vals).astype(jnp.int32), ax
-            ) > 0
-            return new, changed, it + 1
+            lane_changed = jax.lax.psum(
+                jnp.any(new != vals, axis=1).astype(jnp.int32), ax
+            ) > 0  # (Q,) — the one all-reduce, now a vector
+            lane_it = jnp.where(lane_changed, it + 2, lane_it)
+            return new, jnp.any(lane_changed), it + 1, lane_it
 
-        vals, _, iters = jax.lax.while_loop(
-            cond, body, (values_l, jnp.bool_(True), jnp.int32(0))
+        vals, _, iters, lane_iters = jax.lax.while_loop(
+            cond, body,
+            (values_l, jnp.bool_(True), jnp.int32(0),
+             jnp.ones(q, jnp.int32)),
         )
-        return vals, iters
+        return vals, iters, lane_iters
 
     def parents_body(values_l, src, dst_local, weight, active, sources):
         # per-lane BFS levels over each lane's achieving subgraph
@@ -377,7 +398,7 @@ def _kernels_q(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
     r = P()  # replicated: (Q,) sources
     fixpoint = jax.jit(shard_map(
         fixpoint_body, mesh=mesh,
-        in_specs=(vq, e, e, e, e), out_specs=(vq, r), check_rep=False,
+        in_specs=(vq, e, e, e, e), out_specs=(vq, r, r), check_rep=False,
     ))
     parents = jax.jit(shard_map(
         parents_body, mesh=mesh,
@@ -388,6 +409,133 @@ def _kernels_q(mesh: Mesh, sr: Semiring, num_vertices: int, e_cap: int,
         in_specs=(vq, vq, e, e, r), out_specs=(vq, vq), check_rep=False,
     ))
     return {"fixpoint": fixpoint, "parents": parents, "invalidate": invalidate}
+
+
+@functools.lru_cache(maxsize=None)
+def _ell_kernels(mesh: Mesh, sr: Semiring, state_len: int, model_axis: str,
+                 interpret: bool):
+    """Per-shard Pallas vrelax fixpoint under shard_map (the SPMD ELL path).
+
+    Each shard holds its OWN row-split ELL packing — rows split within the
+    shard's dst range, local-dst row→vertex ids, global-src *positions* on
+    the slot plane (:class:`_ShardedEllCache`) — so the Pallas kernel's
+    gather/relax/reduce runs on shard-local tiles instead of the old
+    replicated stacked-universe launch, and per-slide kernel work scales
+    with the mesh.  The collective schedule is IDENTICAL to the flat
+    :func:`_kernels` fixpoint: per superstep exactly one all-gather of the
+    per-vertex state (the source-value gather feeding ``vals_full[src]``)
+    plus the convergence psum — pinned against the lowered HLO by
+    ``tests/_stream_shard_checks.py::check_collectives``.
+
+    ``fixpoint`` relaxes scalar ``(state_len,)`` state; ``fixpoint_q`` the
+    serving Q-fold — ``(Q, state_len)`` state split on the VERTEX axis with
+    Q folded into the kernel's snapshot axis (presence words pre-tiled by
+    :func:`repro.kernels.vrelax.ops.tile_presence_words`), one collective
+    per superstep regardless of Q, plus per-lane freeze-step accounting on
+    the same (Q,) psum.  Bit-for-bit: min/max slot reductions are exact for
+    f32, so row splitting and shard placement never change a float.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.vrelax.kernel import S_BLOCK, vrelax_partial_pallas
+    from repro.utils.padding import round_up
+
+    ax = model_axis
+    n_shards = int(mesh.shape[ax])
+    if state_len % n_shards:
+        raise ValueError(
+            f"state_len {state_len} must be divisible by the "
+            f"{n_shards} mesh shards"
+        )
+    v_cap = state_len // n_shards
+    limit = state_len + 1
+
+    def seg(partial, row2v):
+        # combine split rows → shard-local vertices (tiny XLA segment reduce)
+        return sr.segment_reduce(
+            partial, row2v, v_cap, indices_are_sorted=True
+        )
+
+    def fixpoint_body(values_l, src_pos, weight, words, row2v):
+        # values_l (v_cap,); src_pos/weight (R, D); words (R, D, W); the
+        # pallas launch computes all S_BLOCK sublanes but only bit 0 is set
+        # in the words, so rows 1.. reduce to identity and are dropped.
+        def relax(vals_l):
+            vals_full = jax.lax.all_gather(vals_l, ax, axis=0, tiled=True)
+            g = vals_full[src_pos][None]  # (1, R, D) — source-value gather
+            g = jnp.pad(g, ((0, S_BLOCK - 1), (0, 0), (0, 0)))
+            partial = vrelax_partial_pallas(
+                g, weight, words, semiring=sr.name, interpret=interpret
+            )  # (S_BLOCK, R)
+            return sr.improve(vals_l, seg(partial[0], row2v))
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < limit)
+
+        def body(state):
+            vals, _, it = state
+            new = relax(vals)
+            changed = jax.lax.psum(
+                jnp.any(new != vals).astype(jnp.int32), ax
+            ) > 0
+            return new, changed, it + 1
+
+        vals, _, iters = jax.lax.while_loop(
+            cond, body, (values_l, jnp.bool_(True), jnp.int32(0))
+        )
+        return vals, iters
+
+    def fixpoint_q_body(values_l, src_pos, weight, words, row2v):
+        # values_l (Q, v_cap); Q folded into the kernel snapshot axis (words
+        # carry bit q for lane q — tile_presence_words), padded to S_BLOCK.
+        q = values_l.shape[0]
+        s_pad = round_up(q, S_BLOCK)
+
+        def relax(vals_l):
+            vals_full = jax.lax.all_gather(vals_l, ax, axis=1, tiled=True)
+            g = vals_full[:, src_pos]  # (Q, R, D) — ONE gather, Q rows tall
+            g = jnp.pad(g, ((0, s_pad - q), (0, 0), (0, 0)))
+            partial = vrelax_partial_pallas(
+                g, weight, words, semiring=sr.name, interpret=interpret
+            )  # (s_pad, R)
+            upd = jax.vmap(lambda p: seg(p, row2v))(partial[:q])
+            return sr.improve(vals_l, upd)
+
+        def cond(state):
+            _, changed, it, _ = state
+            return changed & (it < limit)
+
+        def body(state):
+            vals, _, it, lane_it = state
+            new = relax(vals)
+            lane_changed = jax.lax.psum(
+                jnp.any(new != vals, axis=1).astype(jnp.int32), ax
+            ) > 0  # (Q,) — still the one all-reduce
+            # freeze step incl. the lane's confirming pass (see _kernels_q)
+            lane_it = jnp.where(lane_changed, it + 2, lane_it)
+            return new, jnp.any(lane_changed), it + 1, lane_it
+
+        vals, _, iters, lane_iters = jax.lax.while_loop(
+            cond, body,
+            (values_l, jnp.bool_(True), jnp.int32(0),
+             jnp.ones(q, jnp.int32)),
+        )
+        return vals, iters, lane_iters
+
+    e = P(ax)  # per-shard ELL planes stacked on the leading row axis
+    r = P()
+    v = P(ax)
+    vq = P(None, ax)
+    fixpoint = jax.jit(shard_map(
+        fixpoint_body, mesh=mesh,
+        in_specs=(v, e, e, e, e), out_specs=(v, r), check_rep=False,
+    ))
+    fixpoint_q = jax.jit(shard_map(
+        fixpoint_q_body, mesh=mesh,
+        in_specs=(vq, e, e, e, e), out_specs=(vq, r, r), check_rep=False,
+    ))
+    return {"fixpoint": fixpoint, "fixpoint_q": fixpoint_q}
 
 
 class ShardedStreamingBounds:
@@ -410,12 +558,21 @@ class ShardedStreamingBounds:
     split on the VERTEX axis and every pass is one Q-batched ``shard_map``
     launch (:func:`_kernels_q`) with still exactly one all-gather per
     superstep.
+
+    Internally every per-vertex array lives in the log's assignment
+    **position space** (:class:`~repro.graph.shardlog.ShardAssignment`:
+    vertex ``v`` at ``owner·v_cap + local``, padding positions idle at the
+    semiring identity) so rebalanced-range and hash-of-dst shard
+    assignments run the same kernels; for the default range mode the map is
+    the identity.  ``uvv``/``result`` translate back to global vertex order
+    at the API boundary (:meth:`to_global`).
     """
 
     def __init__(self, view: ShardedWindowView, sr: Semiring, source,
                  mesh: Optional[Mesh] = None, *, model_axis: str = MODEL_AXIS):
         self.view = view
         self.sr = sr
+        self.assign = view.log.assignment
         self.mesh = mesh if mesh is not None else host_mesh(
             view.log.n_shards, model_axis
         )
@@ -426,15 +583,22 @@ class ShardedStreamingBounds:
                 f"{view.log.n_shards} shards"
             )
         self.model_axis = model_axis
+        pos = self.assign.positions
         if np.ndim(source) == 0:
-            self.sources = None  # scalar mode: (V,) state
-            self.source = jnp.int32(int(source))
+            self.sources = None  # scalar mode: (state_len,) position space
+            self.source = jnp.int32(int(pos[int(source)]))
         else:
-            self.sources = [int(s) for s in np.asarray(source).ravel()]
-            if not self.sources:
+            srcs = [int(s) for s in np.asarray(source).ravel()]
+            if not srcs:
                 raise ValueError("ShardedStreamingBounds needs ≥1 source")
+            self.sources = [int(pos[s]) for s in srcs]  # positions
             self.source = jnp.asarray(self.sources, jnp.int32)
         self.supersteps = 0
+        self.launches = 0  # shard_map kernel launches (bench accounting)
+        self.lane_supersteps = (
+            None if self.sources is None
+            else np.zeros(len(self.sources), np.int64)
+        )
         self._dev_key = None
         self._dev: dict = {}
         self._full_init()
@@ -443,15 +607,40 @@ class ShardedStreamingBounds:
     def batched(self) -> bool:
         return self.sources is not None
 
+    def to_global(self, vals) -> np.ndarray:
+        """Gather position-space per-vertex state back to global ids."""
+        return np.asarray(vals)[..., self.assign.positions]
+
     # -- device-side stacked arrays -------------------------------------------
     def _kernels(self):
         if self.batched:
             return _kernels_q(
-                self.mesh, self.sr, self.view.log.num_vertices,
+                self.mesh, self.sr, self.view.log.state_len,
                 self.view.log.capacity, self.model_axis, len(self.sources),
             )
-        return _kernels(self.mesh, self.sr, self.view.log.num_vertices,
+        return _kernels(self.mesh, self.sr, self.view.log.state_len,
                         self.view.log.capacity, self.model_axis)
+
+    def _fixpoint(self, k, values, dev, w, active, tally: bool = True):
+        """One fixpoint launch → ``(vals, steps)``.
+
+        ``tally`` folds the batched kernel's per-lane freeze steps into
+        :attr:`lane_supersteps` (maintenance passes only — snapshot
+        evaluations pass ``tally=False`` so the per-lane ledger means the
+        same thing as the single-host vmapped one).
+        """
+        self.launches += 1
+        if self.batched:
+            vals, it, lane_it = k["fixpoint"](
+                values, dev["src"], dev["dst_local"], w, active
+            )
+            if tally:
+                self._tally(np.asarray(lane_it))
+        else:
+            vals, it = k["fixpoint"](
+                values, dev["src"], dev["dst_local"], w, active
+            )
+        return vals, int(it)
 
     def _device(self) -> dict:
         """Stacked edge arrays + safe weights, re-uploaded only when stale.
@@ -466,7 +655,8 @@ class ShardedStreamingBounds:
             sr = self.sr
             wmin, wmax = self.view.stacked_weight_extrema()
             self._dev = {
-                "src": jnp.asarray(arrs["src"]),
+                # gather side: source POSITIONS into the assignment layout
+                "src": jnp.asarray(arrs["src_pos"]),
                 "dst_local": jnp.asarray(arrs["dst_local"]),
                 "w_cap": jnp.asarray(sr.intersection_weight(wmin, wmax)),
                 "w_cup": jnp.asarray(sr.union_weight(wmin, wmax)),
@@ -479,23 +669,23 @@ class ShardedStreamingBounds:
 
     # -- full solve (cold start) ----------------------------------------------
     def _full_init(self):
-        sr, v = self.sr, self.view.log.num_vertices
+        sr, n = self.sr, self.view.log.state_len
         dev, k = self._device(), self._kernels()
         inter = self._stack(self.view.intersection_masks())
         union = self._stack(self.view.union_masks())
         if self.batched:
-            boot = np.full((len(self.sources), v), sr.identity, np.float32)
+            boot = np.full((len(self.sources), n), sr.identity, np.float32)
             boot[np.arange(len(self.sources)), self.sources] = np.float32(
                 sr.source
             )
         else:
-            boot = np.full(v, sr.identity, np.float32)
+            boot = np.full(n, sr.identity, np.float32)
             boot[int(self.source)] = np.float32(sr.source)
-        self.val_cap, it_cap = k["fixpoint"](
-            jnp.asarray(boot), dev["src"], dev["dst_local"], dev["w_cap"], inter
+        self.val_cap, it_cap = self._fixpoint(
+            k, jnp.asarray(boot), dev, dev["w_cap"], inter
         )
-        self.val_cup, it_cup = k["fixpoint"](
-            self.val_cap, dev["src"], dev["dst_local"], dev["w_cup"], union
+        self.val_cup, it_cup = self._fixpoint(
+            k, self.val_cap, dev, dev["w_cup"], union
         )
         self.parent_cap = k["parents"](
             self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"], inter,
@@ -505,13 +695,19 @@ class ShardedStreamingBounds:
             self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"], union,
             self.source,
         )
-        self.supersteps += int(it_cap) + int(it_cup)
+        self.launches += 2
+        self.supersteps += it_cap + it_cup
 
-    # batched-mode lane membership: the state layout (sources/source +
-    # val/parent arrays + supersteps) deliberately matches StreamingBounds,
-    # so the bookkeeping is shared rather than re-encoded
+    # batched-mode lane membership + tallies: the state layout (sources/
+    # source + val/parent/lane arrays + supersteps) deliberately matches
+    # StreamingBounds, so the bookkeeping is shared rather than re-encoded
     append_lane = StreamingBounds.append_lane
     drop_lane = StreamingBounds.drop_lane
+    set_lane = StreamingBounds.set_lane
+    pad_lanes = StreamingBounds.pad_lanes
+    drop_lane_padded = StreamingBounds.drop_lane_padded
+    _permute_lanes = StreamingBounds._permute_lanes
+    _tally = StreamingBounds._tally
 
     # -- one slide ------------------------------------------------------------
     def apply_slide(self, diff, inter_masks=None, union_masks=None) -> int:
@@ -560,14 +756,16 @@ class ShardedStreamingBounds:
                     self.val_cap, self.parent_cap, dropped, dev["src"],
                     self.source,
                 )
-            self.val_cap, it = k["fixpoint"](
-                self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"], inter
+                self.launches += 1
+            self.val_cap, it = self._fixpoint(
+                k, self.val_cap, dev, dev["w_cap"], inter
             )
             self.parent_cap = k["parents"](
                 self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
                 inter, self.source,
             )
-            steps += int(it)
+            self.launches += 1
+            steps += it
 
         cup_drop_ids = [
             np.concatenate([d.union_lost, w]) for d, w in zip(per, cup_weight_worse)
@@ -586,32 +784,39 @@ class ShardedStreamingBounds:
                     self.val_cup, self.parent_cup, dropped, dev["src"],
                     self.source,
                 )
-            self.val_cup, it = k["fixpoint"](
-                self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"], union
+                self.launches += 1
+            self.val_cup, it = self._fixpoint(
+                k, self.val_cup, dev, dev["w_cup"], union
             )
             self.parent_cup = k["parents"](
                 self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"],
                 union, self.source,
             )
-            steps += int(it)
+            self.launches += 1
+            steps += it
 
         self.supersteps += steps
         return steps
 
-    # -- results --------------------------------------------------------------
+    # -- results (global vertex order at the API boundary) --------------------
     @property
-    def uvv(self) -> jax.Array:
-        return detect_uvv(self.val_cap, self.val_cup)
+    def uvv(self) -> np.ndarray:
+        # host-side on purpose: every consumer (QRS keep rule, stats) reads
+        # it as numpy right away, so re-uploading the gathered array would
+        # just add two device round trips per advance
+        return self.to_global(detect_uvv(self.val_cap, self.val_cup))
 
     @property
     def result(self) -> BoundsResult:
+        val_cap = jnp.asarray(self.to_global(self.val_cap))
+        val_cup = jnp.asarray(self.to_global(self.val_cup))
         if self.sr.minimize:
-            lower, upper = self.val_cup, self.val_cap
+            lower, upper = val_cup, val_cap
         else:
-            lower, upper = self.val_cap, self.val_cup
+            lower, upper = val_cap, val_cup
         return BoundsResult(
-            val_cap=self.val_cap, val_cup=self.val_cup,
-            lower=lower, upper=upper, uvv=self.uvv,
+            val_cap=val_cap, val_cup=val_cup,
+            lower=lower, upper=upper, uvv=detect_uvv(val_cap, val_cup),
             iters_cap=jnp.int32(self.supersteps), iters_cup=jnp.int32(0),
         )
 
@@ -698,53 +903,110 @@ class ShardedQRSMask:
 
 
 class _ShardedEllCache:
-    """Sticky-shape ELL packing of the stacked shard universes (global dst).
+    """Per-shard row-split ELL packings at a uniform sticky row capacity.
 
-    The ``cqrs_ell`` engine needs global-dst edge arrays; they change only
-    when a shard registers edges or window weight extrema move, so the pack
-    is cached on ``(state_key, weight_epoch)`` and rows are held at the
-    packer's amortized capacity (compile-once per capacity class).  Padding
-    and non-QRS slots are masked per snapshot by all-zero presence words.
+    The pre-SPMD path packed the *stacked union* of all shard universes into
+    one host-side ELL and launched the Pallas kernel fully replicated —
+    every device did all-shards work every superstep, throwing away the
+    paper's small-subgraph scaling at the kernel layer.  This cache keeps
+    one :class:`~repro.graph.ell.StableEllPacker` PER SHARD over the shard's
+    own slot plane: rows split within the shard's dst range (``row2vertex``
+    in shard-local ids ``[0, v_cap)``), source *positions* on the slot plane
+    (the gather side spans shards), invalid slots masked by all-zero
+    presence words exactly like the single-host packer.  All shards pack at
+    one uniform amortized-doubling row capacity so the stacked
+    ``(n_shards · R, D)`` planes split cleanly under ``shard_map`` and the
+    kernel compiles once per capacity class.  Re-packed only when
+    ``(state_key, weight_epoch)`` moves.
     """
 
     def __init__(self, view: ShardedWindowView, sr: Semiring):
+        from repro.graph.ell import StableEllPacker
+
         self.view = view
         self.sr = sr
-        self._packer = None
-        self._ell = None
+        self._packers = [
+            StableEllPacker(view.log.assignment.v_cap)
+            for _ in range(view.log.n_shards)
+        ]
+        self._row_cap = 0  # uniform sticky per-shard row capacity
+        self._packs: Optional[list] = None  # host EllPacks (edge_id scatter)
+        self._dev: dict = {}
         self._key = None
 
     def pack(self):
-        from repro.graph.ell import StableEllPacker
-
+        """→ ``(per-shard host EllPacks, stacked device planes)``."""
         log = self.view.log
         key = (log.state_key(), self.view.weight_epoch)
         if self._key != key:
-            cap, n = log.capacity, log.n_shards
-            src = np.zeros((n, cap), np.int32)
-            dst = np.zeros((n, cap), np.int32)
-            for s, sh in enumerate(log.shards):
-                k = sh.num_edges
-                src[s, :k] = sh.src[:k]
-                dst[s, :k] = sh.dst[:k]
+            arrs = log.stacked_arrays()
+            cap, n = arrs["e_cap"], log.n_shards
             wmin, wmax = self.view.stacked_weight_extrema()
             w = np.asarray(self.sr.intersection_weight(wmin, wmax))
-            if self._packer is None:
-                self._packer = StableEllPacker(log.num_vertices)
-            self._ell = self._packer.pack(
-                src.reshape(-1), dst.reshape(-1), w
+            srcp = arrs["src_pos"].reshape(n, cap)
+            dstl = arrs["dst_local"].reshape(n, cap)
+            w = w.reshape(n, cap)
+            # uniform row capacity: every packer sees the NEEDIEST shard's
+            # natural row count as its floor, so the packers' own amortized-
+            # doubling growth runs in lockstep (identical inputs + identical
+            # history ⇒ identical sticky capacities, guarded by the assert)
+            need = max(
+                p._natural_rows(dstl[s]) for s, p in enumerate(self._packers)
             )
+            packs = [
+                p.pack(srcp[s], dstl[s], w[s], min_rows=need)
+                for s, p in enumerate(self._packers)
+            ]
+            assert len({p.num_rows for p in packs}) == 1, \
+                "per-shard ELL packs disagree on row capacity"
+            self._row_cap = packs[0].num_rows
+            self._packs = packs
+            self._dev = {
+                "src": jnp.concatenate([p.src for p in packs]),
+                "weight": jnp.concatenate([p.weight for p in packs]),
+                "row2vertex": jnp.concatenate([p.row2vertex for p in packs]),
+            }
             self._key = key
-        return self._ell
+        return self._packs, self._dev
+
+    def presence(self, masks, num_queries: Optional[int] = None) -> jax.Array:
+        """Scatter per-shard ``keep ∧ present`` masks into stacked ELL words.
+
+        With ``num_queries`` the words are pre-tiled for the Q-folded kernel
+        snapshot axis (bit ``q`` set for lane ``q`` wherever bit 0 was).
+        """
+        from repro.kernels.vrelax.ops import (
+            build_presence_ell, tile_presence_words,
+        )
+
+        cap = self.view.log.capacity
+        packs, _ = self.pack()
+        out = []
+        for p, m in zip(packs, masks):
+            words = pad_to(
+                np.asarray(m), cap, False
+            ).astype(np.uint32).reshape(-1, 1)
+            if num_queries is not None:
+                words = tile_presence_words(words, 1, num_queries)
+            out.append(build_presence_ell(words, p, as_numpy=True))
+        return jnp.asarray(np.concatenate(out, axis=0))
 
 
 class _ShardedEllMixin:
-    """Shared ``cqrs_ell`` packing hook for the sharded query classes."""
+    """Shared per-shard ``cqrs_ell`` machinery for the sharded query classes."""
 
-    def _ell_pack(self):
+    def _ell(self) -> _ShardedEllCache:
         if getattr(self, "_ell_cache", None) is None:
             self._ell_cache = _ShardedEllCache(self.view, self.semiring)
-        return self._ell_cache.pack()
+        return self._ell_cache
+
+    def _ell_kernels(self):
+        from repro.kernels.common import default_interpret
+
+        return _ell_kernels(
+            self.mesh, self.semiring, self.view.log.state_len,
+            self.model_axis, default_interpret(),
+        )
 
 
 class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
@@ -762,10 +1024,11 @@ class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
     ``mesh`` defaults to a 1-D host mesh over ``n_shards`` local devices
     (:func:`host_mesh`).  ``method="cqrs"`` evaluates the appended snapshot
     through the SPMD fixpoint kernel; ``method="cqrs_ell"`` runs the Pallas
-    vrelax kernel over a sticky-shape ELL packing of the stacked shard
-    universes (bounds maintenance stays SPMD; the single-snapshot kernel
-    launch is replicated data-parallel — row-split min/max reductions are
-    order-exact, so the floats match the flat path bit-for-bit).
+    vrelax kernel INSIDE ``shard_map`` over per-shard sticky-shape ELL
+    packings (:class:`_ShardedEllCache`) — each device relaxes only its own
+    shard's rows, with the same one-all-gather-per-superstep schedule as
+    the flat kernels; row-split min/max reductions are order-exact, so the
+    floats match the single-host path bit-for-bit.
     """
 
     def __init__(self, stream, query, source: int, *,
@@ -816,25 +1079,25 @@ class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
         if self.method == "cqrs":
             dev, k = bounds._device(), bounds._kernels()
             mask = bounds._stack(self._qrs.snapshot_masks(t))
-            vals, it = k["fixpoint"](
-                bounds.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
-                mask,
+            vals, it = bounds._fixpoint(
+                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False
             )
-            return np.asarray(vals), int(it)
-        # cqrs_ell — Pallas vrelax over the stacked universe, sticky shapes
-        from repro.kernels.vrelax.ops import (
-            build_presence_ell, concurrent_fixpoint_ell,
+            return bounds.to_global(vals), it
+        # cqrs_ell — per-shard Pallas vrelax under shard_map: shard-local
+        # ELL tiles, one all-gather of the per-vertex state per superstep
+        _, dev = self._ell().pack()
+        words = self._ell().presence(self._qrs.snapshot_masks(t))
+        k = self._ell_kernels()
+        vals, it = k["fixpoint"](
+            bounds.val_cap, dev["src"], dev["weight"], words,
+            dev["row2vertex"],
         )
+        bounds.launches += 1
+        return bounds.to_global(vals), int(it)
 
-        sr, v = self.semiring, self.view.log.num_vertices
-        ell = self._ell_pack()
-        mask = self.view.log.stack_masks(self._qrs.snapshot_masks(t))
-        words = mask.astype(np.uint32).reshape(-1, 1)  # S=1: bit 0
-        presence_ell = build_presence_ell(jnp.asarray(words), ell)
-        vals, it = concurrent_fixpoint_ell(
-            bounds.val_cap, ell, presence_ell, sr, v, 1
-        )
-        return np.asarray(vals[0]), int(it)
+    def _set_stats(self, **kw):
+        super()._set_stats(**kw)
+        self.stats["kernel_launches"] = self._bounds.launches
 
 
 class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
@@ -874,7 +1137,7 @@ class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
     # -- sharded substitutions ------------------------------------------------
     def _make_bounds(self):
         return ShardedStreamingBounds(
-            self.view, self.semiring, self.sources, self.mesh,
+            self.view, self.semiring, self._lane_sources(), self.mesh,
             model_axis=self.model_axis,
         )
 
@@ -895,30 +1158,29 @@ class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
         if self.method == "cqrs":
             dev, k = bounds._device(), bounds._kernels()
             mask = bounds._stack(self._qrs.snapshot_masks(t))
-            vals, it = k["fixpoint"](
-                bounds.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
-                mask,
+            vals, it = bounds._fixpoint(
+                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False
             )
-            return np.asarray(vals), int(it)
-        # cqrs_ell: Q folded into the kernel's snapshot axis
-        from repro.kernels.vrelax.ops import (
-            build_presence_ell, concurrent_fixpoint_ell_batch,
-            tile_presence_words,
+            return bounds.to_global(vals), it
+        # cqrs_ell: Q folded into the per-shard kernel's snapshot axis —
+        # still one shard_map launch, one all-gather per superstep
+        _, dev = self._ell().pack()
+        q = int(bounds.val_cap.shape[0])
+        words = self._ell().presence(
+            self._qrs.snapshot_masks(t), num_queries=q
         )
-
-        sr, v = self.semiring, self.view.log.num_vertices
-        ell = self._ell_pack()
-        mask = self.view.log.stack_masks(self._qrs.snapshot_masks(t))
-        q = len(self.sources)
-        words = tile_presence_words(
-            mask.astype(np.uint32).reshape(-1, 1), 1, q
+        k = self._ell_kernels()
+        vals, it, _ = k["fixpoint_q"](
+            bounds.val_cap, dev["src"], dev["weight"], words,
+            dev["row2vertex"],
         )
-        presence_ell = build_presence_ell(jnp.asarray(words), ell)
-        vals, it = concurrent_fixpoint_ell_batch(
-            bounds.val_cap, ell, presence_ell, sr, v, 1, q
-        )
-        return np.asarray(vals[:, 0]), int(it)
+        bounds.launches += 1
+        return bounds.to_global(vals), int(it)
 
     def _eval_lane_snapshot(self, t: int, lane):
         """Scalar shard_map eval of snapshot ``t`` for ONE new lane."""
         return ShardedStreamingQuery._eval_snapshot(self, t, bounds=lane)
+
+    def _set_stats(self, **kw):
+        super()._set_stats(**kw)
+        self.stats["kernel_launches"] = self._bounds.launches

@@ -1,6 +1,13 @@
 from repro.graph.structures import EdgeList, EvolvingGraph, CSR, build_evolving_graph
 from repro.graph.stream import SnapshotLog, WindowView, SlideDiff
-from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView, ShardSlideDiff
+from repro.graph.shardlog import (
+    ShardAssignment,
+    ShardedSnapshotLog,
+    ShardedWindowView,
+    ShardSlideDiff,
+    degree_histogram,
+    make_assignment,
+)
 from repro.graph.generators import (
     generate_rmat,
     generate_evolving_stream,
@@ -17,9 +24,12 @@ __all__ = [
     "SnapshotLog",
     "WindowView",
     "SlideDiff",
+    "ShardAssignment",
     "ShardedSnapshotLog",
     "ShardedWindowView",
     "ShardSlideDiff",
+    "degree_histogram",
+    "make_assignment",
     "generate_rmat",
     "generate_evolving_stream",
     "generate_uniform_weights",

@@ -142,9 +142,16 @@ class StableEllPacker:
         rows = np.maximum(1, (deg + self.slot_width - 1) // self.slot_width)
         return int(np.where(deg == 0, 0, rows).sum())
 
-    def pack(self, src, dst, weight) -> EllPack:
-        """``pack_ell`` at the sticky row capacity, growing it if needed."""
-        need = self._natural_rows(dst)
+    def pack(self, src, dst, weight, *, min_rows: int = 0) -> EllPack:
+        """``pack_ell`` at the sticky row capacity, growing it if needed.
+
+        ``min_rows`` raises the capacity floor for this and all later packs
+        — a group of packers that must agree on shapes (e.g. the per-shard
+        ELL planes stacked under ``shard_map`` in
+        :class:`repro.distributed.stream_shard._ShardedEllCache`) passes the
+        group-wide capacity here so every member packs identical row counts.
+        """
+        need = max(self._natural_rows(dst), int(min_rows))
         if need > self.num_rows:
             # growth: double past the immediate need, then pack exactly once
             floor = max(need, 2 * self.num_rows) if self.num_rows else need

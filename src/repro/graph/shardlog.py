@@ -1,12 +1,15 @@
-"""Dst-range-sharded streaming substrate: per-shard delta logs + window views.
+"""Dst-sharded streaming substrate: per-shard delta logs + window views.
 
 :class:`~repro.graph.stream.SnapshotLog` keeps the whole edge universe on one
-host.  The pod deployment partitions the vertex space by **dst range** —
-shard ``s`` owns vertices ``[s * v_local, (s+1) * v_local)`` and every edge
-*sinking* in that range (the layout
-:func:`repro.distributed.evolve.shard_evolving_arrays` lowers for the static
-batch engine).  This module applies the same partitioning to the streaming
-substrate:
+host.  The pod deployment partitions the vertex space by **destination** —
+a shard owns a set of vertices and every edge *sinking* there.  Which
+vertices a shard owns is decided by a :class:`ShardAssignment`: equal dst
+ranges (the historical
+:func:`repro.distributed.evolve.shard_evolving_arrays` layout), degree-
+histogram-**balanced** range boundaries, or **hash**-of-dst with a
+per-shard local-id map — the latter two evening out the per-shard edge
+mass that naive ranges inherit from the graph's degree skew.  This module
+applies the chosen partitioning to the streaming substrate:
 
 * :class:`ShardedSnapshotLog` — ``n_shards`` independent
   :class:`~repro.graph.stream.SnapshotLog` instances.  ``append_snapshot``
@@ -32,7 +35,7 @@ device-side SPMD engine lives in :mod:`repro.distributed.stream_shard`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Sequence
+from typing import Iterator, Optional, Sequence, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -42,6 +45,177 @@ from repro.graph.structures import EvolvingGraph, PAD_ALIGN, pack_presence
 from repro.utils.padding import pad_to, round_up
 
 _EMPTY = np.empty(0, np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardAssignment:
+    """Vertex → shard assignment with a per-shard local-id map.
+
+    Dst-range sharding inherits the graph's degree skew (a hub-heavy range
+    owns most of the edges, so its shard's capacity, ELL rows, and superstep
+    work dominate every launch).  This abstraction decouples *which shard
+    owns a vertex* from the contiguous-range default so the assignment can be
+    rebalanced:
+
+    * ``range``    — shard ``s`` owns ``[s·v_local, (s+1)·v_local)`` (the
+      historical layout; zero-overhead identity position map).
+    * ``balanced`` — still contiguous ranges, but the boundaries are chosen
+      from a **degree histogram** so per-shard edge mass evens out
+      (:meth:`balanced`).
+    * ``hash``     — vertices hashed to shards (:meth:`hashed`), the
+      skew-oblivious assignment; local ids come from the per-shard map.
+
+    Every shard's local-id space is padded to the uniform width
+    :attr:`v_cap`, so the device-side per-vertex state is the flat
+    **position space** ``(n_shards · v_cap,)`` with vertex ``v`` at
+    ``positions[v] = owner[v] · v_cap + local[v]`` — the ``shard_map``
+    kernels (:mod:`repro.distributed.stream_shard`) run *unchanged* on that
+    space (padding positions hold the semiring identity and own no edges),
+    and for ``range`` mode it degenerates to the identity layout.
+    """
+
+    mode: str
+    n_shards: int
+    num_vertices: int
+    owner: np.ndarray  # (V,) int32 — owning shard per vertex
+    local: np.ndarray  # (V,) int32 — local id within the owner, < v_cap
+    v_cap: int  # uniform per-shard local width (padded)
+    global_ids: np.ndarray  # (n_shards, v_cap) int32 — local → global, -1 pad
+    positions: np.ndarray  # (V,) int64 — owner·v_cap + local
+
+    @property
+    def state_len(self) -> int:
+        """Length of the flat position-space per-vertex state."""
+        return self.n_shards * self.v_cap
+
+    @classmethod
+    def _build(cls, mode: str, num_vertices: int, n_shards: int,
+               owner: np.ndarray, local: np.ndarray, v_cap: int):
+        gid = np.full((n_shards, v_cap), -1, np.int32)
+        gid[owner, local] = np.arange(num_vertices, dtype=np.int32)
+        positions = owner.astype(np.int64) * v_cap + local
+        return cls(mode, int(n_shards), int(num_vertices),
+                   owner.astype(np.int32), local.astype(np.int32),
+                   int(v_cap), gid, positions)
+
+    @classmethod
+    def ranged(cls, num_vertices: int, n_shards: int) -> "ShardAssignment":
+        """Contiguous equal-width dst ranges (the historical layout)."""
+        if num_vertices % n_shards:
+            raise ValueError(
+                f"num_vertices {num_vertices} must be divisible by "
+                f"n_shards {n_shards} for range sharding (use 'balanced' or "
+                f"'hash' otherwise)"
+            )
+        v_local = num_vertices // n_shards
+        ids = np.arange(num_vertices, dtype=np.int64)
+        return cls._build("range", num_vertices, n_shards,
+                          ids // v_local, ids % v_local, v_local)
+
+    @classmethod
+    def balanced(cls, num_vertices: int, n_shards: int,
+                 degree_hist) -> "ShardAssignment":
+        """Contiguous ranges with degree-histogram-driven boundaries.
+
+        Boundary ``s`` is placed where the cumulative in-degree mass crosses
+        ``s/n`` of the total, so each shard owns ≈ the same number of edges
+        (dst-sharding puts an edge on its destination's shard) instead of the
+        same number of vertices.  Each vertex also carries a small uniform
+        mass so zero-degree spans still split instead of piling onto one
+        shard.  Per-shard widths differ; the local-id space is padded to the
+        widest range.
+        """
+        deg = np.asarray(degree_hist, np.float64).ravel()
+        if len(deg) != num_vertices:
+            raise ValueError(
+                f"degree_hist has {len(deg)} entries for {num_vertices} "
+                f"vertices"
+            )
+        mass = deg + max(float(deg.sum()), 1.0) / num_vertices * 1e-3
+        cum = np.cumsum(mass)
+        targets = cum[-1] * np.arange(1, n_shards) / n_shards
+        cuts = np.searchsorted(cum, targets, side="left") + 1
+        bounds = np.concatenate([[0], np.minimum(cuts, num_vertices),
+                                 [num_vertices]]).astype(np.int64)
+        bounds = np.maximum.accumulate(bounds)
+        widths = np.diff(bounds)
+        v_cap = int(widths.max())
+        ids = np.arange(num_vertices, dtype=np.int64)
+        owner = np.repeat(np.arange(n_shards, dtype=np.int64), widths)
+        local = ids - bounds[owner]
+        return cls._build("balanced", num_vertices, n_shards,
+                          owner, local, v_cap)
+
+    @classmethod
+    def hashed(cls, num_vertices: int, n_shards: int, *,
+               seed: int = 0) -> "ShardAssignment":
+        """Hash-of-dst sharding with a per-shard local-id map.
+
+        A splitmix64-style mix of the vertex id picks the owner, so hub
+        vertices spread across shards regardless of id locality; within a
+        shard, local ids follow hash order — a nontrivial position map even
+        at ``n_shards=1``, which is what lets tier-1 exercise the map on a
+        single device.
+        """
+        h = np.arange(num_vertices, dtype=np.uint64)
+        h = (h + np.uint64(seed) + np.uint64(0x9E3779B97F4A7C15))
+        h = (h ^ (h >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        h = (h ^ (h >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        h = h ^ (h >> np.uint64(31))
+        owner = (h % np.uint64(n_shards)).astype(np.int64)
+        order = np.lexsort((np.arange(num_vertices), h, owner))
+        local = np.empty(num_vertices, np.int64)
+        counts = np.bincount(owner, minlength=n_shards)
+        local[order] = (np.arange(num_vertices)
+                        - np.repeat(np.cumsum(counts) - counts, counts))
+        return cls._build("hash", num_vertices, n_shards,
+                          owner, local, int(max(counts.max(), 1)))
+
+
+def make_assignment(
+    assignment: Union[str, ShardAssignment], num_vertices: int,
+    n_shards: int, *, degree_hist=None, seed: int = 0,
+) -> ShardAssignment:
+    """Resolve an assignment spec (mode name or prebuilt) for a log."""
+    if isinstance(assignment, ShardAssignment):
+        if (assignment.num_vertices != num_vertices
+                or assignment.n_shards != n_shards):
+            raise ValueError(
+                f"assignment is for {assignment.num_vertices} vertices / "
+                f"{assignment.n_shards} shards, log has {num_vertices} / "
+                f"{n_shards}"
+            )
+        return assignment
+    if assignment == "range":
+        return ShardAssignment.ranged(num_vertices, n_shards)
+    if assignment == "balanced":
+        if degree_hist is None:
+            raise ValueError(
+                "assignment='balanced' needs a degree_hist (per-vertex "
+                "in-degree histogram; see degree_histogram())"
+            )
+        return ShardAssignment.balanced(num_vertices, n_shards, degree_hist)
+    if assignment == "hash":
+        return ShardAssignment.hashed(num_vertices, n_shards, seed=seed)
+    raise ValueError(
+        f"unknown assignment {assignment!r}; options: range, balanced, hash"
+    )
+
+
+def degree_histogram(base, deltas, num_vertices: int) -> np.ndarray:
+    """Per-vertex in-degree mass of a ``generate_evolving_stream`` stream.
+
+    Counts every *addition*'s destination (base + deltas): the quantity
+    dst-sharding distributes is edge-slot mass, and re-adds keep an edge's
+    universe slot live, so addition counts track per-shard occupancy well.
+    """
+    hist = np.bincount(np.asarray(base[1], np.int64), minlength=num_vertices)
+    for _, add_dst, _, _, _ in deltas:
+        if len(np.asarray(add_dst).ravel()):
+            hist = hist + np.bincount(
+                np.asarray(add_dst, np.int64).ravel(), minlength=num_vertices
+            )
+    return hist
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,20 +280,32 @@ class ShardedSnapshotLog:
     Appends are **atomic across shards**: every shard's sub-delta is
     validated against its tip (:meth:`SnapshotLog.prepare_delta`) before any
     shard commits, so a bad delta leaves no shard half-advanced.
+
+    ``assignment`` picks the vertex → shard map (:class:`ShardAssignment`):
+    ``"range"`` (default, the historical equal-width dst ranges),
+    ``"balanced"`` (degree-histogram-driven range boundaries; pass
+    ``degree_hist``), ``"hash"`` (hash-of-dst with a per-shard local-id
+    map), or a prebuilt :class:`ShardAssignment`.  Every mode preserves the
+    shard-local-by-construction property (a shard owns all edges sinking at
+    its vertices) and therefore the engine's bit-for-bit guarantees — only
+    *which* shard owns a vertex changes.
     """
 
     def __init__(self, num_vertices: int, n_shards: int, *,
-                 capacity: int = STREAM_ALIGN):
+                 capacity: int = STREAM_ALIGN,
+                 assignment: Union[str, ShardAssignment] = "range",
+                 degree_hist=None, seed: int = 0):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
-        if num_vertices % n_shards:
-            raise ValueError(
-                f"num_vertices {num_vertices} must be divisible by "
-                f"n_shards {n_shards}"
-            )
         self.num_vertices = int(num_vertices)
         self.n_shards = int(n_shards)
-        self.v_local = self.num_vertices // self.n_shards
+        self.assignment = make_assignment(
+            assignment, self.num_vertices, self.n_shards,
+            degree_hist=degree_hist, seed=seed,
+        )
+        # uniform per-shard local width; == num_vertices // n_shards for the
+        # historical range mode (several tests/examples rely on that)
+        self.v_local = self.assignment.v_cap
         self.shards = [
             SnapshotLog(num_vertices, capacity=capacity)
             for _ in range(self.n_shards)
@@ -154,9 +340,14 @@ class ShardedSnapshotLog:
         )
 
     # -- append ---------------------------------------------------------------
+    @property
+    def state_len(self) -> int:
+        """Flat position-space state length (``n_shards * v_cap``)."""
+        return self.assignment.state_len
+
     def shard_of(self, dst) -> np.ndarray:
         """Owning shard per destination id."""
-        return np.asarray(dst, np.int64) // self.v_local
+        return self.assignment.owner[np.asarray(dst, np.int64)].astype(np.int64)
 
     def _route(self, src, dst, *payloads):
         """Split ``(src, dst, *payloads)`` into per-shard tuples by dst."""
@@ -170,7 +361,7 @@ class ShardedSnapshotLog:
                 f"dst vertex id outside [0, {self.num_vertices}) "
                 f"at snapshot {self.num_snapshots}"
             )
-        shard = dst // self.v_local
+        shard = self.assignment.owner[dst]
         out = []
         for s in range(self.n_shards):
             sel = shard == s
@@ -218,29 +409,49 @@ class ShardedSnapshotLog:
 
     @classmethod
     def from_stream(cls, base, deltas, num_vertices: int, n_shards: int, *,
-                    capacity: int = STREAM_ALIGN) -> "ShardedSnapshotLog":
-        """Build a sharded log from ``generate_evolving_stream`` output."""
-        log = cls(num_vertices, n_shards, capacity=capacity)
+                    capacity: int = STREAM_ALIGN,
+                    assignment: Union[str, ShardAssignment] = "range",
+                    degree_hist=None, seed: int = 0) -> "ShardedSnapshotLog":
+        """Build a sharded log from ``generate_evolving_stream`` output.
+
+        With ``assignment="balanced"`` and no explicit ``degree_hist``, the
+        histogram is derived from the stream itself
+        (:func:`degree_histogram`) — the construction-time rebalance.
+        """
+        if assignment == "balanced" and degree_hist is None:
+            degree_hist = degree_histogram(base, deltas, num_vertices)
+        log = cls(num_vertices, n_shards, capacity=capacity,
+                  assignment=assignment, degree_hist=degree_hist, seed=seed)
         bs, bd, bw = base
         log.append_snapshot(bs, bd, bw)
         for add_src, add_dst, add_w, del_src, del_dst in deltas:
             log.append_snapshot(add_src, add_dst, add_w, del_src, del_dst)
         return log
 
+    def occupancy_spread(self) -> float:
+        """Max/mean per-shard universe occupancy (1.0 = perfectly even)."""
+        occ = np.asarray([sh.num_edges for sh in self.shards], np.float64)
+        mean = occ.mean()
+        return float(occ.max() / mean) if mean > 0 else 1.0
+
     # -- stacked host arrays (the shard_map feed) -----------------------------
     def stacked_arrays(self) -> dict:
         """Per-shard edge arrays stacked to ``(n_shards * capacity,)`` numpy.
 
-        ``src`` keeps global vertex ids (the gather side spans shards);
-        ``dst_local`` is rebased to ``[0, v_local)`` (the scatter side is
-        shard-local).  ``valid`` marks registered slots.  Re-stacked only
-        when :meth:`state_key` changes.
+        ``src`` keeps global vertex ids (host-side consumers); ``src_pos``
+        maps sources into the flat position space (the gather side of the
+        SPMD kernels spans shards); ``dst_local`` is the assignment's local
+        id in ``[0, v_cap)`` (the scatter side is shard-local).  ``valid``
+        marks registered slots.  Re-stacked only when :meth:`state_key`
+        changes.
         """
         key = (self.state_key(), self.capacity)
         if self._stack_key != key:
             cap = self.capacity
             n = self.n_shards
+            a = self.assignment
             src = np.zeros((n, cap), np.int32)
+            srcp = np.zeros((n, cap), np.int32)
             dstl = np.zeros((n, cap), np.int32)
             wmin = np.zeros((n, cap), np.float32)
             wmax = np.zeros((n, cap), np.float32)
@@ -248,12 +459,14 @@ class ShardedSnapshotLog:
             for s, sh in enumerate(self.shards):
                 k = sh.num_edges
                 src[s, :k] = sh.src[:k]
-                dstl[s, :k] = sh.dst[:k] - s * self.v_local
+                srcp[s, :k] = a.positions[sh.src[:k]]
+                dstl[s, :k] = a.local[sh.dst[:k]]
                 wmin[s, :k] = sh.weight_min[:k]
                 wmax[s, :k] = sh.weight_max[:k]
                 valid[s, :k] = True
             self._stack = {
                 "src": src.reshape(-1),
+                "src_pos": srcp.reshape(-1),
                 "dst_local": dstl.reshape(-1),
                 "weight_min": wmin.reshape(-1),
                 "weight_max": wmax.reshape(-1),

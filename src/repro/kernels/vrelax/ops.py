@@ -21,10 +21,15 @@ from repro.kernels.vrelax.kernel import S_BLOCK, vrelax_partial_pallas
 from repro.utils.padding import round_up
 
 
-def build_presence_ell(presence: jax.Array, ell: EllPack) -> jax.Array:
+def build_presence_ell(
+    presence: jax.Array, ell: EllPack, *, as_numpy: bool = False
+):
     """Scatter per-edge presence words ``(E, W)`` into ELL slots ``(R, D, W)``.
 
     Empty slots (edge_id == -1) get all-zero words → masked in-kernel.
+    ``as_numpy`` skips the device upload — callers assembling several packs'
+    word planes into one array (the per-shard SPMD ELL path stacks
+    ``n_shards`` of them) concatenate host-side and upload once.
     """
     eid = np.asarray(ell.edge_id)
     pres = np.asarray(presence)
@@ -32,7 +37,7 @@ def build_presence_ell(presence: jax.Array, ell: EllPack) -> jax.Array:
     out = np.zeros((eid.shape[0], eid.shape[1], w), np.uint32)
     valid = eid >= 0
     out[valid] = pres[eid[valid]]
-    return jnp.asarray(out)
+    return out if as_numpy else jnp.asarray(out)
 
 
 def tile_presence_words(

@@ -40,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 StreamCacheInfo = namedtuple(
-    "StreamCacheInfo", ["hits", "misses", "evictions", "currsize", "maxsize"]
+    "StreamCacheInfo",
+    ["hits", "misses", "evictions", "currsize", "maxsize", "lane_supersteps"],
 )
 
 
@@ -329,13 +330,30 @@ class QueryBatcher:
                 if view is None or e.sq.view is view]
 
     def cache_info(self) -> StreamCacheInfo:
-        """LRU/TTL/divergence statistics for the warm streaming-query cache."""
+        """LRU/TTL/divergence statistics for the warm streaming-query cache.
+
+        ``lane_supersteps`` maps ``(query, source)`` to accumulated per-lane
+        maintenance supersteps (each lane's own freeze steps, not the
+        lockstep max) — a watcher whose count runs far ahead of its group is
+        flagging pathological churn around its source and is a candidate
+        for eviction or a dedicated batch.  The same ``(query, source)``
+        watched on several views (or under both engine methods) collapses
+        to ONE entry carrying the max over its groups — the hottest
+        instance; per-group introspection goes through the watcher handle's
+        ``batch.lane_supersteps``.
+        """
+        lanes: dict = {}
+        for batch in self._batches.values():
+            for s, steps in batch.lane_supersteps.items():
+                key = (batch.semiring.name, s)
+                lanes[key] = max(lanes.get(key, 0), steps)
         return StreamCacheInfo(
             hits=self._stream_hits,
             misses=self._stream_misses,
             evictions=self._stream_evictions,
             currsize=len(self._streams),
             maxsize=self.stream_capacity,
+            lane_supersteps=lanes,
         )
 
     def _is_divergent(self, sq) -> bool:

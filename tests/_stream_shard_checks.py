@@ -7,8 +7,12 @@ Prints CHECK_OK on success (asserts otherwise).
 Covers the PR acceptance criteria: bit-for-bit equivalence of the sharded
 streaming advance to the single-host ``StreamingQuery`` across semirings and
 window slides, shard-capacity growth under a live query, shard-locality of
-appends/trims, SPMD window serving through ``QueryBatcher``, and the
-one-collective-per-superstep invariant checked against the lowered HLO.
+appends/trims, SPMD window serving through ``QueryBatcher``, the per-shard
+SPMD ELL path (``ell``: Pallas vrelax inside shard_map, scalar + Q-folded),
+skew-aware shard assignments (``rebalance``: balanced/hash bit-for-bit plus
+the ≤2x occupancy-spread bound), and the one-collective-per-superstep
+invariant checked against the lowered HLO (``collectives``, including the
+ELL kernels).
 """
 from __future__ import annotations
 
@@ -312,7 +316,8 @@ def check_collectives():
 
     # The Q-batched serving kernels must keep the SAME schedule: the (Q, V)
     # state is split on the vertex axis, so each superstep still carries
-    # exactly one all-gather (one op, Q rows tall) + the convergence psum.
+    # exactly one all-gather (one op, Q rows tall) + the convergence psum
+    # (now a (Q,) vector carrying per-lane freeze accounting — still ONE op).
     from repro.distributed.stream_shard import _kernels_q
 
     q = 8
@@ -330,6 +335,119 @@ def check_collectives():
     c = ops(kq["parents"], vals_q, src, dstl, w, active, sources_q)
     assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
     assert c.get("all-gather", 0) <= 3, c
+
+    # The per-shard ELL kernels (Pallas vrelax inside shard_map) must lower
+    # to the SAME schedule as the flat fixpoint: one all-gather of the
+    # per-vertex state + one convergence all-reduce per superstep, no other
+    # collective — the packed slot planes never cross shards.
+    from repro.distributed.stream_shard import _ell_kernels
+
+    ke = _ell_kernels(mesh, SEMIRINGS["sssp"], V, "model", True)
+    r_rows, d_slots = 8, 128
+    n_rows = N_SHARDS * r_rows
+    esrc = jnp.zeros((n_rows, d_slots), jnp.int32)
+    ew = jnp.zeros((n_rows, d_slots), jnp.float32)
+    ewords = jnp.zeros((n_rows, d_slots, 1), jnp.uint32)
+    erow2v = jnp.zeros(n_rows, jnp.int32)
+    c = ops(ke["fixpoint"], vals, esrc, ew, ewords, erow2v)
+    assert c.get("all-gather", 0) == 1, c
+    assert c.get("all-reduce", 0) == 1, c
+    assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
+    c = ops(ke["fixpoint_q"], vals_q, esrc, ew, ewords, erow2v)
+    assert c.get("all-gather", 0) == 1, c
+    assert c.get("all-reduce", 0) == 1, c
+    assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
+    print("CHECK_OK")
+
+
+def check_ell():
+    """Per-shard SPMD ELL (Pallas vrelax under shard_map) on 8 shards:
+    scalar and Q-batched cqrs_ell advances bit-for-bit equal to the
+    single-host engine, with sticky stacked ELL shapes across slides."""
+    from repro.core.api import StreamingQuery, StreamingQueryBatch
+    from repro.graph.shardlog import ShardedWindowView
+    from repro.graph.stream import WindowView
+
+    base, deltas = _stream(seed=7)
+    log, slog, pending = _paired_logs(base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs_ell")
+    ssq = StreamingQuery(sview, "sssp", 0, method="cqrs_ell")
+    np.testing.assert_array_equal(sq.results, ssq.results)
+    shapes = []
+    for k, d in enumerate(pending):
+        np.testing.assert_array_equal(
+            sq.advance(d), ssq.advance(d),
+            err_msg=f"sharded ELL != single-host at slide {k}",
+        )
+        _, dev = ssq._ell_cache.pack()
+        shapes.append(tuple(dev["src"].shape))
+    assert len(set(shapes)) == 1, f"stacked ELL shapes churned: {shapes}"
+    # Q-batched: Q folded into the per-shard kernel's snapshot axis
+    log, slog, pending = _paired_logs(base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sources = [0, 5, 7, 11]
+    sqb = StreamingQueryBatch(sview, "sswp", sources, method="cqrs_ell")
+    seqs = [StreamingQuery(view, "sswp", s, method="cqrs_ell")
+            for s in sources]
+    for i, s in enumerate(seqs):
+        np.testing.assert_array_equal(sqb.results[i], s.results)
+    for d in pending[:3]:
+        log.append_snapshot(*d)
+        got = sqb.advance(d)
+        for i, s in enumerate(seqs):
+            np.testing.assert_array_equal(got[i], s.advance())
+    print("CHECK_OK")
+
+
+def check_rebalance():
+    """Skew-aware shard assignments on 8 shards: balanced-range and
+    hash-of-dst sharded advances are bit-for-bit equal to the single-host
+    engine for both engines, and the balanced assignment actually evens
+    out per-shard occupancy on the skewed RMAT stream."""
+    from repro.core.api import StreamingQuery
+    from repro.graph.shardlog import (
+        ShardedSnapshotLog, ShardedWindowView, degree_histogram,
+    )
+    from repro.graph.stream import SnapshotLog, WindowView
+
+    base, deltas = _stream(seed=8)
+    hist = degree_histogram(base, deltas, V)
+    spreads = {}
+    for mode in ("range", "balanced", "hash"):
+        slog = ShardedSnapshotLog.from_stream(
+            base, deltas, V, N_SHARDS, capacity=64,
+            assignment=mode, degree_hist=hist,
+        )
+        spreads[mode] = slog.occupancy_spread()
+    assert spreads["balanced"] < spreads["range"], spreads
+    assert spreads["balanced"] <= 2.0, spreads
+
+    for mode in ("balanced", "hash"):
+        for query, source, method in (
+            ("sssp", 0, "cqrs"), ("sswp", 5, "cqrs_ell"),
+            ("bfs", 7, "cqrs"),
+        ):
+            log = SnapshotLog(V, capacity=512)
+            slog = ShardedSnapshotLog(V, N_SHARDS, capacity=64,
+                                      assignment=mode, degree_hist=hist)
+            log.append_snapshot(*base)
+            slog.append_snapshot(*base)
+            for d in deltas[: WINDOW - 1]:
+                log.append_snapshot(*d)
+                slog.append_snapshot(*d)
+            view = WindowView(log, size=WINDOW)
+            sview = ShardedWindowView(slog, size=WINDOW)
+            sq = StreamingQuery(view, query, source, method=method)
+            ssq = StreamingQuery(sview, query, source, method=method)
+            np.testing.assert_array_equal(sq.results, ssq.results)
+            for k, d in enumerate(deltas[WINDOW - 1: WINDOW + 2]):
+                np.testing.assert_array_equal(
+                    sq.advance(d), ssq.advance(d),
+                    err_msg=f"{mode}/{query}/{method} slide {k}",
+                )
     print("CHECK_OK")
 
 

@@ -85,3 +85,13 @@ def test_architecture_covers_batched_streaming_serving():
                 "StableEllPacker", "add_source", "remove_source",
                 "advance_window", "tile_presence_words"):
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
+def test_architecture_covers_spmd_ell_and_rebalancing():
+    """The SPMD ELL / shard-rebalancing section and entry points are mapped."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## SPMD ELL & shard rebalancing" in text
+    for sym in ("ShardAssignment", "degree_histogram", "_ell_kernels",
+                "_ShardedEllCache", "lane_supersteps", "set_lane",
+                "drop_lane_padded", "occupancy"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"

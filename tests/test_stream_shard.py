@@ -30,6 +30,7 @@ from repro.graph.generators import (
 )
 from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
 from repro.graph.stream import SnapshotLog, WindowView
+from _prop import given, settings, st
 
 V = 48
 WINDOW = 3
@@ -182,6 +183,114 @@ def test_one_shard_spmd_query_in_process():
         np.testing.assert_array_equal(sq.advance(d), ssq.advance(d))
     assert ssq.stats["method"] == "stream[cqrs]"
     assert ssq.stats["qrs_edges"] == sq.stats["qrs_edges"]
+    assert ssq.stats["kernel_launches"] > 0
+
+
+def test_one_shard_spmd_ell_query_in_process():
+    """n_shards=1 cqrs_ell runs the per-shard Pallas path (vrelax inside
+    shard_map over the shard's own ELL tiles) on the lone CPU device —
+    tier-1 covers the SPMD ELL kernel without a forced host mesh."""
+    log, slog, pending = paired_logs(seed=7, n_shards=1)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs_ell")
+    ssq = StreamingQuery(sview, "sssp", 0, method="cqrs_ell")
+    np.testing.assert_array_equal(sq.results, ssq.results)
+    shapes = []
+    for d in pending:
+        np.testing.assert_array_equal(sq.advance(d), ssq.advance(d))
+        _, dev = ssq._ell_cache.pack()
+        shapes.append(tuple(dev["src"].shape))
+    # sticky per-shard row capacity: the stacked planes (and therefore the
+    # compiled shard_map kernel) keep one shape across steady-state slides
+    assert len(set(shapes)) == 1, shapes
+
+
+# ----------------------------------------------------- skew-aware assignments
+def test_balanced_assignment_evens_out_rmat_skew():
+    """Degree-histogram range rebalance: the same RMAT stream that skews
+    naive dst ranges ~N× lands within 2× max/mean under 'balanced'."""
+    from repro.graph.shardlog import degree_histogram
+
+    base, deltas = make_stream(seed=0)
+    hist = degree_histogram(base, deltas, V)
+    naive = ShardedSnapshotLog.from_stream(base, deltas, V, 4, capacity=64)
+    bal = ShardedSnapshotLog.from_stream(
+        base, deltas, V, 4, capacity=64, assignment="balanced",
+        degree_hist=hist,
+    )
+    assert bal.num_edges == naive.num_edges
+    assert bal.occupancy_spread() < naive.occupancy_spread()
+    assert bal.occupancy_spread() <= 2.0, bal.occupancy_spread()
+
+
+@pytest.mark.parametrize("mode", ["balanced", "hash"])
+def test_assignment_modes_materialize_like_single_host(mode):
+    """Rebalanced routing preserves the window: a 4-shard balanced/hash log
+    materializes the same canonical graph (and query results) as the
+    single-host log on every slide."""
+    from repro.graph.shardlog import degree_histogram
+
+    base, deltas = make_stream(seed=2)
+    hist = degree_histogram(base, deltas, V)
+    log = SnapshotLog(V, capacity=512)
+    slog = ShardedSnapshotLog(V, 4, capacity=64, assignment=mode,
+                              degree_hist=hist)
+    log.append_snapshot(*base)
+    slog.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    for d in deltas[WINDOW - 1:]:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+        view.slide()
+        sview.slide()
+        ref = EvolvingQuery(view.materialize(), "sssp", 0).evaluate("cqrs")
+        got = EvolvingQuery(sview.materialize(), "sssp", 0).evaluate("cqrs")
+        np.testing.assert_array_equal(got, ref)
+    # every edge landed on the shard its assignment names
+    owner = slog.assignment.owner
+    for s, sh in enumerate(slog.shards):
+        n = sh.num_edges
+        assert n == 0 or (owner[sh.dst[:n]] == s).all()
+
+
+@settings(max_examples=6)
+@given(
+    seed=st.integers(0, 10_000),
+    query=st.sampled_from(["sssp", "sswp", "bfs"]),
+    method=st.sampled_from(["cqrs", "cqrs_ell"]),
+    mode=st.sampled_from(["hash", "balanced"]),
+)
+def test_assignment_property_bit_for_bit(seed, query, method, mode):
+    """Seed-swept: rebalanced-range and hash-of-dst sharded streams match
+    the single-host StreamingQuery bit-for-bit across semirings × engines.
+    n_shards=1 runs real shard_map on the lone device; the hash mode's
+    local-id map is a nontrivial vertex permutation even there, so the
+    position-space machinery is exercised in-process (the 8-shard variant
+    lives in _stream_shard_checks.py::check_rebalance)."""
+    from repro.graph.shardlog import degree_histogram
+
+    base, deltas = make_stream(seed=seed)
+    hist = degree_histogram(base, deltas, V)
+    log = SnapshotLog(V, capacity=512)
+    slog = ShardedSnapshotLog(V, 1, capacity=64, assignment=mode,
+                              degree_hist=hist, seed=seed)
+    log.append_snapshot(*base)
+    slog.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    sq = StreamingQuery(view, query, 0, method=method)
+    ssq = StreamingQuery(sview, query, 0, method=method)
+    np.testing.assert_array_equal(sq.results, ssq.results)
+    for d in deltas[WINDOW - 1: WINDOW + 1]:
+        np.testing.assert_array_equal(sq.advance(d), ssq.advance(d))
 
 
 def test_ell_batcher_serves_sharded_view():
@@ -237,7 +346,7 @@ def _run(check: str):
 @pytest.mark.parametrize(
     "check",
     ["equivalence", "growth", "serving", "shard_local", "qbatch",
-     "collectives"],
+     "collectives", "ell", "rebalance"],
 )
 def test_stream_shard_mesh(check):
     _run(check)

@@ -137,13 +137,22 @@ def test_sharded_batch_equals_loop_one_shard(method):
     seqs = [StreamingQuery(view, "sssp", s) for s in SOURCES]
     for i, sq in enumerate(seqs):
         np.testing.assert_array_equal(sqb.results[i], sq.results)
+    host = StreamingQueryBatch(
+        WindowView(log, size=WINDOW), "sssp", SOURCES, method=method
+    )
+    host.results
     for k, d in enumerate(deltas[WINDOW - 1:]):
         log.append_snapshot(*d)
         got = sqb.advance(d)
+        host.advance()
         for i, sq in enumerate(seqs):
             np.testing.assert_array_equal(
                 got[i], sq.advance(), err_msg=f"{method} slide {k} lane {i}"
             )
+    # per-lane freeze-step ledgers are comparable ACROSS deployments: the
+    # sharded joint loop's accounting is defined exactly like the vmapped
+    # single-host one (last change step + the confirming pass)
+    assert sqb.lane_supersteps == host.lane_supersteps
 
 
 # --------------------------------------------- window-local extrema narrowing
@@ -368,6 +377,117 @@ def test_last_lane_eviction_drops_group():
     assert len(qb.watching(view)) == 1
     assert len(qb._batches) == 1  # only the bfs group remains
     assert next(iter(qb._batches.values())).semiring.name == "bfs"
+
+
+# ---------------------------------------------- Q-class compile amortization
+def test_q_class_padding_stops_recompiles_under_churn():
+    """Membership churn inside a lane-capacity class must not recompile:
+    the (Q, V) launch shapes are padded to the sticky power-of-two class
+    (dead lanes duplicate lane 0), so watch/evict traffic re-uses the same
+    compiled maintenance kernels — pinned by the jit cache-miss counters."""
+    from repro.core.concurrent import concurrent_fixpoint_batch
+    from repro.core.engine import compute_fixpoint, incremental_fixpoint
+
+    log, pending = make_log(seed=13)
+    view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, "sssp", [0, 7, 13])
+    assert sqb.lane_capacity == 4  # 3 real lanes padded to the class of 4
+    sqb.results
+    sqb.advance(pending[0])
+    sqb.add_source(21)  # fills the dead lane (first scalar prime compiles)
+    sqb.advance(pending[1])
+    assert sqb.lane_capacity == 4
+    counters = [
+        fn for fn in (compute_fixpoint, incremental_fixpoint,
+                      concurrent_fixpoint_batch)
+        if hasattr(fn, "_cache_size")
+    ]
+    before = [fn._cache_size() for fn in counters]
+    sqb.remove_source(7)   # padded drop: shapes frozen
+    sqb.add_source(33)     # re-fills the freed lane: shapes frozen
+    sqb.advance(pending[2])
+    # read the counters BEFORE the reference evaluations below, which
+    # compile their own (materialized-graph) shapes
+    after = [fn._cache_size() for fn in counters]
+    assert sqb.lane_capacity == 4
+    assert sqb.sources == [0, 13, 21, 33]
+    for s in sqb.sources:
+        np.testing.assert_array_equal(
+            sqb.result_for(s), fresh_eval(view, "sssp", s)
+        )
+    assert after == before, (
+        f"maintenance kernels recompiled under same-class churn: "
+        f"{[(fn.__name__ if hasattr(fn, '__name__') else fn, a - b) for fn, a, b in zip(counters, after, before)]}"
+    )
+
+
+def test_remove_first_lane_stops_influencing_keep_rule():
+    """Regression: dropping lane 0 must re-duplicate a SURVIVING lane into
+    the padding slots — if the removed lane's state lingered there, its UVV
+    mask would keep loosening the shared QRS keep rule (folded over every
+    padded lane) and the batch would keep solving an evicted query."""
+    log, pending = make_log(seed=17)
+    view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, "sssp", [0, 7, 13])  # cap 4, 1 dead lane
+    sqb.results
+    sqb.remove_source(0)  # drop lane 0 — padding must re-seat onto lane 7
+    assert sqb.sources == [7, 13]
+    lane_srcs = sqb._lane_sources()
+    assert set(lane_srcs) == {7, 13}, lane_srcs  # no trace of source 0
+    assert all(int(s) in (7, 13) for s in sqb._bounds.sources)
+    # keep rule now folds survivors only: identical to a fresh 2-lane batch
+    fresh = StreamingQueryBatch(WindowView(log, size=WINDOW), "sssp", [7, 13])
+    fresh.results
+    assert sqb._qrs.num_edges == fresh._qrs.num_edges
+    got = sqb.advance(pending[0])
+    for i, s in enumerate(sqb.sources):
+        np.testing.assert_array_equal(got[i], fresh_eval(view, "sssp", s))
+
+
+def test_q_class_is_sticky_across_growth():
+    log, pending = make_log(seed=15)
+    view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, "sssp", [0])
+    assert sqb.lane_capacity == 1
+    sqb.results
+    sqb.add_source(7)   # 1 → 2 (class crossing)
+    sqb.add_source(13)  # 2 → 4
+    assert sqb.lane_capacity == 4
+    sqb.remove_source(7)
+    sqb.remove_source(13)
+    assert sqb.lane_capacity == 4  # sticky: never shrinks
+    got = sqb.advance(pending[0])
+    assert got.shape[0] == 1
+    np.testing.assert_array_equal(got[0], fresh_eval(view, "sssp", 0))
+
+
+# ---------------------------------------------- per-lane convergence accounts
+def test_per_lane_convergence_accounting():
+    """Batched maintenance reports each lane's own freeze step, not just the
+    lockstep max — and the counts surface through QueryBatcher.cache_info()
+    so serving can spot pathological watchers."""
+    log, pending = make_log(seed=14)
+    view = WindowView(log, size=WINDOW)
+    sqb = StreamingQueryBatch(view, "sssp", SOURCES)
+    sqb.results
+    ls = sqb.lane_supersteps
+    assert set(ls) == set(SOURCES)
+    assert all(v > 0 for v in ls.values())  # every lane ran a cold solve
+    # dead padding lanes are excluded from the report
+    assert len(ls) == len(SOURCES) < sqb.lane_capacity + 1
+    sqb.advance(pending[0])
+    ls2 = sqb.lane_supersteps
+    assert all(ls2[s] >= ls[s] for s in SOURCES)  # monotone accumulation
+    # the aggregate stat stays the lockstep count ≥ any single lane's share
+    assert sqb.stats["lane_capacity"] == sqb.lane_capacity
+
+    qb = QueryBatcher()
+    for s in SOURCES:
+        qb.watch(view, "sssp", s)
+    qb.advance_window(view, pending[1])
+    info = qb.cache_info()
+    assert set(info.lane_supersteps) == {("sssp", s) for s in SOURCES}
+    assert all(v > 0 for v in info.lane_supersteps.values())
 
 
 # ------------------------------------------------------------- batch plumbing
