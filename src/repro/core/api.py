@@ -288,6 +288,12 @@ class StreamingQuery:
         self._rows: list[np.ndarray] = []
         self._diff_pos = 0
         self._slides = 0
+        self._presence: dict = {}  # num_queries → EllPresenceCache
+        # pipelined serving (QueryBatcher) defers the device→host fetch of
+        # eval results: advance_nowait() leaves rows as device arrays so the
+        # caller's host thread can route/pack the next slide while devices
+        # run this one; results/`_materialize_rows` is the sync point
+        self._defer_fetch = False
 
     # -- staged accessors -----------------------------------------------------
     @property
@@ -305,7 +311,15 @@ class StreamingQuery:
     def results(self) -> np.ndarray:
         """``(S, V)`` values for the current window."""
         self._ensure_primed()
+        self._materialize_rows()
         return np.stack(self._rows)
+
+    def _materialize_rows(self) -> None:
+        """Fetch any deferred device rows to host (pipelined sync point)."""
+        self._rows = [
+            r if isinstance(r, np.ndarray) else np.asarray(r)
+            for r in self._rows
+        ]
 
     @property
     def diff_pos(self) -> int:
@@ -326,11 +340,23 @@ class StreamingQuery:
         With ``delta=None`` the query just catches up on slides already
         applied to a shared view/log.  Idempotent when there is nothing new.
         """
+        self.advance_nowait(delta)
+        return self.results
+
+    def advance_nowait(self, delta=None) -> None:
+        """:meth:`advance` without materializing results.
+
+        The pipelined serving path (``QueryBatcher`` with ``pipelined=True``)
+        calls this so the eval launches are dispatched but — with
+        ``_defer_fetch`` set — not fetched; the device→host sync happens when
+        a consumer reads :attr:`results`.  Identical state transitions to
+        :meth:`advance` (which is exactly this plus a results fetch).
+        """
         if delta is not None:
             self.view.log.append_snapshot(*delta)
         if self._bounds is None:
             self._ensure_primed()
-            return self.results
+            return
         t0 = time.perf_counter()
         view = self.view
         view.slide_to_tip()
@@ -341,7 +367,7 @@ class StreamingQuery:
             # incremental state can't catch up, rebuild from the window
             self._bounds = None
             self._ensure_primed()
-            return self.results
+            return
         if len(pending) > 1 and any(d.weights_changed() for d in pending):
             # the view's window extrema already reflect the whole queue, so
             # an intermediate slide cannot be folded in with the weights it
@@ -349,7 +375,7 @@ class StreamingQuery:
             # movement mid-queue is rare; rebuild from the final window.
             self._bounds = None
             self._ensure_primed()
-            return self.results
+            return
         steps = 0
         patch_stats: dict = {}
         weights_dirty = False
@@ -397,7 +423,6 @@ class StreamingQuery:
             seconds=time.perf_counter() - t0, supersteps=steps,
             advanced=len(pending), **patch_stats,
         )
-        return self.results
 
     def _make_bounds(self):
         """Streaming bounds maintainer (overridden by the sharded subclass)."""
@@ -446,22 +471,38 @@ class StreamingQuery:
                 sorted_edges=False,
             )
         else:  # cqrs_ell — Pallas vrelax kernel over row-split ELL
-            from repro.kernels.vrelax.ops import (
-                build_presence_ell,
-                concurrent_fixpoint_ell,
-            )
+            from repro.kernels.vrelax.ops import concurrent_fixpoint_ell
 
             # full slot capacity at sticky row count: shapes — and therefore
             # the jitted kernel path — are stable across slides; invalid
             # slots carry all-zero presence words and mask out in-kernel
             ell = self._qrs.ell_pack()
-            words = mask.astype(np.uint32).reshape(-1, 1)  # S=1: bit 0
-            presence_ell = build_presence_ell(jnp.asarray(words), ell)
+            presence_ell = self._presence_plane(ell, mask)
             vals, it = concurrent_fixpoint_ell(
                 bounds.val_cap, ell, presence_ell, sr, v, 1
             )
             vals = vals[0]
+        if self._defer_fetch:
+            return vals, it
         return np.asarray(vals), int(it)
+
+    def _presence_plane(self, ell, mask, num_queries=None):
+        """Incrementally-maintained presence word plane for ``mask``.
+
+        One :class:`~repro.kernels.vrelax.ops.EllPresenceCache` per Q-fold
+        width; the pack epoch keys invalidation — a QRS re-pack moves slots,
+        so the plane is rebuilt whenever :meth:`PatchableQRS.ell_pack`
+        re-packed (see the freed-slot invariant there).
+        """
+        from repro.kernels.vrelax.ops import EllPresenceCache
+
+        cache = self._presence.get(num_queries)
+        if cache is None:
+            cache = self._presence[num_queries] = EllPresenceCache()
+        return cache.update(
+            self._qrs.ell_epoch, mask, np.asarray(ell.edge_id),
+            num_queries=num_queries,
+        )
 
     def _set_stats(self, **kw):
         self.stats = {
@@ -611,22 +652,17 @@ class StreamingQueryBatch(StreamingQuery):
             )
             vals = vals[:, 0]
         else:  # cqrs_ell: Q folded into the kernel's snapshot axis
-            from repro.kernels.vrelax.ops import (
-                build_presence_ell,
-                concurrent_fixpoint_ell_batch,
-                tile_presence_words,
-            )
+            from repro.kernels.vrelax.ops import concurrent_fixpoint_ell_batch
 
             ell = self._qrs.ell_pack()
             q = self._q_cap  # padded lane count (sticky compile class)
-            words = tile_presence_words(
-                mask.astype(np.uint32).reshape(-1, 1), 1, q
-            )
-            presence_ell = build_presence_ell(jnp.asarray(words), ell)
+            presence_ell = self._presence_plane(ell, mask, num_queries=q)
             vals, it = concurrent_fixpoint_ell_batch(
                 self._bounds.val_cap, ell, presence_ell, sr, v, 1, q
             )
             vals = vals[:, 0]
+        if self._defer_fetch:
+            return vals, it
         return np.asarray(vals), int(it)
 
     # -- results --------------------------------------------------------------
@@ -634,6 +670,7 @@ class StreamingQueryBatch(StreamingQuery):
     def results(self) -> np.ndarray:
         """``(Q, S, V)`` values for the current window (dead lanes sliced)."""
         self._ensure_primed()
+        self._materialize_rows()
         return np.stack(self._rows, axis=1)[: len(self.sources)]
 
     def result_for(self, source: int) -> np.ndarray:
@@ -714,6 +751,7 @@ class StreamingQueryBatch(StreamingQuery):
         from repro.core.bounds import _drop_lane_order
 
         order = _drop_lane_order(i, q, self._q_cap)
+        self._materialize_rows()
         self._rows = [row[order] for row in self._rows]
 
     def _eval_lane_snapshot(self, t: int, lane) -> tuple[np.ndarray, int]:

@@ -15,6 +15,7 @@ small static-shape arrays — the compile-once / run-many fast path.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,10 @@ from repro.core.semiring import Semiring
 from repro.graph.structures import EvolvingGraph, PAD_ALIGN
 from repro.utils.padding import pad_to, pad_to_multiple, round_up
 from repro.utils.pytree import register_static_dataclass
+
+# process-wide ELL pack identities: every re-pack gets a fresh epoch so
+# slot-position caches (presence planes) can never alias across packs
+_ELL_EPOCH = itertools.count(1)
 
 
 @register_static_dataclass(meta_fields=("num_vertices", "num_snapshots", "stats"))
@@ -306,6 +311,7 @@ class PatchableQRS:
         self._ell_packer = StableEllPacker(log.num_vertices)
         self._ell = None
         self._ell_version = -1
+        self._ell_epoch = 0  # globally-unique pack identity (0 = no pack yet)
 
     # -- introspection --------------------------------------------------------
     @property
@@ -488,7 +494,22 @@ class PatchableQRS:
         if self._ell is None or self._ell_version != self._version:
             self._ell = self._ell_packer.pack(self.src, self.dst, self.weight)
             self._ell_version = self._version
+            self._ell_epoch = next(_ELL_EPOCH)
         return self._ell
+
+    @property
+    def ell_epoch(self) -> int:
+        """Globally-unique id of the current :meth:`ell_pack` layout.
+
+        Consumers keying cached slot-position state (e.g. the incremental
+        presence plane,
+        :class:`~repro.kernels.vrelax.ops.EllPresenceCache`) compare this to
+        detect re-packs: any slot patch re-packs the ELL, which can move
+        every slot's (row, col) position, so derived planes must be rebuilt
+        — the presence-plane face of the freed-slot invariant documented in
+        :meth:`_patch_slots`.
+        """
+        return self._ell_epoch
 
     def snapshot_mask(self, t: int) -> np.ndarray:
         """``(capacity,) bool``: resident edges present in log snapshot ``t``."""

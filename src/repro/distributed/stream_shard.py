@@ -611,6 +611,17 @@ class ShardedStreamingBounds:
         """Gather position-space per-vertex state back to global ids."""
         return np.asarray(vals)[..., self.assign.positions]
 
+    def to_global_lazy(self, vals) -> jax.Array:
+        """:meth:`to_global` as a device-side gather — no host fetch.
+
+        The pipelined serving path keeps eval results on device until a
+        consumer reads them; the position→global permutation runs as a tiny
+        jnp gather so dispatch stays asynchronous.
+        """
+        if getattr(self, "_pos_dev", None) is None:
+            self._pos_dev = jnp.asarray(self.assign.positions)
+        return vals[..., self._pos_dev]
+
     # -- device-side stacked arrays -------------------------------------------
     def _kernels(self):
         if self.batched:
@@ -621,13 +632,15 @@ class ShardedStreamingBounds:
         return _kernels(self.mesh, self.sr, self.view.log.state_len,
                         self.view.log.capacity, self.model_axis)
 
-    def _fixpoint(self, k, values, dev, w, active, tally: bool = True):
+    def _fixpoint(self, k, values, dev, w, active, tally: bool = True,
+                  fetch: bool = True):
         """One fixpoint launch → ``(vals, steps)``.
 
         ``tally`` folds the batched kernel's per-lane freeze steps into
         :attr:`lane_supersteps` (maintenance passes only — snapshot
         evaluations pass ``tally=False`` so the per-lane ledger means the
-        same thing as the single-host vmapped one).
+        same thing as the single-host vmapped one).  ``fetch=False`` leaves
+        the step count on device (pipelined eval: no host sync).
         """
         self.launches += 1
         if self.batched:
@@ -640,7 +653,7 @@ class ShardedStreamingBounds:
             vals, it = k["fixpoint"](
                 values, dev["src"], dev["dst_local"], w, active
             )
-        return vals, int(it)
+        return vals, int(it) if fetch else it
 
     def _device(self) -> dict:
         """Stacked edge arrays + safe weights, re-uploaded only when stale.
@@ -918,7 +931,18 @@ class _ShardedEllCache:
     ``(n_shards · R, D)`` planes split cleanly under ``shard_map`` and the
     kernel compiles once per capacity class.  Re-packed only when
     ``(state_key, weight_epoch)`` moves.
+
+    Presence words live in a persistent device-resident plane
+    (:class:`~repro.kernels.vrelax.ops.EllPresenceCache`): each
+    :meth:`presence` call scatters only the slots whose ``keep ∧ present``
+    mask flipped since the previous call — O(touched) per slide instead of
+    the O(capacity) rebuild + re-upload — and the plane is invalidated
+    whenever :meth:`pack` re-packs (the slot→row positions moved).  Setting
+    the class attribute ``incremental = False`` restores the legacy
+    rebuild-every-slide path (the latency bench's synchronous baseline).
     """
+
+    incremental = True  # False: legacy O(cap) presence rebuild per call
 
     def __init__(self, view: ShardedWindowView, sr: Semiring):
         from repro.graph.ell import StableEllPacker
@@ -933,6 +957,8 @@ class _ShardedEllCache:
         self._packs: Optional[list] = None  # host EllPacks (edge_id scatter)
         self._dev: dict = {}
         self._key = None
+        self._eid_flat: Optional[np.ndarray] = None  # stacked global edge ids
+        self._presence: dict = {}  # num_queries → EllPresenceCache
 
     def pack(self):
         """→ ``(per-shard host EllPacks, stacked device planes)``."""
@@ -966,6 +992,13 @@ class _ShardedEllCache:
                 "weight": jnp.concatenate([p.weight for p in packs]),
                 "row2vertex": jnp.concatenate([p.row2vertex for p in packs]),
             }
+            # slot ids offset into the flat (n_shards · cap) mask space, so
+            # one stacked inverse map serves the incremental presence plane
+            eids = []
+            for s, p in enumerate(packs):
+                e = np.asarray(p.edge_id, np.int64)
+                eids.append(np.where(e >= 0, e + s * cap, -1))
+            self._eid_flat = np.concatenate(eids, axis=0)
             self._key = key
         return self._packs, self._dev
 
@@ -974,22 +1007,31 @@ class _ShardedEllCache:
 
         With ``num_queries`` the words are pre-tiled for the Q-folded kernel
         snapshot axis (bit ``q`` set for lane ``q`` wherever bit 0 was).
+        Incremental: only slots whose mask bit flipped since the previous
+        call are scattered into the persistent device plane (see the class
+        docstring for the invalidation rule).
         """
-        from repro.kernels.vrelax.ops import (
-            build_presence_ell, tile_presence_words,
-        )
+        from repro.kernels.vrelax.ops import EllPresenceCache
 
         cap = self.view.log.capacity
-        packs, _ = self.pack()
-        out = []
-        for p, m in zip(packs, masks):
-            words = pad_to(
-                np.asarray(m), cap, False
-            ).astype(np.uint32).reshape(-1, 1)
-            if num_queries is not None:
-                words = tile_presence_words(words, 1, num_queries)
-            out.append(build_presence_ell(words, p, as_numpy=True))
-        return jnp.asarray(np.concatenate(out, axis=0))
+        self.pack()
+        flat = np.concatenate(
+            [pad_to(np.asarray(m), cap, False) for m in masks]
+        )
+        cache = self._presence.get(num_queries)
+        if cache is None:
+            cache = self._presence[num_queries] = EllPresenceCache()
+        cache.incremental = self.incremental
+        return cache.update(
+            self._key, flat, self._eid_flat, num_queries=num_queries
+        )
+
+    def presence_stats(self) -> dict:
+        """Aggregate incremental-presence counters across Q-fold planes."""
+        return {
+            "rebuilds": sum(c.rebuilds for c in self._presence.values()),
+            "touched": [t for c in self._presence.values() for t in c.touched],
+        }
 
 
 class _ShardedEllMixin:
@@ -1080,8 +1122,11 @@ class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
             dev, k = bounds._device(), bounds._kernels()
             mask = bounds._stack(self._qrs.snapshot_masks(t))
             vals, it = bounds._fixpoint(
-                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False
+                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False,
+                fetch=not self._defer_fetch,
             )
+            if self._defer_fetch:
+                return bounds.to_global_lazy(vals), it
             return bounds.to_global(vals), it
         # cqrs_ell — per-shard Pallas vrelax under shard_map: shard-local
         # ELL tiles, one all-gather of the per-vertex state per superstep
@@ -1093,6 +1138,8 @@ class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
             dev["row2vertex"],
         )
         bounds.launches += 1
+        if self._defer_fetch:
+            return bounds.to_global_lazy(vals), it
         return bounds.to_global(vals), int(it)
 
     def _set_stats(self, **kw):
@@ -1159,8 +1206,11 @@ class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
             dev, k = bounds._device(), bounds._kernels()
             mask = bounds._stack(self._qrs.snapshot_masks(t))
             vals, it = bounds._fixpoint(
-                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False
+                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False,
+                fetch=not self._defer_fetch,
             )
+            if self._defer_fetch:
+                return bounds.to_global_lazy(vals), it
             return bounds.to_global(vals), it
         # cqrs_ell: Q folded into the per-shard kernel's snapshot axis —
         # still one shard_map launch, one all-gather per superstep
@@ -1175,6 +1225,8 @@ class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
             dev["row2vertex"],
         )
         bounds.launches += 1
+        if self._defer_fetch:
+            return bounds.to_global_lazy(vals), it
         return bounds.to_global(vals), int(it)
 
     def _eval_lane_snapshot(self, t: int, lane):

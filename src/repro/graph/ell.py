@@ -124,6 +124,13 @@ class StableEllPacker:
     the edges fit, and growth jumps past the immediate need so at most
     O(log rows) distinct shapes — hence compilations — occur over a stream's
     lifetime.
+
+    Pack identity doubles as a cache epoch for derived device state: any
+    repack (same capacity or grown) may permute slot→edge assignments, so
+    consumers holding per-slot planes — e.g. the incremental presence words
+    of ``repro.kernels.vrelax.ops.EllPresenceCache`` — must key on the pack
+    (``ell_epoch`` / the sharded pack key) and rebuild rather than scatter
+    when it changes.
     """
 
     def __init__(self, num_vertices: int, *, slot_width: int = 128,

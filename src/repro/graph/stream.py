@@ -39,7 +39,9 @@ degenerate ``(w, w)`` and never change.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import operator
 import weakref
 from typing import Optional, Sequence
 
@@ -52,6 +54,10 @@ from repro.utils.padding import pad_to, round_up
 STREAM_ALIGN = 1024  # universe-capacity growth quantum (compile stability)
 
 _EMPTY = np.empty(0, np.int32)
+
+# Weight events are ``(snapshot, weight)`` tuples kept sorted by snapshot;
+# bisect by the time component (binary search replaces the former linear scan).
+_EV_TIME = operator.itemgetter(0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -426,9 +432,7 @@ class SnapshotLog:
             # the lifetime extrema to that constant so new views seed
             # exactly, and drop its entry.
             for j, ev in list(self._wevents.items()):
-                cut = 0
-                while cut < len(ev) and ev[cut][0] < upto:
-                    cut += 1
+                cut = bisect.bisect_left(ev, upto, key=_EV_TIME)
                 if cut == len(ev):
                     self.weight_min[j] = self.weight_max[j] = self.weight_tip[j]
                     del self._wevents[j]
@@ -451,16 +455,16 @@ class SnapshotLog:
         The weight in effect is the latest assignment (registration or
         differing re-add) at a snapshot ≤ ``t``; it survives retirement of
         the snapshot id arrays because assignments are recorded as events.
+        Events are sorted by snapshot (seeded at ``-1``), so the lookup is a
+        binary search — O(log events) instead of the former linear scan.
         """
         ev = self._wevents.get(int(j))
         if ev is None:
             return self.weight_tip[j]
-        w = ev[0][1]
-        for et, ew in ev[1:]:
-            if et > t:
-                break
-            w = ew
-        return w
+        # Rightmost event with time ≤ t; index 0 (the -1 seed) always
+        # qualifies for any t ≥ 0.
+        idx = bisect.bisect_right(ev, t, key=_EV_TIME)
+        return ev[max(idx - 1, 0)][1]
 
     @property
     def has_weight_events(self) -> bool:

@@ -59,6 +59,145 @@ def tile_presence_words(
     return pack_presence(np.tile(dense, (num_queries, 1)))  # (E, ceil(QS/32))
 
 
+def presence_word_pattern(num_queries: Optional[int] = None) -> np.ndarray:
+    """Presence words ``(W,) uint32`` of one *present* edge for a Q-fold eval.
+
+    The streaming serving path evaluates one snapshot at a time, so a present
+    edge's words carry bit ``q * 1 + 0`` for every query lane ``q`` — i.e.
+    bits ``0..Q-1`` set (``num_queries=None`` means the scalar path: one word,
+    bit 0).  This is exactly what :func:`tile_presence_words` produces for a
+    single-snapshot all-ones column, computed in O(W) instead of O(E·Q).
+    """
+    q = 1 if num_queries is None else int(num_queries)
+    w = (q + 31) // 32
+    out = np.zeros(w, np.uint32)
+    for k in range(w):
+        n = min(32, q - 32 * k)
+        out[k] = np.uint32(0xFFFFFFFF) if n >= 32 else np.uint32((1 << n) - 1)
+    return out
+
+
+def _scatter_bucket(n: int) -> int:
+    """Power-of-two bucket for scatter index padding (bounds jit cache)."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+class EllPresenceCache:
+    """Persistent device-resident ELL presence-word plane, updated by
+    scattering only the slots whose presence flipped.
+
+    The synchronous serving path rebuilt the full ``(R, D, W)`` word plane
+    from scratch on every slide — O(capacity · Q) host work plus a full
+    host→device upload — even though a slide flips only the edges named by
+    its ``SlideDiff``.  This cache keeps the plane resident on device and
+    folds each new presence mask in as a scatter of just the flipped slots
+    (``jnp`` functional update, so the *previous* plane stays alive for any
+    in-flight kernels — the double-buffering the pipelined path relies on).
+
+    Invalidation rule (the presence-plane twin of the PatchableQRS freed-slot
+    invariant): slot→(row, col) positions are only meaningful for one packed
+    layout, so whenever the ELL pack changes — capacity-class growth, weight
+    epoch bump, QRS re-pack — the caller passes a new ``key`` and the plane
+    is rebuilt from scratch.  Between repacks the maintained plane is
+    bit-for-bit identical to a full rebuild: slot validity cannot change
+    without a repack, and absent edges write all-zero words either way.
+
+    ``touched`` records the per-update scatter size (flipped slots, before
+    power-of-two padding); tests pin it against the ``SlideDiff`` size the
+    same way collective counts are HLO-pinned.
+    """
+
+    def __init__(self):
+        self._key = None  # opaque pack identity (layout epoch)
+        self._q = None  # query-fold width the plane was built for
+        self._plane = None  # jax (R, D, W) uint32
+        self._mask = None  # np bool (n_slots,) mask the plane encodes
+        self._rows = None  # np (n_slots,) packed row per slot id (-1: none)
+        self._cols = None  # np (n_slots,) packed col per slot id
+        self._pattern = None  # np (W,) uint32 present-edge words
+        self.touched: list = []  # scatter sizes per incremental update
+        self.rebuilds = 0  # full plane rebuilds (invalidation events)
+        self.incremental = True  # False: legacy rebuild-every-call path
+
+    def invalidate(self) -> None:
+        self._key = None
+        self._plane = None
+        self._mask = None
+
+    def _set_layout(self, key, edge_id: np.ndarray, num_queries) -> None:
+        eid = np.asarray(edge_id)
+        n_slots = int(eid.max()) + 1 if eid.size else 0
+        r, c = np.nonzero(eid >= 0)
+        ids = eid[r, c]
+        self._rows = np.full(n_slots, -1, np.int64)
+        self._cols = np.zeros(n_slots, np.int64)
+        self._rows[ids] = r
+        self._cols[ids] = c
+        self._pattern = presence_word_pattern(num_queries)
+        self._key = key
+        self._q = num_queries
+
+    def update(
+        self,
+        key,
+        mask: np.ndarray,
+        edge_id: np.ndarray,
+        *,
+        num_queries: Optional[int] = None,
+    ) -> jax.Array:
+        """Return the word plane for ``mask``, maintained incrementally.
+
+        ``key`` identifies the packed layout ``edge_id`` (any hashable —
+        callers use their pack cache key); a key or Q-fold change rebuilds
+        the plane from scratch.  ``mask`` is the per-slot presence over the
+        edge universe ``edge_id`` indexes into.
+        """
+        mask = np.asarray(mask, bool)
+        fresh = (
+            self._plane is None
+            or key != self._key
+            or num_queries != self._q
+            or not self.incremental
+        )
+        if fresh:
+            if key != self._key or num_queries != self._q:
+                self._set_layout(key, edge_id, num_queries)
+            eid = np.asarray(edge_id)
+            words = np.where(
+                mask[:, None], self._pattern[None, :], np.uint32(0)
+            ).astype(np.uint32)
+            plane = np.zeros(eid.shape + (len(self._pattern),), np.uint32)
+            valid = eid >= 0
+            plane[valid] = words[eid[valid]]
+            self._plane = jnp.asarray(plane)
+            self._mask = mask.copy()
+            self.rebuilds += 1
+            return self._plane
+        (diff,) = np.nonzero(mask != self._mask)
+        diff = diff[self._rows[diff] >= 0]  # slot-less ids cannot scatter
+        self._mask = mask.copy()
+        self.touched.append(int(len(diff)))
+        if len(diff) == 0:
+            return self._plane
+        rows = self._rows[diff]
+        cols = self._cols[diff]
+        vals = np.where(
+            mask[diff][:, None], self._pattern[None, :], np.uint32(0)
+        ).astype(np.uint32)
+        pad = _scatter_bucket(len(diff)) - len(diff)
+        if pad:  # pad to a power-of-two bucket with idempotent repeat writes
+            rows = np.concatenate([rows, np.repeat(rows[:1], pad)])
+            cols = np.concatenate([cols, np.repeat(cols[:1], pad)])
+            vals = np.concatenate([vals, np.repeat(vals[:1], pad, axis=0)])
+        self._plane = self._plane.at[
+            jnp.asarray(rows), jnp.asarray(cols)
+        ].set(jnp.asarray(vals))
+        return self._plane
+
+
 def vrelax_partial(
     values: jax.Array,  # (S, V)
     ell: EllPack,

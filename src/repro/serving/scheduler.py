@@ -34,6 +34,7 @@ import dataclasses
 import itertools
 import time
 from collections import OrderedDict, deque, namedtuple
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Optional, Sequence
 
 import jax.numpy as jnp
@@ -163,6 +164,8 @@ class QueryBatcher:
         stream_capacity: int = 64,
         stream_ttl: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        pipelined: bool = False,
+        quarantine_factor: Optional[float] = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -172,18 +175,31 @@ class QueryBatcher:
         self.method = method
         self.stream_capacity = stream_capacity
         self.stream_ttl = stream_ttl
+        # pipelined serving: ingest + per-group advances run on a single
+        # worker owned by this batcher, eval fetches are deferred to the
+        # consumer's .result() — see advance_window_async
+        self.pipelined = bool(pipelined)
+        # lane-aware QoS: a lane whose accumulated maintenance supersteps
+        # exceed factor × its group's median is quarantined into its own
+        # single-lane batch group (and preferred for TTL eviction) so one
+        # pathological watcher stops holding its group's lockstep
+        # while_loops hostage.  None disables quarantining.
+        self.quarantine_factor = quarantine_factor
         self._clock = clock
+        self._executor: Optional[ThreadPoolExecutor] = None
         self.queue: deque[QueryRequest] = deque()
         self._uid = itertools.count()
         # warm watcher handles, LRU-ordered (oldest first); each value is a
         # _StreamEntry so eviction can reason about idleness/divergence.
         # The actual warm state lives in _batches: one StreamingQueryBatch
-        # per (view, query, method) group, shared by its watchers' lanes.
+        # per (view, query, method) group, shared by its watchers' lanes
+        # (quarantined watchers get a dedicated per-source group key).
         self._streams: "OrderedDict[tuple, _StreamEntry]" = OrderedDict()
         self._batches: dict = {}
         self._stream_hits = 0
         self._stream_misses = 0
         self._stream_evictions = 0
+        self._stream_quarantines = 0
 
     def submit(
         self,
@@ -278,6 +294,7 @@ class QueryBatcher:
         """
         from repro.core.api import StreamingQueryBatch
 
+        self._drain()  # admission mutates group state: no in-flight advances
         if method is None:
             method = (self.method if self.method in ("cqrs", "cqrs_ell")
                       else "cqrs")
@@ -298,6 +315,7 @@ class QueryBatcher:
                 batch = StreamingQueryBatch(
                     view, str(query), [int(source)], method=method
                 )
+                batch._defer_fetch = self.pipelined
                 batch.results  # prime eagerly: pay the cold solve pre-traffic
                 self._batches[gkey] = batch
             else:
@@ -305,21 +323,28 @@ class QueryBatcher:
             entry = _StreamEntry(
                 sq=_BatchWatcher(batch=batch, source=int(source)),
                 last_used=self._clock(),
+                gkey=gkey,
             )
             self._streams[key] = entry
             while len(self._streams) > self.stream_capacity:
-                old_key, old_entry = self._streams.popitem(last=False)  # LRU
+                # quarantined lanes are the preferred victims: their warm
+                # state is the most expensive to keep and the least shared
+                old_key = next(
+                    (k for k, e in self._streams.items() if e.quarantined),
+                    next(iter(self._streams)),  # else plain LRU (oldest)
+                )
+                old_entry = self._streams.pop(old_key)
                 self._drop_lane(old_key, old_entry)
                 self._stream_evictions += 1
         return entry.sq
 
     def _drop_lane(self, key: tuple, entry) -> None:
         """Remove an evicted watcher's lane from its batch group."""
-        gkey = (key[0], key[1], key[3])
+        gkey = entry.gkey
         batch = self._batches.get(gkey)
         if batch is None or batch is not entry.sq.batch:
             return
-        if any((k[0], k[1], k[3]) == gkey for k in self._streams):
+        if any(e.gkey == gkey for e in self._streams.values()):
             batch.remove_source(entry.sq.source)
         else:
             del self._batches[gkey]  # last lane: drop the whole group
@@ -368,19 +393,36 @@ class QueryBatcher:
             return True
         return sq.diff_pos < view.history_end - len(view.history)
 
+    def sweep(self, exempt_view=None) -> int:
+        """Run TTL/divergence expiry now; returns the evicted entry count.
+
+        The serving path runs this itself — at the top of every
+        :meth:`advance_window` and on every :meth:`watch` admission — so a
+        caller that only ever advances still observes eviction; ``sweep`` is
+        the explicit entry point for callers that want housekeeping between
+        slides (e.g. an idle loop).  Recency semantics are unchanged:
+        serving never refreshes idleness, only ``watch()`` stamps it.
+        """
+        self._drain()
+        return self._evict_stale(exempt_view=exempt_view)
+
     def _evict_stale(self, exempt_view=None) -> int:
         """Drop TTL-expired and divergent entries.
 
         ``exempt_view`` guards only the *divergence* test (the view about to
         be served may legitimately lag its log until ``slide_to_tip``); TTL
         expiry applies to every entry, so abandoned watchers expire even on
-        a view that is advanced every slide.
+        a view that is advanced every slide.  Quarantined lanes expire at
+        HALF the TTL — they are the preferred victims (their warm state is
+        per-lane, the most expensive to keep per watcher).
         """
         now = self._clock()
         dead = []
         for key, e in self._streams.items():
-            expired = (self.stream_ttl is not None
-                       and now - e.last_used > self.stream_ttl)
+            ttl = self.stream_ttl
+            if ttl is not None and e.quarantined:
+                ttl = ttl / 2
+            expired = ttl is not None and now - e.last_used > ttl
             divergent = e.sq.view is not exempt_view and self._is_divergent(e.sq)
             if expired or divergent:
                 dead.append(key)
@@ -407,11 +449,18 @@ class QueryBatcher:
         Slide history consumed by every group is pruned from the shared
         view afterwards (which also retires unreachable log history), so
         long-running serving loops stay bounded; stale warm state is evicted
-        on the way (see :meth:`watch`).  Note that with ``stream_ttl`` set,
-        being served does NOT refresh a watcher's idleness — a client must
-        re-``watch`` within the TTL or its (query, source) expires and drops
-        out of subsequent results.
+        on the way (see :meth:`watch` and :meth:`sweep`).  Note that with
+        ``stream_ttl`` set, being served does NOT refresh a watcher's
+        idleness — a client must re-``watch`` within the TTL or its
+        (query, source) expires and drops out of subsequent results.
+
+        With ``pipelined=True`` this is exactly
+        ``advance_window_async(view, delta).result()`` — same state
+        transitions on the batcher's worker thread, bit-for-bit identical
+        results.
         """
+        if self.pipelined:
+            return self.advance_window_async(view, delta).result()
         self._evict_stale(exempt_view=view)
         if delta is not None:
             view.log.append_snapshot(*delta)
@@ -434,17 +483,228 @@ class QueryBatcher:
             # LRU order are stamped only by client-side watch() calls, so an
             # abandoned (query, source) does eventually expire even on a view
             # that is advanced every slide
+        self._quarantine_pathological(view)
         if served:
             view.prune_history(min(b.diff_pos for b in served))
         return out
 
+    # -- pipelined serving ---------------------------------------------------
+    def _ensure_executor(self) -> ThreadPoolExecutor:
+        if self._executor is None:
+            # ONE worker: group state mutation stays serialized; overlap
+            # comes from jax async dispatch (host routing/packing for slide
+            # k+1 proceeds while devices execute slide k's fixpoint, whose
+            # fetch is deferred to the consumer's .result())
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="query-batcher"
+            )
+        return self._executor
+
+    def _drain(self) -> None:
+        """Wait for in-flight pipelined work (admission/sweep barrier)."""
+        if self._executor is not None:
+            self._executor.submit(lambda: None).result()
+
+    def close(self) -> None:
+        """Shut down the pipelined worker (no-op when never used)."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
+    def advance_window_async(self, view, delta=None) -> "PendingWindow":
+        """Pipelined :meth:`advance_window`: returns a handle, not results.
+
+        Ingest (sweep + append + slide) and every per-group advance are
+        submitted to the batcher's single worker; the returned
+        :class:`PendingWindow` resolves to the same ``{(query, source):
+        (S, V)}`` dict — bit-for-bit equal to the synchronous path — when
+        ``.result()`` is called.  Group advances only *dispatch* their
+        device work (fetches are deferred to ``.result()``), so a caller can
+        submit the next window's delta before this one is fetched —
+        host-side routing and ELL packing for slide k+1 then overlap the
+        devices' slide-k fixpoints.  Back-to-back submissions are safe:
+        windows are processed strictly in order on the worker.
+
+        The caller must not mutate the view/log directly while windows are
+        in flight (``watch``/``sweep`` are safe: they drain first).
+        """
+        ex = self._ensure_executor()
+        return PendingWindow(ex.submit(self._pre_advance, view, delta))
+
+    def _pre_advance(self, view, delta):
+        """Worker-side window job: sweep, append, slide, advance each group.
+
+        Everything for one window runs inside THIS job (the per-group
+        futures are fulfilled inline, not re-submitted) so a later window's
+        ingest can never overtake an earlier window's group advances on the
+        FIFO worker queue.
+        """
+        self._evict_stale(exempt_view=view)
+        if delta is not None:
+            view.log.append_snapshot(*delta)
+        view.slide_to_tip()
+        groups = [b for b in self._batches.values() if b.view is view]
+        futs = []
+        for b in groups:
+            f: Future = Future()
+            futs.append(f)
+            try:
+                f.set_result(self._advance_group(b))
+            except BaseException as exc:  # surfaced at the group's .result()
+                f.set_exception(exc)
+        post: Future = Future()
+        try:
+            post.set_result(self._post_advance(view, groups))
+        except BaseException as exc:
+            post.set_exception(exc)
+        return futs, post
+
+    def _advance_group(self, batch):
+        """Advance one group; capture its rows WITHOUT fetching them."""
+        if not any(b is batch for b in self._batches.values()):
+            return None  # evicted after submission (sweep won the race)
+        batch.advance_nowait()
+        watchers = [
+            (e.sq.semiring.name, e.sq.source)
+            for e in self._streams.values() if e.sq.batch is batch
+        ]
+        # rows are captured by reference (device arrays are immutable, host
+        # rows are only ever written at lanes past the captured count), so
+        # this snapshot stays exact even if the group advances again before
+        # the consumer materializes it
+        return _GroupResult(
+            rows=list(batch._rows),
+            sources=list(batch.sources),
+            watchers=watchers,
+        )
+
+    def _post_advance(self, view, groups) -> None:
+        """Worker-side epilogue: QoS quarantine + history pruning."""
+        self._quarantine_pathological(view)
+        served = [
+            b for b in groups
+            if any(b is bb for bb in self._batches.values())
+        ]
+        if served:
+            view.prune_history(min(b.diff_pos for b in served))
+
+    def _quarantine_pathological(self, view) -> None:
+        """Move lanes whose supersteps dwarf their group's median into
+        dedicated single-lane groups (see ``quarantine_factor``)."""
+        if self.quarantine_factor is None:
+            return
+        from repro.core.api import StreamingQueryBatch
+
+        for batch in list(self._batches.values()):
+            if batch.view is not view or len(batch.sources) < 2:
+                continue
+            steps = batch.lane_supersteps
+            med = sorted(steps.values())[len(steps) // 2]
+            threshold = self.quarantine_factor * max(med, 1)
+            for s, st in steps.items():
+                if st <= threshold or len(batch.sources) < 2:
+                    continue
+                key = (id(view), batch.semiring.name, int(s), batch.method)
+                entry = self._streams.get(key)
+                if entry is None or entry.quarantined:
+                    continue
+                batch.remove_source(s)
+                solo = StreamingQueryBatch(
+                    view, batch.semiring.name, [int(s)], method=batch.method
+                )
+                solo._defer_fetch = self.pipelined
+                solo.results  # prime the dedicated group eagerly
+                gkey = (id(view), batch.semiring.name, batch.method, "q", s)
+                self._batches[gkey] = solo
+                entry.sq.batch = solo
+                entry.gkey = gkey
+                entry.quarantined = True
+                self._stream_quarantines += 1
+
+    def quarantined(self) -> list:
+        """``(query, source)`` pairs currently serving from quarantine."""
+        return [
+            (e.sq.semiring.name, e.sq.source)
+            for e in self._streams.values() if e.quarantined
+        ]
+
 
 @dataclasses.dataclass
 class _StreamEntry:
-    """One warm watcher handle + its recency stamp (LRU/TTL bookkeeping)."""
+    """One warm watcher handle + its recency stamp (LRU/TTL bookkeeping).
+
+    ``gkey`` is the key of the batch group this watcher's lane lives in —
+    the shared ``(view, query, method)`` group, or a dedicated per-source
+    key once ``quarantined`` (lane-aware QoS, see
+    ``QueryBatcher._quarantine_pathological``).
+    """
 
     sq: object
     last_used: float
+    gkey: tuple = ()
+    quarantined: bool = False
+
+
+@dataclasses.dataclass
+class _GroupResult:
+    """One group's advance captured lazily (rows possibly still on device).
+
+    ``materialize()`` is the pipelined path's device→host sync point: it
+    stacks the captured row references and slices out each watcher's lane.
+    Runs on the CONSUMER's thread, so the batcher's worker is already free
+    to ingest the next slide while devices finish this one.
+    """
+
+    rows: list
+    sources: list
+    watchers: list  # (query_name, source) pairs served from this group
+
+    def materialize(self) -> dict:
+        stacked = np.stack(
+            [np.asarray(r) for r in self.rows], axis=1
+        )[: len(self.sources)]
+        lanes = {s: i for i, s in enumerate(self.sources)}
+        return {
+            (q, s): stacked[lanes[s]] for (q, s) in self.watchers
+        }
+
+
+class PendingWindow:
+    """Handle for one in-flight pipelined ``advance_window``.
+
+    ``result()`` blocks until every group served this window and returns
+    the same ``{(query, source): (S, V)}`` dict the synchronous path
+    returns — bit-for-bit.  ``group_futures()`` exposes the per-group
+    futures (each resolving to a :class:`_GroupResult`) so consumers can
+    overlap their own work with later groups' convergence loops.
+    """
+
+    def __init__(self, pre: Future):
+        self._pre = pre
+        self._out: Optional[dict] = None
+
+    def group_futures(self) -> list:
+        """Per-group futures, available once ingest has run."""
+        futs, _ = self._pre.result()
+        return futs
+
+    def done(self) -> bool:
+        if not self._pre.done():
+            return False
+        futs, post = self._pre.result()
+        return post.done() and all(f.done() for f in futs)
+
+    def result(self) -> dict:
+        if self._out is None:
+            futs, post = self._pre.result()
+            out: dict = {}
+            for f in futs:
+                g = f.result()
+                if g is not None:  # None: group evicted mid-flight
+                    out.update(g.materialize())
+            post.result()  # surface epilogue errors (quarantine/prune)
+            self._out = out
+        return self._out
 
 
 @dataclasses.dataclass

@@ -1,0 +1,132 @@
+"""Structured benchmark emission — the ``BENCH_*.json`` CI artifact format.
+
+``benchmarks/run.py`` prints (and ``--out`` persists) a flat CSV; the
+``--json`` flag additionally writes one machine-readable payload per run so
+downstream tooling (dashboards, regression diffing) does not have to parse
+the free-form ``derived`` column.  The payload carries:
+
+* every CSV row verbatim (``name``, ``us_per_call``, ``derived``),
+* per-mode latency records for the pipelined-serving bench (per-slide
+  milliseconds, p50/p99 slide-to-result, presence touched-slot counts, and
+  shard occupancy spread),
+* a ``meta`` dict (fast/full, argv, device count) for provenance.
+
+:func:`validate_bench_json` is the schema contract: CI's well-formedness
+test round-trips an emitted payload through it, so a malformed artifact
+fails tier-1 rather than silently breaking a dashboard.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+# every latency record carries exactly these keys (see LATENCY_RECORD_KEYS
+# usage in validate_bench_json); per_slide_ms and touched_slots are
+# per-slide sequences, the rest are scalars
+LATENCY_RECORD_KEYS = frozenset(
+    {
+        "mode",  # "synchronous" | "pipelined"
+        "query",  # semiring name
+        "window",  # window size (snapshots)
+        "q",  # watcher count
+        "per_slide_ms",  # list[float], slide-to-result per slide
+        "p50_ms",  # float, median of per_slide_ms
+        "p99_ms",  # float, 99th percentile of per_slide_ms
+        "touched_slots",  # list[int], presence scatter sizes (may be empty)
+        "occupancy_spread",  # float, max/mean shard occupancy after the run
+    }
+)
+
+
+def make_payload(
+    rows: Sequence[tuple],
+    *,
+    mode: str,
+    meta: Optional[dict] = None,
+    latency: Optional[Sequence[dict]] = None,
+) -> dict:
+    """Build the ``BENCH_*.json`` payload from emitted CSV rows.
+
+    ``rows`` is the ``(name, us_per_call, derived)`` list ``emit()``
+    accumulates; ``mode`` is ``"fast"`` or ``"full"``; ``latency`` is the
+    per-mode record list the latency bench produces (omitted when the bench
+    did not run).  The result always passes :func:`validate_bench_json`.
+    """
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "mode": str(mode),
+        "rows": [
+            {"name": str(n), "us_per_call": float(us), "derived": str(d)}
+            for n, us, d in rows
+        ],
+        "meta": dict(meta or {}),
+    }
+    if latency is not None:
+        payload["latency"] = [dict(r) for r in latency]
+    return payload
+
+
+def validate_bench_json(payload: dict) -> dict:
+    """Check a payload against the schema; returns it, raises ``ValueError``.
+
+    Deliberately strict about *shape* (key sets, scalar vs sequence, value
+    types) and silent about *values* — a regression dashboard compares
+    numbers across runs, the schema only promises they are numbers.
+    """
+    if not isinstance(payload, dict):
+        raise ValueError("payload must be a dict")
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"schema_version must be {SCHEMA_VERSION}, "
+            f"got {payload.get('schema_version')!r}"
+        )
+    if payload.get("mode") not in ("fast", "full"):
+        raise ValueError(f"mode must be 'fast' or 'full', got {payload.get('mode')!r}")
+    rows = payload.get("rows")
+    if not isinstance(rows, list):
+        raise ValueError("rows must be a list")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or set(row) != {"name", "us_per_call", "derived"}:
+            raise ValueError(f"rows[{i}] must have exactly name/us_per_call/derived")
+        if not isinstance(row["name"], str) or not isinstance(row["derived"], str):
+            raise ValueError(f"rows[{i}] name/derived must be strings")
+        if not isinstance(row["us_per_call"], (int, float)) or isinstance(
+            row["us_per_call"], bool
+        ):
+            raise ValueError(f"rows[{i}] us_per_call must be a number")
+    if not isinstance(payload.get("meta"), dict):
+        raise ValueError("meta must be a dict")
+    if "latency" in payload:
+        lat = payload["latency"]
+        if not isinstance(lat, list):
+            raise ValueError("latency must be a list")
+        for i, rec in enumerate(lat):
+            if not isinstance(rec, dict) or set(rec) != LATENCY_RECORD_KEYS:
+                missing = LATENCY_RECORD_KEYS - set(rec or ())
+                extra = set(rec or ()) - LATENCY_RECORD_KEYS
+                raise ValueError(
+                    f"latency[{i}] key mismatch (missing={sorted(missing)}, "
+                    f"extra={sorted(extra)})"
+                )
+            if rec["mode"] not in ("synchronous", "pipelined"):
+                raise ValueError(f"latency[{i}] mode must be synchronous|pipelined")
+            if not isinstance(rec["query"], str):
+                raise ValueError(f"latency[{i}] query must be a string")
+            for k in ("window", "q"):
+                if not isinstance(rec[k], int) or isinstance(rec[k], bool):
+                    raise ValueError(f"latency[{i}] {k} must be an int")
+            for k in ("p50_ms", "p99_ms", "occupancy_spread"):
+                if not isinstance(rec[k], (int, float)) or isinstance(rec[k], bool):
+                    raise ValueError(f"latency[{i}] {k} must be a number")
+            if not isinstance(rec["per_slide_ms"], list) or not all(
+                isinstance(x, (int, float)) and not isinstance(x, bool)
+                for x in rec["per_slide_ms"]
+            ):
+                raise ValueError(f"latency[{i}] per_slide_ms must be a number list")
+            if not isinstance(rec["touched_slots"], list) or not all(
+                isinstance(x, int) and not isinstance(x, bool)
+                for x in rec["touched_slots"]
+            ):
+                raise ValueError(f"latency[{i}] touched_slots must be an int list")
+    return payload

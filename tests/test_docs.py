@@ -95,3 +95,14 @@ def test_architecture_covers_spmd_ell_and_rebalancing():
                 "_ShardedEllCache", "lane_supersteps", "set_lane",
                 "drop_lane_padded", "occupancy"):
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
+def test_architecture_covers_pipelined_serving():
+    """The pipelined-serving section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Pipelined serving" in text
+    for sym in ("EllPresenceCache", "presence_word_pattern",
+                "advance_window_async", "PendingWindow", "group_futures",
+                "to_global_lazy", "ell_epoch", "quarantine_factor",
+                "quarantined", "sweep", "validate_bench_json"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"

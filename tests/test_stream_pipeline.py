@@ -1,0 +1,609 @@
+"""Pipelined ingest→serve path: incremental presence, async windows, QoS.
+
+The serving-path contracts this file pins:
+
+* the device-resident ELL presence plane is maintained by scattering only
+  the slots a ``SlideDiff`` flipped — ``touched`` counters are pinned the
+  way collective counts are HLO-pinned: they track the diff size, never the
+  capacity, and the plane stays bit-for-bit equal to a full rebuild;
+* the plane is invalidated exactly when the pack changes (the freed-slot
+  invariant's presence twin): capacity growth / new registrations rebuild,
+  20 no-repack slides do not;
+* ``QueryBatcher`` pipelined serving (``advance_window_async``) is
+  bit-for-bit equal to the synchronous path across semirings, engines and
+  deployments, including back-to-back in-flight windows and a mid-stream
+  capacity repack;
+* eviction runs on the serving path itself: a watcher idle past TTL is
+  dropped by ``advance_window`` ALONE (no ``watch``/``sweep`` call), at a
+  frozen lane-capacity class; divergence fires at exactly window distance;
+* lane-aware QoS: a pathological watcher is quarantined into its own
+  single-lane group, still served bit-for-bit, TTL-expired at half life and
+  preferred for LRU eviction;
+* ``SnapshotLog`` weight events: bisect lookup == linear scan, compaction
+  keeps O(live) events without changing reachable lookups;
+* ``occupancy_spread`` degenerate fixtures and the BENCH json schema.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.api import EvolvingQuery, StreamingQuery
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.kernels.vrelax.ops import (
+    EllPresenceCache,
+    presence_word_pattern,
+)
+from repro.serving.scheduler import QueryBatcher
+
+V = 48
+WINDOW = 3
+NO_DELTA = ((), (), (), (), ())
+
+
+def make_stream(seed: int, *, num_snapshots: int = WINDOW + 3, batch_size: int = 20):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return generate_evolving_stream(
+        src, dst, w, V, num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=0.4, seed=seed + 2,
+    )
+
+
+def feed(log, base, deltas, upto: int):
+    log.append_snapshot(*base)
+    for d in deltas[: upto - 1]:
+        log.append_snapshot(*d)
+    return log
+
+
+def tip_ref(log, query: str, source: int) -> np.ndarray:
+    """Fresh ground truth on the TIP window (a fresh view defaults to the
+    FIRST window, so references must anchor ``start`` explicitly)."""
+    view = WindowView(log, size=WINDOW, start=log.num_snapshots - WINDOW)
+    return EvolvingQuery(view.materialize(), query, source).evaluate("cqrs")
+
+
+# ===================================================================
+# EllPresenceCache unit contracts
+# ===================================================================
+def test_presence_word_pattern_widths():
+    np.testing.assert_array_equal(presence_word_pattern(), [1])
+    np.testing.assert_array_equal(presence_word_pattern(1), [1])
+    np.testing.assert_array_equal(presence_word_pattern(8), [0xFF])
+    np.testing.assert_array_equal(presence_word_pattern(32), [0xFFFFFFFF])
+    np.testing.assert_array_equal(
+        presence_word_pattern(40), [0xFFFFFFFF, 0xFF]
+    )
+
+
+def test_presence_cache_incremental_matches_rebuild():
+    """Scattered updates == full rebuilds bit-for-bit; touched == flips."""
+    rng = np.random.default_rng(3)
+    eid = np.array([[0, 1, 2, -1], [3, 4, 5, 6], [-1, 7, 8, 9]])
+    n_slots = 10
+    inc = EllPresenceCache()
+    legacy = EllPresenceCache()
+    legacy.incremental = False
+    mask = rng.random(n_slots) < 0.5
+    flips = [np.array([0]), np.array([]), np.array([4, 7, 9]),
+             np.arange(n_slots), np.array([2])]
+    for q in (None, 8, 40):
+        for step, f in enumerate(flips):
+            if len(f):
+                mask[f.astype(int)] = ~mask[f.astype(int)]
+            got = np.asarray(inc.update(("k", q), mask, eid, num_queries=q))
+            want = np.asarray(
+                legacy.update(("k", q), mask, eid, num_queries=q)
+            )
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"q={q} step={step}"
+            )
+    # one rebuild per (key, Q) layout; every other update was a scatter
+    assert inc.rebuilds == 3
+    assert legacy.rebuilds == 3 * len(flips)
+    # touched pins the flip sizes (4 scatter updates per layout epoch)
+    assert inc.touched == [0, 3, 10, 1] * 3
+    # a key change (repack) invalidates even with an identical mask
+    before = inc.rebuilds
+    inc.update(("k2", 8), mask, eid, num_queries=8)
+    assert inc.rebuilds == before + 1
+
+
+def test_presence_cache_absent_slots_do_not_scatter():
+    """Universe ids with no packed slot are dropped from the diff (the
+    single-host pack covers only QRS-kept edges, so gaps are routine)."""
+    eid = np.array([[0, 1, -1], [2, 4, -1]])  # id 3 has no packed slot
+    inc = EllPresenceCache()
+    mask = np.array([True, False, True, True, False])
+    inc.update("k", mask, eid)
+    mask = mask.copy()
+    mask[[1, 3]] = [True, False]  # id 3 flips but cannot scatter
+    inc.update("k", mask, eid)
+    assert inc.touched == [1]
+    ref = EllPresenceCache()
+    ref.incremental = False
+    np.testing.assert_array_equal(
+        np.asarray(inc.update("k", mask, eid)),
+        np.asarray(ref.update("k", mask, eid)),
+    )
+
+
+# ===================================================================
+# Pinned no-repack maintenance: touched tracks the diff, not capacity
+# ===================================================================
+def _grouped_edges():
+    """40 distinct edges in 5 delete/re-add rotation groups of 8."""
+    idx = np.arange(40)
+    src = idx % V
+    dst = (idx + 5) % V
+    w = (1.0 + (idx % 16) / 16.0).astype(np.float32)
+    groups = [np.flatnonzero(idx % 5 == g) for g in range(5)]
+    return src, dst, w, groups
+
+
+def _rotation_delta(k: int, src, dst, w, groups):
+    """Slide ``k``: delete group ``k%5``; re-add group ``(k-2)%5`` at its
+    ORIGINAL weights (registered edges, unchanged extrema → no repack)."""
+    g_del = groups[k % 5]
+    if k < 2:
+        return ((), (), (), src[g_del], dst[g_del])
+    g_add = groups[(k - 2) % 5]
+    return (src[g_add], dst[g_add], w[g_add], src[g_del], dst[g_del])
+
+
+_TOUCHED_BY_CAP: dict = {}
+
+
+@pytest.mark.parametrize("capacity", [64, 256])
+def test_presence_touched_pinned_over_20_slides(capacity):
+    """20 slides, zero repacks: ONE rebuild, every scatter ≤ diff-sized,
+    and the counter stream is identical across capacity classes."""
+    src, dst, w, groups = _grouped_edges()
+    slog = ShardedSnapshotLog(V, 1, capacity=capacity)
+    slog.append_snapshot(src, dst, w)
+    for _ in range(WINDOW - 1):
+        slog.append_snapshot(*NO_DELTA)
+    ref_log = feed(SnapshotLog(V, capacity=capacity), (src, dst, w),
+                   [NO_DELTA] * (WINDOW - 1), WINDOW)
+    view = ShardedWindowView(slog, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs_ell")
+    sq.results  # prime
+    key0 = slog.state_key()
+    for k in range(20):
+        d = _rotation_delta(k, src, dst, w, groups)
+        got = sq.advance(d)
+        ref_log.append_snapshot(*d)
+        if k in (0, 9, 19):
+            np.testing.assert_array_equal(
+                got, tip_ref(ref_log, "sssp", 0),
+                err_msg=f"slide {k} (capacity {capacity})",
+            )
+    assert slog.state_key() == key0, "rotation deltas must not repack"
+    stats = sq._ell_cache.presence_stats()
+    assert stats["rebuilds"] == 1, "no-repack slides must never rebuild"
+    # every scatter is bounded by the universe (40 edges), NOT the capacity
+    assert stats["touched"] and max(stats["touched"]) <= 40
+    # the counter stream is capacity-independent: pin it for cross-run
+    # comparison via a module-level record (both parametrizations fill it)
+    _TOUCHED_BY_CAP[capacity] = stats["touched"]
+    if len(_TOUCHED_BY_CAP) == 2:
+        a, b = (_TOUCHED_BY_CAP[c] for c in sorted(_TOUCHED_BY_CAP))
+        assert a == b, "touched counters must not depend on capacity class"
+
+
+def test_presence_plane_invalidated_on_repack():
+    """Registering NEW edges repacks the ELL → the plane must rebuild."""
+    src, dst, w, groups = _grouped_edges()
+    slog = ShardedSnapshotLog(V, 1, capacity=64)
+    slog.append_snapshot(src, dst, w)
+    for _ in range(WINDOW - 1):
+        slog.append_snapshot(*NO_DELTA)
+    ref_log = feed(SnapshotLog(V, capacity=64), (src, dst, w),
+                   [NO_DELTA] * (WINDOW - 1), WINDOW)
+    view = ShardedWindowView(slog, size=WINDOW)
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs_ell")
+    sq.results
+    sq.advance(_rotation_delta(0, src, dst, w, groups))
+    assert sq._ell_cache.presence_stats()["rebuilds"] == 1
+    # brand-new edges: num_edges moves → state_key moves → repack
+    fresh = (np.array([45, 46]), np.array([3, 4]),
+             np.array([1.5, 2.5], np.float32), (), ())
+    got = sq.advance(fresh)
+    ref_log.append_snapshot(*_rotation_delta(0, src, dst, w, groups))
+    ref_log.append_snapshot(*fresh)
+    np.testing.assert_array_equal(got, tip_ref(ref_log, "sssp", 0))
+    assert sq._ell_cache.presence_stats()["rebuilds"] == 2
+
+
+# ===================================================================
+# Pipelined == synchronous serving (the tentpole equivalence)
+# ===================================================================
+def _dual_batchers(seed, query, method, sharded, slides=3, sources=(0, 7)):
+    """Two identically-fed deployments: synchronous vs pipelined batcher.
+
+    Yields per-slide result dicts from both paths; the caller asserts.
+    """
+    base, deltas = make_stream(seed, num_snapshots=WINDOW + slides + 1)
+
+    def build():
+        if sharded:
+            log = ShardedSnapshotLog(V, 1, capacity=64)
+        else:
+            log = SnapshotLog(V, capacity=512)
+        feed(log, base, deltas, WINDOW)
+        mk = ShardedWindowView if sharded else WindowView
+        return log, mk(log, size=WINDOW)
+
+    log_s, view_s = build()
+    log_p, view_p = build()
+    qb_s = QueryBatcher(method=method)
+    qb_p = QueryBatcher(method=method, pipelined=True)
+    for x in sources:
+        qb_s.watch(view_s, query, x, method=method)
+        qb_p.watch(view_p, query, x, method=method)
+    out = []
+    for d in deltas[WINDOW - 1 :]:
+        out.append((qb_s.advance_window(view_s, d),
+                    qb_p.advance_window(view_p, d)))
+    qb_p.close()
+    return out, (log_s, log_p)
+
+
+@pytest.mark.parametrize("query", ["sssp", "sswp", "ssnp"])
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_pipelined_matches_synchronous(query, method):
+    out, _ = _dual_batchers(seed=5, query=query, method=method, sharded=False)
+    for k, (sync, pipe) in enumerate(out):
+        assert set(sync) == set(pipe)
+        for key in sync:
+            np.testing.assert_array_equal(
+                sync[key], pipe[key],
+                err_msg=f"{query}/{method} slide {k} lane {key}",
+            )
+
+
+def test_pipelined_matches_synchronous_sharded():
+    out, _ = _dual_batchers(
+        seed=6, query="sssp", method="cqrs_ell", sharded=True
+    )
+    for k, (sync, pipe) in enumerate(out):
+        assert set(sync) == set(pipe)
+        for key in sync:
+            np.testing.assert_array_equal(
+                sync[key], pipe[key],
+                err_msg=f"sharded slide {k} lane {key}",
+            )
+
+
+def test_backtoback_async_windows_strictly_ordered():
+    """Queue THREE windows before materializing any; results must match
+    per-window tip references (ingest k+1 must not overtake serve k)."""
+    slides = 3
+    base, deltas = make_stream(seed=11, num_snapshots=WINDOW + slides + 1)
+    slog = ShardedSnapshotLog(V, 1, capacity=64)
+    feed(slog, base, deltas, WINDOW)
+    ref_log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    view = ShardedWindowView(slog, size=WINDOW)
+    qb = QueryBatcher(method="cqrs_ell", pipelined=True)
+    for x in (0, 7):
+        qb.watch(view, "sssp", x, method="cqrs_ell")
+    pendings = [qb.advance_window_async(view, d)
+                for d in deltas[WINDOW - 1 :]]
+    refs = []
+    for d in deltas[WINDOW - 1 :]:
+        ref_log.append_snapshot(*d)
+        refs.append({("sssp", x): tip_ref(ref_log, "sssp", x)
+                     for x in (0, 7)})
+    for k, (p, ref) in enumerate(zip(pendings, refs)):
+        got = p.result()
+        assert p.done()
+        assert len(p.group_futures()) == 1
+        assert set(got) == set(ref)
+        for key in ref:
+            np.testing.assert_array_equal(
+                got[key], ref[key], err_msg=f"window {k} lane {key}"
+            )
+    qb.close()
+
+
+def test_pipelined_capacity_growth_mid_stream(monkeypatch):
+    """A slide that GROWS the universe capacity mid-pipeline (generation
+    bump → repack → presence invalidation) stays bit-for-bit."""
+    from repro.graph import stream as stream_mod
+
+    monkeypatch.setattr(stream_mod, "STREAM_ALIGN", 8)
+    base, deltas = make_stream(seed=21, num_snapshots=WINDOW + 4)
+    probe = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    tight = probe.num_edges  # tip capacity: first registration grows
+
+    def build():
+        slog = ShardedSnapshotLog(V, 1, capacity=tight)
+        return feed(slog, base, deltas, WINDOW)
+
+    log_s, log_p = build(), build()
+    view_s = ShardedWindowView(log_s, size=WINDOW)
+    view_p = ShardedWindowView(log_p, size=WINDOW)
+    qb_s = QueryBatcher(method="cqrs_ell")
+    qb_p = QueryBatcher(method="cqrs_ell", pipelined=True)
+    for x in (0, 7):
+        qb_s.watch(view_s, "sssp", x, method="cqrs_ell")
+        qb_p.watch(view_p, "sssp", x, method="cqrs_ell")
+    gen0 = log_p.state_key()
+    for k, d in enumerate(deltas[WINDOW - 1 :]):
+        sync = qb_s.advance_window(view_s, d)
+        pipe = qb_p.advance_window(view_p, d)
+        for key in sync:
+            np.testing.assert_array_equal(
+                sync[key], pipe[key], err_msg=f"slide {k} lane {key}"
+            )
+    assert log_p.state_key() != gen0, "stream must have forced a repack"
+    (grp,) = [b for b in qb_p._batches.values() if b.view is view_p]
+    assert grp._ell_cache.presence_stats()["rebuilds"] >= 2, \
+        "the repack must have invalidated the presence plane"
+    qb_p.close()
+
+
+# ===================================================================
+# Eviction on the serving path
+# ===================================================================
+def test_ttl_eviction_by_advance_window_alone():
+    """An idle-past-TTL watcher is dropped by ``advance_window`` ALONE —
+    no ``watch``/``sweep`` call — at a frozen lane-capacity class."""
+    now = [0.0]
+    base, deltas = make_stream(seed=31, num_snapshots=WINDOW + 4)
+    log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher(stream_ttl=10.0, clock=lambda: now[0])
+    qb.watch(view, "sssp", 0)
+    h7 = qb.watch(view, "sssp", 7)
+    batch = h7.batch
+    cap0 = batch.lane_capacity
+    out = qb.advance_window(view, deltas[WINDOW - 1])
+    assert set(out) == {("sssp", 0), ("sssp", 7)}
+    now[0] = 6.0
+    qb.watch(view, "sssp", 0)  # client 0 is alive; client 7 went silent
+    now[0] = 12.0  # 7 idle for 12s > TTL; 0 idle for 6s
+    out = qb.advance_window(view, deltas[WINDOW])
+    assert set(out) == {("sssp", 0)}, "advance_window alone must evict"
+    assert batch.sources == [0]
+    assert batch.lane_capacity == cap0, "lane Q-class must stay frozen"
+    assert qb.cache_info().evictions == 1
+    np.testing.assert_array_equal(out[("sssp", 0)], tip_ref(log, "sssp", 0))
+    # the surviving watcher expires too once idle past TTL: explicit sweep
+    now[0] = 30.0
+    assert qb.sweep() == 1
+    assert qb.cache_info().currsize == 0 and not qb._batches
+
+
+def test_divergence_eviction_at_exactly_window_distance():
+    """The log sliding a FULL window past a view makes its warm state
+    useless — the predicate must fire at exactly-window distance, not
+    before (windows are disjoint only from ``size`` onward)."""
+    base, deltas = make_stream(seed=33, num_snapshots=2 * WINDOW + 2)
+    log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher()
+    qb.watch(view, "sssp", 0)
+    for d in deltas[WINDOW - 1 : 2 * WINDOW - 2]:  # distance → WINDOW-1
+        log.append_snapshot(*d)
+    assert log.num_snapshots - (view.start + view.size) == WINDOW - 1
+    assert qb.sweep() == 0, "one-short of a window is NOT divergent"
+    log.append_snapshot(*deltas[2 * WINDOW - 2])  # distance → WINDOW
+    assert qb.sweep() == 1, "exactly a window past must evict"
+    assert qb.cache_info().currsize == 0
+
+
+# ===================================================================
+# Lane-aware QoS: quarantine
+# ===================================================================
+def _quarantine_batcher(clock=None, **kw):
+    base, deltas = make_stream(seed=41, num_snapshots=WINDOW + 6)
+    log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    qb = QueryBatcher(quarantine_factor=0.01, method="cqrs",
+                      **({"clock": clock} if clock else {}), **kw)
+    qb.watch(view, "sssp", 0)
+    qb.watch(view, "sssp", 7)
+    return qb, view, log, deltas[WINDOW - 1 :]
+
+
+def test_quarantine_isolates_pathological_lane():
+    """With a tiny factor one lane lands in its own group; serving stays
+    bit-for-bit and covers BOTH watchers from the split groups."""
+    qb, view, log, pending = _quarantine_batcher()
+    served = [qb.advance_window(view, d) for d in pending[:3]]
+    assert len(qb.quarantined()) == 1
+    assert len(qb._batches) == 2, "quarantined lane must get its own group"
+    solo_sources = sorted(
+        s for b in qb._batches.values() for s in b.sources
+    )
+    assert solo_sources == [0, 7], "no lane may be lost by the split"
+    for k, out in enumerate(served):
+        assert set(out) == {("sssp", 0), ("sssp", 7)}
+    for x in (0, 7):
+        np.testing.assert_array_equal(
+            served[-1][("sssp", x)], tip_ref(log, "sssp", x),
+            err_msg=f"post-quarantine serving diverged (source {x})",
+        )
+    assert qb.cache_info().currsize == 2
+
+
+def test_quarantined_lane_is_preferred_lru_victim():
+    qb, view, log, pending = _quarantine_batcher(stream_capacity=2)
+    qb.advance_window(view, pending[0])
+    qb.advance_window(view, pending[1])
+    (bad,) = qb.quarantined()
+    qb.watch(view, "sssp", 13)  # overflow: capacity 2, third watcher
+    assert qb.quarantined() == [], "quarantined lane must be evicted first"
+    keys = {(e.sq.semiring.name, e.sq.source)
+            for e in qb._streams.values()}
+    assert bad not in keys and ("sssp", 13) in keys
+
+
+def test_quarantined_lane_expires_at_half_ttl():
+    now = [0.0]
+    qb, view, log, pending = _quarantine_batcher(
+        clock=lambda: now[0], stream_ttl=10.0
+    )
+    qb.advance_window(view, pending[0])
+    qb.advance_window(view, pending[1])
+    assert len(qb.quarantined()) == 1
+    now[0] = 6.0  # past TTL/2=5 for the quarantined lane, inside TTL for
+    assert qb.sweep(exempt_view=view) == 1  # the healthy one
+    assert qb.quarantined() == []
+    assert qb.cache_info().currsize == 1
+
+
+# ===================================================================
+# Weight events: bisect == linear scan; compaction keeps O(live)
+# ===================================================================
+def _weight_at_linear(ev, t):
+    w = ev[0][1]
+    for tt, ww in ev[1:]:
+        if tt <= t:
+            w = ww
+        else:
+            break
+    return w
+
+
+def test_weight_at_bisect_matches_linear_reference():
+    log = SnapshotLog(V, capacity=64)
+    log.append_snapshot([0, 2, 4], [1, 3, 5], [1.0, 1.0, 9.0])
+    log.append_snapshot([0, 2], [1, 3], [3.0, 7.0])  # both re-assigned
+    log.append_snapshot([0], [1], [2.0])
+    log.append_snapshot(*NO_DELTA)
+    log.append_snapshot([0], [1], [5.0])
+    j01 = int(np.flatnonzero((log.src[: log.num_edges] == 0)
+                             & (log.dst[: log.num_edges] == 1))[0])
+    j23 = int(np.flatnonzero((log.src[: log.num_edges] == 2)
+                             & (log.dst[: log.num_edges] == 3))[0])
+    for j in (j01, j23):
+        ev = list(log._wevents[j])
+        for t in range(log.num_snapshots):
+            assert log.weight_at(j, t) == _weight_at_linear(ev, t), \
+                f"edge {j} at t={t}"
+    # an edge with no events resolves to its (only) tip weight
+    stable = next(j for j in range(log.num_edges) if j not in log._wevents)
+    assert log.weight_at(stable, 0) == log.weight_tip[stable]
+
+
+def test_weight_event_compaction_keeps_live_events_only():
+    log = SnapshotLog(V, capacity=64)
+    log.append_snapshot([0, 2], [1, 3], [1.0, 1.0])
+    log.append_snapshot([0, 2], [1, 3], [3.0, 7.0])
+    log.append_snapshot([0], [1], [2.0])
+    log.append_snapshot(*NO_DELTA)
+    log.append_snapshot([0], [1], [5.0])
+    j01 = int(np.flatnonzero((log.src[: log.num_edges] == 0)
+                             & (log.dst[: log.num_edges] == 1))[0])
+    j23 = int(np.flatnonzero((log.src[: log.num_edges] == 2)
+                             & (log.dst[: log.num_edges] == 3))[0])
+    start = log.num_snapshots - 2  # = 3: snapshots 0..2 become unreachable
+    view = WindowView(log, size=2, start=start)
+    want = {j: [log.weight_at(j, t)
+                for t in range(start, log.num_snapshots)]
+            for j in (j01, j23)}
+    assert log.retire_history() == start
+    # (0,1) still has a live event (t=4): folded seed + live entry only
+    assert log._wevents[j01] == [(-1, np.float32(2.0)),
+                                 (4, np.float32(5.0))]
+    # (2,3)'s events ALL folded: entry dropped, extrema pinned to the tip
+    assert j23 not in log._wevents
+    assert log.weight_min[j23] == log.weight_max[j23] == np.float32(7.0)
+    for j in (j01, j23):  # reachable lookups are bit-for-bit unchanged
+        got = [log.weight_at(j, t) for t in range(start, log.num_snapshots)]
+        assert got == want[j]
+
+
+def test_weight_events_stay_bounded_under_sliding_view():
+    """30 alternating re-assignments, pruned as a window slides over them:
+    the event list must stay O(live window), not O(history)."""
+    log = SnapshotLog(V, capacity=64)
+    log.append_snapshot([0], [1], [1.0])
+    log.append_snapshot([0], [1], [2.0])
+    view = WindowView(log, size=2, start=0)
+    for t in range(2, 31):
+        log.append_snapshot([0], [1], [float(1 + t % 2)])
+        view.slide_to_tip()
+        view.prune_history(view.history_end)
+    (j,) = log.multi_weight_ids().tolist()
+    assert len(log._wevents[j]) <= 4, \
+        "event list must not grow with log lifetime"
+    assert log.retired_upto >= log.num_snapshots - 3
+
+
+# ===================================================================
+# occupancy_spread degenerate fixtures
+# ===================================================================
+def test_occupancy_spread_empty_universe_is_even():
+    slog = ShardedSnapshotLog(V, 4, capacity=16)
+    assert slog.occupancy_spread() == 1.0
+
+
+def test_occupancy_spread_single_populated_shard_is_shard_count():
+    slog = ShardedSnapshotLog(V, 4, capacity=16)
+    # naive dst-range owners: every dst < V/4 lands on shard 0
+    slog.append_snapshot([0, 1, 2, 3], [1, 2, 3, 4], [1.0, 1.0, 1.0, 1.0])
+    assert slog.occupancy_spread() == 4.0
+
+
+# ===================================================================
+# BENCH json artifact schema
+# ===================================================================
+def test_bench_json_payload_well_formed():
+    from repro.utils.benchjson import (
+        SCHEMA_VERSION, make_payload, validate_bench_json,
+    )
+
+    rows = [("evolving-stream-latency/sssp/pipelined", 1234.5, "p50_ms=1.2")]
+    lat = [{
+        "mode": "pipelined", "query": "sssp", "window": 64, "q": 8,
+        "per_slide_ms": [1.5, 2.5], "p50_ms": 2.0, "p99_ms": 2.5,
+        "touched_slots": [16, 8], "occupancy_spread": 1.0,
+    }]
+    payload = make_payload(rows, mode="fast",
+                           meta={"argv": ["--fast"]}, latency=lat)
+    assert validate_bench_json(payload) is payload
+    assert payload["schema_version"] == SCHEMA_VERSION
+    # round-trips through json unchanged
+    import json as _json
+
+    assert validate_bench_json(_json.loads(_json.dumps(payload)))
+    # no latency section is legal (non-latency runs)
+    assert validate_bench_json(make_payload(rows, mode="full"))
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda p: p.__setitem__("schema_version", 99),
+    lambda p: p.__setitem__("mode", "medium"),
+    lambda p: p["rows"][0].pop("derived"),
+    lambda p: p["rows"][0].__setitem__("us_per_call", "fast"),
+    lambda p: p["latency"][0].pop("p99_ms"),
+    lambda p: p["latency"][0].__setitem__("extra", 1),
+    lambda p: p["latency"][0].__setitem__("mode", "async"),
+    lambda p: p["latency"][0].__setitem__("touched_slots", [1.5]),
+    lambda p: p["latency"][0].__setitem__("per_slide_ms", [True]),
+    lambda p: p["latency"][0].__setitem__("window", 8.5),
+])
+def test_bench_json_rejects_malformed(mutate):
+    from repro.utils.benchjson import make_payload, validate_bench_json
+
+    payload = make_payload(
+        [("a/b", 1.0, "")], mode="fast",
+        latency=[{
+            "mode": "synchronous", "query": "sssp", "window": 8, "q": 8,
+            "per_slide_ms": [1.0], "p50_ms": 1.0, "p99_ms": 1.0,
+            "touched_slots": [4], "occupancy_spread": 1.0,
+        }],
+    )
+    mutate(payload)
+    with pytest.raises(ValueError):
+        validate_bench_json(payload)
