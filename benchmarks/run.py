@@ -23,14 +23,19 @@
              vs the synchronous baseline (blocking advance_window + legacy
              presence rebuild) — p50/p99 per mode, bit-for-bit asserted,
              plus a presence-maintenance microbench (O(capacity) rebuild
-             vs O(touched) scatter)
+             vs O(touched) scatter);
+             with --warmstart, cold vs warm time-to-first-served-slide for
+             a restarted replica (AOT kernel-grid manifest replay against a
+             persistent executable cache + streaming checkpoint resume) —
+             bit-for-bit asserted, warm ≥3x cold (≥1.5x with --fast)
   roofline — summary of dry-run-derived roofline terms (if present)
 
 --json PATH writes the run as a structured BENCH payload (CSV rows +
 latency records, see repro.utils.benchjson) next to the --out CSV.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
-     [--sharded] [--qbatch Q] [--latency] [--out CSV] [--json PATH]
+     [--sharded] [--qbatch Q] [--latency] [--warmstart] [--out CSV]
+     [--json PATH]
 """
 from __future__ import annotations
 
@@ -684,6 +689,117 @@ def bench_evolving_stream_latency(fast: bool):
 
 
 # ---------------------------------------------------------------- roofline
+def bench_warmstart(fast: bool):
+    """Cold vs warm time-to-first-served-slide for a restarted replica.
+
+    **Cold** is a fresh process serving its first slide: construct the
+    replica, cold-solve the window (with every jit/XLA compile inline on the
+    serving path — ``jax.clear_caches()`` first, no persistent cache),
+    advance once.  **Warm** is the restarted process: the AOT kernel-grid
+    manifest is replayed against the persistent executable cache at process
+    start (``warm_from_manifest`` — every compile a disk hit; it runs *off*
+    the serving path, before traffic, and is reported separately in the
+    derived column), then the timed serving path is checkpoint load + resume
+    (zero solves: the checkpointed fixpoints are injected) + advancing the
+    same slide.  Both paths serve the identical delta and are asserted
+    bit-for-bit; the speedup floor is 3× in full mode, 1.5× in fast/CI mode
+    (noisy-runner policy).  Rows:
+    ``warmstart/<query>/{cold,warm}_first_slide`` with the speedup and the
+    warm breakdown in the derived column.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.checkpoint import CheckpointManager, resume_streaming, streaming_state
+    from repro.core.api import StreamingQueryBatch
+    from repro.graph.generators import (
+        generate_evolving_stream, generate_rmat, generate_uniform_weights,
+    )
+    from repro.graph.stream import SnapshotLog, WindowView
+    from repro.serving.warmstart import (
+        enable_persistent_cache, grid_for, warm_from_manifest, warmup,
+    )
+
+    if fast:
+        v, e, s, batch = 2048, 16384, 8, 200
+    else:
+        v, e, s, batch = 4096, 32768, 16, 400
+    query, sources = "sssp", [0, 7, 13, 21]
+    src, dst = generate_rmat(v, e, seed=7)
+    w = generate_uniform_weights(len(src), seed=8, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, v, num_snapshots=s + 4, batch_size=batch, seed=9,
+    )
+    capacity = e + (s + 4) * batch
+
+    def build():
+        log = SnapshotLog(v, capacity=capacity)
+        log.append_snapshot(*base)
+        for d in deltas[: s - 1]:
+            log.append_snapshot(*d)
+        return StreamingQueryBatch(
+            WindowView(log, size=s), query, sources, method="cqrs"
+        )
+
+    first_slide = deltas[s - 1]
+    work = tempfile.mkdtemp(prefix="warmstart-bench-")
+    try:
+        # -- setup (untimed): probe the grid, checkpoint the warm state
+        sq = build()
+        sq.results
+        specs = [grid_for(sq)]
+        mgr = CheckpointManager(os.path.join(work, "ckpt"))
+        tree, extra = streaming_state(sq)
+        mgr.save(0, tree, extra=extra)
+
+        # -- cold: fresh process, no caches anywhere
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        cold_sq = build()
+        cold_sq.results
+        cold_res = np.asarray(cold_sq.advance(first_slide)).copy()
+        t_cold = time.perf_counter() - t0
+
+        # -- populate the persistent executable cache + grid manifest
+        # (clear first so the warmup compiles actually run and land on disk)
+        cache_dir = os.path.join(work, "xla-cache")
+        cache_ok = enable_persistent_cache(cache_dir)
+        jax.clear_caches()
+        warmup(specs, cache_dir=cache_dir)
+
+        # -- warm: restarted process — manifest replay at process start
+        # (off the serving path), then the timed resume + first advance
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        warm_from_manifest(cache_dir)
+        t_manifest = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        arrays, manifest = mgr.load()
+        warm_sq = resume_streaming(arrays, manifest["extra"])
+        warm_res = np.asarray(warm_sq.advance(first_slide)).copy()
+        t_warm = time.perf_counter() - t0
+
+        assert np.array_equal(cold_res, warm_res), \
+            "warm-started replica diverged from the cold one"
+        speedup = t_cold / t_warm
+        emit(f"warmstart/{query}/cold_first_slide", t_cold * 1e6,
+             f"construct+prime+advance;window={s};Q={len(sources)}")
+        emit(f"warmstart/{query}/warm_first_slide", t_warm * 1e6,
+             f"speedup_vs_cold={speedup:.2f}x;"
+             f"manifest_replay_s={t_manifest:.3f};"
+             f"persistent_cache={'on' if cache_ok else 'off'}")
+        floor = 1.5 if fast else 3.0
+        if cache_ok:
+            assert speedup >= floor, (
+                f"warm start {speedup:.2f}x < {floor}x cold "
+                f"(cold {t_cold:.2f}s vs warm {t_warm:.2f}s)"
+            )
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
 def bench_roofline_summary(fast: bool):
     pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
     files = sorted(glob.glob(pat))
@@ -718,12 +834,19 @@ def main() -> None:
                     help="run evolving-stream in latency mode: pipelined "
                          "serving vs the synchronous baseline, p50/p99 "
                          "slide-to-result per mode, bit-for-bit asserted")
+    ap.add_argument("--warmstart", action="store_true",
+                    help="run evolving-stream in warm-start mode: cold vs "
+                         "warm (AOT manifest replay + checkpoint resume) "
+                         "time-to-first-served-slide, bit-for-bit asserted, "
+                         "warm >=3x cold (>=1.5x with --fast)")
     ap.add_argument("--out", default=None, help="also write the CSV to this path")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a structured BENCH payload (CSV rows + "
                          "latency records, repro.utils.benchjson schema)")
     args = ap.parse_args()
-    if args.latency:
+    if args.warmstart:
+        stream_bench = bench_warmstart
+    elif args.latency:
         stream_bench = bench_evolving_stream_latency
     elif args.qbatch is not None:
         stream_bench = lambda fast: bench_evolving_stream_qbatch(  # noqa: E731

@@ -1,3 +1,21 @@
 from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.streamstate import (
+    replay_log,
+    rebuild_query,
+    rebuild_view,
+    resume_streaming,
+    streaming_state,
+    window_payload,
+    query_payload,
+)
 
-__all__ = ["CheckpointManager"]
+__all__ = [
+    "CheckpointManager",
+    "replay_log",
+    "rebuild_query",
+    "rebuild_view",
+    "resume_streaming",
+    "streaming_state",
+    "window_payload",
+    "query_payload",
+]

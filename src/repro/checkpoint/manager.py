@@ -35,7 +35,26 @@ class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        # steps a concurrent restore()/load() resolved; _gc must not delete
+        # them out from under the reader even when newer saves land mid-read
+        self._protected: set[int] = set()
         os.makedirs(directory, exist_ok=True)
+        self._sweep_orphans()
+
+    def _sweep_orphans(self) -> list[str]:
+        """Remove ``step_*.tmp`` directories left by a crash mid-write.
+
+        A crash between array write and the atomic rename leaves a ``.tmp``
+        directory that would otherwise shadow the next save of the same step
+        (``save`` rmtrees it) but still waste disk and confuse inspection;
+        committed steps are never suffixed, so sweeping is always safe.
+        """
+        swept = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d))
+                swept.append(d)
+        return swept
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree, extra: dict | None = None) -> str:
@@ -76,6 +95,29 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def _resolve(self, step: int | None) -> int:
+        """Resolve + protect a step so a concurrent save's gc can't prune it."""
+        step = self.latest_step() if step is None else int(step)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        self._protected.add(step)
+        return step
+
+    def load(self, step: int | None = None):
+        """Self-describing read: ``(dict key → np.ndarray, manifest)``.
+
+        Unlike :meth:`restore` no target tree is needed — the checkpoint's
+        own key set is returned as a flat dict.  The resolved step is pinned
+        against ``keep``-pruning for the manager's lifetime.
+        """
+        step = self._resolve(step)
+        path = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            arrays = {k: data[k] for k in data.files}
+        return arrays, manifest
+
     def restore(self, target_tree, step: int | None = None, shardings=None):
         """Rebuild ``target_tree``'s structure from disk.
 
@@ -83,9 +125,7 @@ class CheckpointManager:
         device_put onto them, which reshards transparently across mesh-size
         changes (elastic restart).  Returns ``(tree, manifest)``.
         """
-        step = self.latest_step() if step is None else step
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        step = self._resolve(step)
         path = os.path.join(self.directory, f"step_{step:09d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
@@ -121,4 +161,6 @@ class CheckpointManager:
     def _gc(self):
         steps = self.steps()
         for s in steps[: -self.keep] if self.keep else []:
+            if s in self._protected:
+                continue  # a restore()/load() resolved this step — keep it
             shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"))

@@ -1,0 +1,436 @@
+"""Streaming serving-state checkpoints: window replay + warm fixpoint restore.
+
+The hybrid persist-then-replay design (Khurana & Deshpande's snapshot
+retrieval; Koloniari et al.'s graph deltas — see PAPERS.md) applied to the
+paper's streaming engine: a checkpoint captures the *window* — per-snapshot
+global edge lists with their weights-in-effect — plus the warm per-query
+state that is expensive to recover (bound fixpoints, cached result rows).
+Restore replays the window into a fresh log, rebuilds a view over it, and
+injects the checkpointed fixpoints instead of cold-solving:
+
+* **Values are bit-for-bit.**  Monotone fixpoints are unique, so the
+  checkpointed ``val_cap``/``val_cup`` *are* the fixpoints of the replayed
+  window — no solve runs on restore, only one parent-forest launch per bound
+  side (trim metadata, not part of the fixpoint).  Min/max segment reductions
+  are order-exact, so results are independent of the replayed log's edge-id
+  permutation, of QRS slot order, and of the shard count.
+* **Elastic by construction.**  The payload is in *global* vertex/edge terms
+  (sharded maintainers fold through
+  :meth:`~repro.distributed.stream_shard.ShardedStreamingBounds.to_global`),
+  so a checkpoint written single-host restores onto any shard count and vice
+  versa — the shard axis is a layout choice, not state.
+* **Capacity classes survive.**  The replayed log, the rebuilt
+  :class:`~repro.core.qrs.PatchableQRS`, and the sticky ELL row capacity are
+  re-seeded at the checkpointed capacities, so a restored replica re-enters
+  the same compiled kernel variants (see ``repro.serving.warmstart``) instead
+  of re-walking the growth ladder.
+
+What is deliberately NOT checkpointed: parent forests (recomputed — their
+edge-id tie-breaks differ in the replayed id space, which may change *trim
+sets and superstep counts* but never values), QRS slot tables (rebuilt from
+the keep rule at the saved capacity), and presence planes (rebuilt under the
+new pack epoch; see :meth:`EllPresenceCache.export_state` for the counters).
+
+Catch-up after restore is plain delta replay: the resumed query object owns
+its replayed view, so feeding it the deltas recorded since the checkpoint
+through ``advance()`` is exactly the O(batch) incremental path —
+``ServeSupervisor.run`` drives this.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.stream import STREAM_ALIGN, SnapshotLog, WindowView
+
+STATE_FORMAT = 1
+
+
+def _is_sharded_view(view) -> bool:
+    from repro.graph.shardlog import ShardedWindowView
+
+    return isinstance(view, ShardedWindowView)
+
+
+def _snapshot_arrays(log: SnapshotLog, t: int):
+    """Global ``(src, dst, weight-in-effect)`` of edges present at snapshot t."""
+    ids = log.snapshot_edges(t)
+    w = log.weight_tip[ids].astype(np.float32).copy()
+    if log.has_weight_events:
+        # weight_tip is the weight in effect NOW; patch the rare edges whose
+        # assignment history differs at snapshot t
+        multi = np.intersect1d(ids, log.multi_weight_ids())
+        if len(multi):
+            pos = np.searchsorted(ids, multi)  # ids are sorted
+            for p, j in zip(pos.tolist(), multi.tolist()):
+                w[p] = log.weight_at(int(j), t)
+    return (
+        log.src[ids].astype(np.int32),
+        log.dst[ids].astype(np.int32),
+        w,
+    )
+
+
+# ==========================================================================
+# Checkpoint payload (flat array tree + JSON-able meta)
+# ==========================================================================
+def window_payload(view, *, prefix: str = "") -> tuple[dict, dict]:
+    """Serialize a window view's snapshot contents in global terms.
+
+    One ``snap/<i>/{src,dst,w}`` triple per window snapshot (sharded views
+    concatenate their shards — per-shard logs store global vertex ids), plus
+    the shard assignment's owner/local maps so a same-shard-count restore
+    reproduces the exact layout.  Requires the view to be at the log tip
+    (checkpoints are taken between advances).
+    """
+    log = view.log
+    if view.stop != log.num_snapshots:
+        raise ValueError(
+            f"checkpoint requires the window at the log tip "
+            f"(window ends at {view.stop}, log has {log.num_snapshots})"
+        )
+    sharded = _is_sharded_view(view)
+    tree: dict = {}
+    for i, t in enumerate(range(view.start, view.stop)):
+        if sharded:
+            parts = [_snapshot_arrays(sh, t) for sh in log.shards]
+            src = np.concatenate([p[0] for p in parts])
+            dst = np.concatenate([p[1] for p in parts])
+            w = np.concatenate([p[2] for p in parts])
+        else:
+            src, dst, w = _snapshot_arrays(log, t)
+        tree[f"{prefix}snap/{i}/src"] = src
+        tree[f"{prefix}snap/{i}/dst"] = dst
+        tree[f"{prefix}snap/{i}/w"] = w
+    meta = {
+        "num_vertices": int(log.num_vertices),
+        "window": int(view.size),
+        "log_capacity": int(log.capacity),
+        "sharded": bool(sharded),
+        "n_shards": int(log.n_shards) if sharded else 0,
+    }
+    if sharded:
+        a = log.assignment
+        meta["assignment_mode"] = a.mode
+        meta["assignment_v_cap"] = int(a.v_cap)
+        tree[f"{prefix}assign/owner"] = a.owner.copy()
+        tree[f"{prefix}assign/local"] = a.local.copy()
+    return tree, meta
+
+
+def query_payload(sq, *, prefix: str = "") -> tuple[dict, dict]:
+    """Serialize one streaming query's warm state (window payload excluded).
+
+    Bounds value arrays are stored in GLOBAL vertex space — the sharded
+    maintainer's position-space layout is a function of the (possibly
+    different) restore-time assignment, not state.
+    """
+    sq._ensure_primed()
+    sq._materialize_rows()
+    bounds = sq._bounds
+    sharded = _is_sharded_view(sq.view)
+    if sharded:
+        val_cap = bounds.to_global(bounds.val_cap)
+        val_cup = bounds.to_global(bounds.val_cup)
+    else:
+        val_cap = np.asarray(bounds.val_cap)
+        val_cup = np.asarray(bounds.val_cup)
+    tree = {
+        f"{prefix}bounds/val_cap": np.asarray(val_cap),
+        f"{prefix}bounds/val_cup": np.asarray(val_cup),
+    }
+    for i, row in enumerate(sq._rows):
+        tree[f"{prefix}rows/{i}"] = np.asarray(row)
+    if bounds.lane_supersteps is not None:
+        tree[f"{prefix}lane_supersteps"] = np.asarray(
+            bounds.lane_supersteps, np.int64
+        )
+    batched = bounds.batched
+    meta = {
+        "kind": "batch" if batched else "scalar",
+        "query": sq.semiring.name,
+        "method": sq.method,
+        "slides": int(sq._slides),
+        "supersteps": int(bounds.supersteps),
+    }
+    if batched:
+        meta["sources"] = [int(s) for s in sq.sources]
+        meta["q_cap"] = int(sq._q_cap)
+    else:
+        meta["source"] = int(sq.source)
+    qrs = sq._qrs
+    if hasattr(qrs, "capacity"):  # single-host PatchableQRS slot tables
+        meta["qrs_capacity"] = int(qrs.capacity)
+        meta["ell_rows"] = int(qrs._ell_packer.num_rows)
+    else:  # sharded mask-based QRS: only the sticky ELL row cap matters
+        meta["qrs_capacity"] = 0
+        cache = getattr(sq, "_ell_cache", None)
+        meta["ell_rows"] = int(getattr(cache, "_row_cap", 0) or 0)
+    # presence-plane counters (stats continuity; planes rebuild on restore)
+    presence = {
+        str(q): cache.export_state()
+        for q, cache in getattr(sq, "_presence", {}).items()
+    }
+    if presence:
+        meta["presence"] = presence
+    return tree, meta
+
+
+def streaming_state(sq) -> tuple[dict, dict]:
+    """Full checkpoint of one ``StreamingQuery``/``StreamingQueryBatch``.
+
+    Returns ``(tree, extra)`` for
+    :meth:`repro.checkpoint.manager.CheckpointManager.save`.
+    """
+    wtree, wmeta = window_payload(sq.view)
+    qtree, qmeta = query_payload(sq)
+    return {**wtree, **qtree}, {
+        "format": STATE_FORMAT,
+        "state": "streaming-query",
+        "window_meta": wmeta,
+        "query_meta": qmeta,
+    }
+
+
+# ==========================================================================
+# Restore: replay the window, inject the fixpoints
+# ==========================================================================
+def replay_log(snaps, num_vertices: int, *, capacity: Optional[int] = None,
+               n_shards: int = 0, assignment="range", v_cap: int = 0,
+               owner=None, local=None, mode: str = "range"):
+    """Replay global per-snapshot edge lists into a fresh log.
+
+    ``snaps`` is a list of ``(src, dst, w)`` triples (full membership per
+    snapshot).  Consecutive snapshots are diffed host-side: membership
+    changes become add/del batches and an in-place weight change becomes a
+    re-add with the new weight (a weight *event* in the log — exactly how
+    the original stream recorded it).  Iteration order is the array order of
+    each snapshot, so edge-id assignment is deterministic (though generally
+    a permutation of the original log's — harmless, results are order-exact).
+    """
+    cap = int(capacity or STREAM_ALIGN)
+    if n_shards:
+        from repro.graph.shardlog import ShardAssignment, ShardedSnapshotLog
+
+        if owner is not None and local is not None and v_cap:
+            assignment = ShardAssignment._build(
+                mode, num_vertices, n_shards,
+                np.asarray(owner, np.int64), np.asarray(local, np.int64),
+                int(v_cap),
+            )
+        log = ShardedSnapshotLog(
+            num_vertices, n_shards, capacity=cap, assignment=assignment
+        )
+    else:
+        log = SnapshotLog(num_vertices, capacity=cap)
+    # Vectorized host-side diff: each snapshot's edges become int64 keys
+    # ``s * V + d`` and consecutive snapshots are compared through sorted
+    # key arrays (searchsorted), not Python dicts — restore cost is a few
+    # numpy passes per snapshot instead of per-edge interpreter work.
+    nv = int(num_vertices)
+    prev_keys = np.empty(0, np.int64)  # snapshot order (del emission order)
+    prev_skeys = np.empty(0, np.int64)  # sorted (lookup order)
+    prev_sw = np.empty(0, np.float32)
+    for src, dst, w in snaps:
+        src = np.asarray(src, np.int64).ravel()
+        dst = np.asarray(dst, np.int64).ravel()
+        w = np.asarray(w, np.float32).ravel()
+        keys = src * nv + dst
+        order = np.argsort(keys, kind="stable")
+        skeys, sw = keys[order], w[order]
+        if skeys.size and np.any(skeys[1:] == skeys[:-1]):
+            # duplicate edges within one snapshot: collapse to dict
+            # semantics (first position wins the slot, last weight wins)
+            d: dict = {}
+            for k, x in zip(keys.tolist(), w.tolist()):
+                d[k] = x
+            keys = np.fromiter(d.keys(), np.int64, len(d))
+            w = np.asarray(list(d.values()), np.float32)
+            src, dst = keys // nv, keys % nv
+            order = np.argsort(keys, kind="stable")
+            skeys, sw = keys[order], w[order]
+        if prev_skeys.size:
+            pos = np.minimum(
+                np.searchsorted(prev_skeys, keys), prev_skeys.size - 1
+            )
+            in_prev = prev_skeys[pos] == keys
+            # membership adds OR in-place weight events (re-add, new weight)
+            add = ~in_prev | (in_prev & (prev_sw[pos] != w))
+            if skeys.size:
+                dpos = np.minimum(
+                    np.searchsorted(skeys, prev_keys), skeys.size - 1
+                )
+                dele = skeys[dpos] != prev_keys
+            else:
+                dele = np.ones(prev_keys.size, bool)
+        else:
+            add = np.ones(keys.size, bool)
+            dele = np.zeros(prev_keys.size, bool)
+        dk = prev_keys[dele]
+        log.append_snapshot(
+            src[add], dst[add], w[add], dk // nv, dk % nv,
+        )
+        prev_keys, prev_skeys, prev_sw = keys, skeys, sw
+    return log
+
+
+def rebuild_view(arrays: dict, meta: dict, *, prefix: str = "",
+                 n_shards: Optional[int] = None, assignment=None):
+    """Replay a :func:`window_payload` into a fresh log + tip view.
+
+    ``n_shards`` overrides the checkpointed shard count (elastic restore):
+    ``0`` forces single-host, ``k`` restores onto ``k`` shards.  The saved
+    assignment layout is reused only when the shard count matches (and no
+    explicit ``assignment`` is given); otherwise a fresh ``"range"``/given
+    spec is built — values are shard-layout independent.
+    """
+    size = int(meta["window"])
+    snaps = [
+        (
+            arrays[f"{prefix}snap/{i}/src"],
+            arrays[f"{prefix}snap/{i}/dst"],
+            arrays[f"{prefix}snap/{i}/w"],
+        )
+        for i in range(size)
+    ]
+    want = int(meta.get("n_shards", 0)) if n_shards is None else int(n_shards)
+    kwargs: dict = {}
+    if want and assignment is not None:
+        kwargs["assignment"] = assignment
+    elif want and want == int(meta.get("n_shards", 0)):
+        kwargs.update(
+            v_cap=int(meta.get("assignment_v_cap", 0)),
+            owner=arrays.get(f"{prefix}assign/owner"),
+            local=arrays.get(f"{prefix}assign/local"),
+            mode=str(meta.get("assignment_mode", "range")),
+        )
+    log = replay_log(
+        snaps, int(meta["num_vertices"]),
+        capacity=int(meta.get("log_capacity", 0)) or None,
+        n_shards=want, **kwargs,
+    )
+    if want:
+        from repro.graph.shardlog import ShardedWindowView
+
+        return ShardedWindowView(log, size=size)
+    return WindowView(log, size=size)
+
+
+def rebuild_query(view, arrays: dict, meta: dict, *, prefix: str = "",
+                  mesh=None, query=None):
+    """Attach a resumed streaming query to a replayed ``view``.
+
+    The query object is constructed normally (priming is lazy, so this is
+    cheap), then the checkpointed state is injected: warm bound fixpoints via
+    :meth:`StreamingBounds.from_state` (parents recomputed, no solve), the
+    QRS rebuilt at its saved capacity classes, and result rows verbatim.
+    """
+    from repro.core.api import StreamingQuery, StreamingQueryBatch
+    from repro.core.bounds import StreamingBounds, detect_uvv
+    from repro.core.qrs import PatchableQRS
+    from repro.core.semiring import get_semiring
+
+    sr = query if query is not None else get_semiring(meta["query"])
+    method = meta["method"]
+    sharded = _is_sharded_view(view)
+    kwargs: dict = {}
+    if sharded and mesh is not None:
+        kwargs["mesh"] = mesh
+    if meta["kind"] == "batch":
+        sq = StreamingQueryBatch(
+            view, sr, meta["sources"], method=method, **kwargs
+        )
+        # re-enter the saved lane-capacity class (it never shrinks live, so
+        # a restore below the class boundary must not shrink it either)
+        sq._q_cap = max(sq._q_cap, int(meta["q_cap"]))
+        src_spec = sq._lane_sources()
+    else:
+        sq = StreamingQuery(view, sr, meta["source"], method=method, **kwargs)
+        src_spec = meta["source"]
+    # the resumed query owns its replayed view: prune consumed history
+    sq._owns_view = True
+
+    val_cap = arrays[f"{prefix}bounds/val_cap"]
+    val_cup = arrays[f"{prefix}bounds/val_cup"]
+    lane_steps = arrays.get(f"{prefix}lane_supersteps")
+    bkwargs: dict = {}
+    if sharded:
+        from repro.distributed.stream_shard import ShardedStreamingBounds
+
+        bounds_cls = ShardedStreamingBounds
+        bkwargs["mesh"] = getattr(sq, "mesh", None)
+        assign = view.log.assignment
+        val_cap = _to_positions(assign, val_cap, sr)
+        val_cup = _to_positions(assign, val_cup, sr)
+    else:
+        bounds_cls = StreamingBounds
+    sq._bounds = bounds_cls.from_state(
+        view, sr, src_spec, val_cap, val_cup,
+        supersteps=int(meta.get("supersteps", 0)),
+        lane_supersteps=lane_steps, **bkwargs,
+    )
+    if sharded:
+        sq._qrs = sq._make_qrs()
+        rows_cap = int(meta.get("ell_rows", 0))
+        if rows_cap and sq.method == "cqrs_ell":
+            sq._ell_cache = sq._make_ell_cache(row_cap=rows_cap)
+    else:
+        uvv = np.asarray(
+            detect_uvv(jnp.asarray(val_cap), jnp.asarray(val_cup))
+        )
+        sq._qrs = PatchableQRS(
+            view, uvv, sr,
+            min_capacity=int(meta.get("qrs_capacity", 0)),
+            min_ell_rows=int(meta.get("ell_rows", 0)),
+        )
+    for q_str, state in meta.get("presence", {}).items():
+        from repro.kernels.vrelax.ops import EllPresenceCache
+
+        q = None if q_str == "None" else int(q_str)
+        cache = sq._presence[q] = EllPresenceCache()
+        cache.import_state(state)
+    size = int(view.size)
+    sq._rows = [np.asarray(arrays[f"{prefix}rows/{i}"]) for i in range(size)]
+    sq._diff_pos = view.history_end
+    sq._slides = int(meta.get("slides", 0))
+    sq._set_stats(seconds=0.0, supersteps=0, advanced=0, resumed=True)
+    return sq
+
+
+def resume_streaming(arrays: dict, extra: dict, *,
+                     n_shards: Optional[int] = None, mesh=None,
+                     assignment=None, query=None, method: Optional[str] = None):
+    """Rebuild a streaming query from a :func:`streaming_state` checkpoint.
+
+    ``arrays``/``extra`` are what
+    :meth:`~repro.checkpoint.manager.CheckpointManager.load` returns (pass
+    ``manifest["extra"]``).  ``n_shards`` restores elastically onto a
+    different shard count (``0`` = single host); ``method`` optionally
+    switches the appended-snapshot engine.
+    """
+    if int(extra.get("format", 0)) != STATE_FORMAT:
+        raise ValueError(f"unsupported checkpoint format: {extra.get('format')}")
+    qmeta = dict(extra["query_meta"])
+    if method is not None:
+        qmeta["method"] = method
+    view = rebuild_view(
+        arrays, extra["window_meta"], n_shards=n_shards, assignment=assignment
+    )
+    return rebuild_query(view, arrays, qmeta, mesh=mesh, query=query)
+
+
+def _to_positions(assign, vals: np.ndarray, sr) -> np.ndarray:
+    """Scatter global ``(..., V)`` values into flat position space.
+
+    Padding positions (no global vertex maps there) take the semiring
+    identity — inert under relaxation, exactly like a live maintainer's
+    padding lanes.
+    """
+    vals = np.asarray(vals, np.float32)
+    out = np.full(
+        vals.shape[:-1] + (int(assign.state_len),), sr.identity, np.float32
+    )
+    out[..., assign.positions] = vals
+    return out

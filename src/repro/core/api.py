@@ -486,6 +486,38 @@ class StreamingQuery:
             return vals, it
         return np.asarray(vals), int(it)
 
+    # -- warm-start checkpointing ---------------------------------------------
+    def checkpoint_state(self) -> tuple[dict, dict]:
+        """Serialize this query's serving state for a warm restart.
+
+        Returns ``(tree, extra)`` ready for
+        :meth:`repro.checkpoint.CheckpointManager.save`: the window's
+        per-snapshot global edge lists plus the warm bound fixpoints and
+        cached result rows (see :mod:`repro.checkpoint.streamstate`).
+        Requires the window to be at the log tip (always true right after
+        ``advance``).
+        """
+        from repro.checkpoint.streamstate import streaming_state
+
+        return streaming_state(self)
+
+    @staticmethod
+    def resume(arrays: dict, extra: dict, **kwargs) -> "StreamingQuery":
+        """Rebuild a query from a checkpoint instead of cold-solving.
+
+        ``arrays``/``extra`` come from ``CheckpointManager.load()`` (pass
+        ``manifest["extra"]`` as ``extra``).  The restored query's results
+        are bit-for-bit equal to the uninterrupted stream's; catch-up is
+        plain delta replay — feed the deltas recorded since the checkpoint
+        through :meth:`advance`.  Keyword options: ``n_shards`` restores
+        elastically onto a different shard count (``0`` = single host),
+        ``mesh``/``assignment`` override the sharded layout, ``method``
+        switches the appended-snapshot engine.
+        """
+        from repro.checkpoint.streamstate import resume_streaming
+
+        return resume_streaming(arrays, extra, **kwargs)
+
     def _presence_plane(self, ell, mask, num_queries=None):
         """Incrementally-maintained presence word plane for ``mask``.
 

@@ -340,11 +340,44 @@ class StreamingBounds:
         w_cap, w_cup = self._weights()
         inter = jnp.asarray(self.view.intersection_mask())
         union = jnp.asarray(self.view.union_mask())
+        if getattr(self, "_warm_vals", None) is not None:
+            # warm start (from_state): the checkpointed value arrays ARE the
+            # window's fixpoints (monotone fixpoints are unique), so skip
+            # both solves; only the parent forests — trim metadata, not part
+            # of the fixpoint — are recomputed, one relaxation-free launch
+            # per side.
+            self.val_cap, self.val_cup = self._warm_vals
+            self._warm_vals = None
+            self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
+            self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
+            return
         self.val_cap, it_cap = self._cold(src, dst, w_cap, inter)
         self.val_cup, it_cup = self._refix(self.val_cap, src, dst, w_cup, union)
         self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
         self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
         self.supersteps += self._tally(it_cap) + self._tally(it_cup)
+
+    @classmethod
+    def from_state(cls, view, sr: Semiring, source, val_cap, val_cup, *,
+                   supersteps: int = 0, lane_supersteps=None, **kwargs):
+        """Rebuild a maintainer from checkpointed value arrays (warm start).
+
+        ``val_cap``/``val_cup`` must be the fixpoints of ``view``'s current
+        window — restore replays the checkpointed window into a fresh log
+        first, so uniqueness of monotone fixpoints makes the restored
+        maintainer bit-for-bit equal to one that never stopped.  No cold
+        solve runs; only the parent forests are rebuilt (one launch per
+        side).  Extra ``kwargs`` pass through to the subclass constructor
+        (e.g. ``mesh`` for the sharded maintainer).
+        """
+        self = cls.__new__(cls)
+        self._warm_vals = (jnp.asarray(val_cap), jnp.asarray(val_cup))
+        self.__init__(view, sr, source, **kwargs)
+        self.supersteps = int(supersteps)
+        if self.lane_supersteps is not None and lane_supersteps is not None:
+            ls = np.asarray(lane_supersteps, np.int64)
+            self.lane_supersteps[: len(ls)] = ls
+        return self
 
     # -- batched-mode lane membership ----------------------------------------
     def append_lane(self, lane: "StreamingBounds") -> None:

@@ -276,7 +276,8 @@ class PatchableQRS:
         uvv = np.asarray(uvv)
         return uvv.all(axis=0) if uvv.ndim == 2 else uvv
 
-    def __init__(self, view, uvv, sr: Semiring, *, align: int = PAD_ALIGN):
+    def __init__(self, view, uvv, sr: Semiring, *, align: int = PAD_ALIGN,
+                 min_capacity: int = 0, min_ell_rows: int = 0):
         self.view = view
         self.sr = sr
         self.align = int(align)
@@ -287,7 +288,18 @@ class PatchableQRS:
         keep[:n] &= ~self.uvv[log.dst[:n]]
         ids = np.flatnonzero(keep).astype(np.int32)
 
-        cap = round_up(max(1, 2 * len(ids)), self.align)
+        # ``min_capacity``/``min_ell_rows`` let a checkpoint restore rebuild
+        # this QRS at the capacity classes the interrupted replica had
+        # already grown to, so the restored process re-enters the same
+        # compiled kernel variants instead of re-walking the growth ladder.
+        # When the saved class holds the current compaction, use it EXACTLY:
+        # a live QRS only grows on patch overflow, so its sticky class can
+        # sit below the fresh 2x-headroom rule — applying that rule here
+        # would rebuild one class up and recompile on the serving path.
+        need = 2 * len(ids)
+        if min_capacity and len(ids) <= int(min_capacity):
+            need = int(min_capacity)
+        cap = round_up(max(1, need, int(min_capacity)), self.align)
         self.slot_edge = np.full(cap, -1, np.int32)  # slot → universe id
         self.slot_of = np.full(log.capacity, -1, np.int32)  # universe id → slot
         self.src = np.zeros(cap, np.int32)
@@ -309,6 +321,10 @@ class PatchableQRS:
         from repro.graph.ell import StableEllPacker
 
         self._ell_packer = StableEllPacker(log.num_vertices)
+        if min_ell_rows:
+            self._ell_packer.num_rows = round_up(
+                int(min_ell_rows), self._ell_packer.row_align
+            )
         self._ell = None
         self._ell_version = -1
         self._ell_epoch = 0  # globally-unique pack identity (0 = no pack yet)

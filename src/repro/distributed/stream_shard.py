@@ -686,6 +686,23 @@ class ShardedStreamingBounds:
         dev, k = self._device(), self._kernels()
         inter = self._stack(self.view.intersection_masks())
         union = self._stack(self.view.union_masks())
+        if getattr(self, "_warm_vals", None) is not None:
+            # checkpoint restore (see from_state): the saved arrays ARE the
+            # fixpoints of this window — monotone fixpoints are unique — so
+            # only the parent forests (trim metadata) are recomputed in the
+            # replayed edge-id space; no solve runs
+            self.val_cap, self.val_cup = self._warm_vals
+            self._warm_vals = None
+            self.parent_cap = k["parents"](
+                self.val_cap, dev["src"], dev["dst_local"], dev["w_cap"],
+                inter, self.source,
+            )
+            self.parent_cup = k["parents"](
+                self.val_cup, dev["src"], dev["dst_local"], dev["w_cup"],
+                union, self.source,
+            )
+            self.launches += 2
+            return
         if self.batched:
             boot = np.full((len(self.sources), n), sr.identity, np.float32)
             boot[np.arange(len(self.sources)), self.sources] = np.float32(
@@ -714,6 +731,7 @@ class ShardedStreamingBounds:
     # batched-mode lane membership + tallies: the state layout (sources/
     # source + val/parent/lane arrays + supersteps) deliberately matches
     # StreamingBounds, so the bookkeeping is shared rather than re-encoded
+    from_state = classmethod(StreamingBounds.from_state.__func__)
     append_lane = StreamingBounds.append_lane
     drop_lane = StreamingBounds.drop_lane
     set_lane = StreamingBounds.set_lane
@@ -1039,8 +1057,19 @@ class _ShardedEllMixin:
 
     def _ell(self) -> _ShardedEllCache:
         if getattr(self, "_ell_cache", None) is None:
-            self._ell_cache = _ShardedEllCache(self.view, self.semiring)
+            self._ell_cache = self._make_ell_cache()
         return self._ell_cache
+
+    def _make_ell_cache(self, row_cap: int = 0) -> _ShardedEllCache:
+        """Fresh per-shard ELL cache, optionally re-seeded at a sticky row
+        capacity (checkpoint restore re-enters the saved compile class
+        instead of re-walking the amortized-doubling ladder)."""
+        cache = _ShardedEllCache(self.view, self.semiring)
+        if row_cap:
+            cache._row_cap = int(row_cap)
+            for p in cache._packers:
+                p.num_rows = int(row_cap)
+        return cache
 
     def _ell_kernels(self):
         from repro.kernels.common import default_interpret

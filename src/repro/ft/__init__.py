@@ -1,5 +1,10 @@
 from repro.ft.straggler import StragglerDetector
 from repro.ft.heartbeat import HeartbeatMonitor
-from repro.ft.recovery import TrainSupervisor
+from repro.ft.recovery import ServeSupervisor, TrainSupervisor
 
-__all__ = ["StragglerDetector", "HeartbeatMonitor", "TrainSupervisor"]
+__all__ = [
+    "StragglerDetector",
+    "HeartbeatMonitor",
+    "ServeSupervisor",
+    "TrainSupervisor",
+]

@@ -19,7 +19,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.checkpoint.manager import CheckpointManager
+from repro.ft.heartbeat import HeartbeatMonitor
 
 
 @dataclasses.dataclass
@@ -67,3 +70,87 @@ class TrainSupervisor:
                 if on_restore is not None:
                     state = on_restore(state, step)
         return state, {"restarts": restarts, "steps_executed": completed}
+
+
+@dataclasses.dataclass
+class ServeSupervisor:
+    """Checkpoint-restart driver for a streaming serving replica.
+
+    The serving analogue of :class:`TrainSupervisor`: ``run`` drives a
+    :class:`~repro.core.api.StreamingQuery` (or batch) over a delta stream,
+    checkpointing its warm state (window + bound fixpoints + result rows,
+    see ``repro.checkpoint.streamstate``) every ``ckpt_every`` slides.  When
+    a slide raises (preemption, injected chaos), the replica is rebuilt from
+    the latest committed checkpoint via
+    :func:`~repro.checkpoint.streamstate.resume_streaming` — no cold solve —
+    and *catches up by delta replay*: the slides since the checkpoint are
+    re-served through the ordinary O(batch) incremental path, re-executing at
+    most ``ckpt_every - 1`` of them.  Restore is elastic: ``n_shards``
+    rebuilds the replica on a different shard count than it crashed on
+    (``0`` = single host); values are shard-layout independent, so the
+    re-served results stay bit-for-bit.
+
+    ``heartbeat``: optional :class:`~repro.ft.heartbeat.HeartbeatMonitor` —
+    a beat is posted per served slide and the worker is re-admitted after a
+    restart, so a supervisor-of-supervisors can watch replica liveness.
+    """
+
+    manager: CheckpointManager
+    ckpt_every: int = 8
+    max_restarts: int = 10
+    heartbeat: Optional[HeartbeatMonitor] = None
+    worker: int = 0
+
+    def run(
+        self,
+        replica,
+        deltas,
+        *,
+        n_shards: Optional[int] = None,
+        mesh=None,
+        method: Optional[str] = None,
+        on_restore: Optional[Callable] = None,
+    ):
+        """Serve ``deltas`` with checkpoint/restart.
+
+        Returns ``(replica, served, stats)`` — ``served[i]`` is the result
+        array after slide ``i`` (re-served slides overwrite their entry with
+        bit-for-bit identical values), ``replica`` the final (possibly
+        restarted) query object.
+        """
+        from repro.checkpoint.streamstate import resume_streaming, streaming_state
+
+        deltas = list(deltas)
+        replica.results  # prime: the cold solve happens before traffic
+        tree, extra = streaming_state(replica)
+        self.manager.save(0, tree, extra=extra)
+        served: dict[int, np.ndarray] = {}
+        step = 0
+        restarts = 0
+        while step < len(deltas):
+            try:
+                replica.advance(deltas[step])
+                served[step] = np.asarray(replica.results).copy()
+                step += 1
+                if self.heartbeat is not None:
+                    self.heartbeat.beat(self.worker)
+                if step % self.ckpt_every == 0 or step == len(deltas):
+                    tree, extra = streaming_state(replica)
+                    self.manager.save(step, tree, extra=extra)
+            except Exception:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                arrays, manifest = self.manager.load()
+                replica = resume_streaming(
+                    arrays, manifest["extra"],
+                    n_shards=n_shards, mesh=mesh, method=method,
+                )
+                step = int(manifest["step"])
+                if self.heartbeat is not None:
+                    self.heartbeat.readmit(self.worker)
+                if on_restore is not None:
+                    on_restore(replica, step)
+        stats = {"restarts": restarts, "slides_served": len(served),
+                 "final_step": step}
+        return replica, [served[i] for i in range(len(deltas))], stats

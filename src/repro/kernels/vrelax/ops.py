@@ -127,6 +127,41 @@ class EllPresenceCache:
         self._plane = None
         self._mask = None
 
+    def export_state(self) -> dict:
+        """JSON-able counters + last mask for a warm-start checkpoint.
+
+        The device plane itself is NOT exported: slot positions are only
+        meaningful for one packed layout, and a restored process packs under
+        a fresh epoch, so the restore path rebuilds the plane on first use
+        (one rebuild, correct by construction).  What survives is the
+        accounting a serving supervisor tracks across restarts.
+        """
+        return {
+            "touched": [int(t) for t in self.touched],
+            "rebuilds": int(self.rebuilds),
+            "incremental": bool(self.incremental),
+            "mask": (
+                None if self._mask is None
+                else [int(i) for i in np.flatnonzero(self._mask)]
+            ),
+            "mask_len": 0 if self._mask is None else int(len(self._mask)),
+        }
+
+    def import_state(self, state: dict) -> None:
+        """Restore :meth:`export_state` counters into a fresh cache.
+
+        The plane stays unset — the next :meth:`update` sees a new pack key
+        and rebuilds it (counted as one more rebuild, matching what the
+        uninterrupted process would do on its next repack).
+        """
+        self.touched = [int(t) for t in state.get("touched", [])]
+        self.rebuilds = int(state.get("rebuilds", 0))
+        self.incremental = bool(state.get("incremental", True))
+        if state.get("mask") is not None and state.get("mask_len"):
+            mask = np.zeros(int(state["mask_len"]), bool)
+            mask[np.asarray(state["mask"], np.int64)] = True
+            self._mask = mask
+
     def _set_layout(self, key, edge_id: np.ndarray, num_queries) -> None:
         eid = np.asarray(edge_id)
         n_slots = int(eid.max()) + 1 if eid.size else 0

@@ -1,5 +1,16 @@
 from repro.serving.steps import build_decode_step, build_prefill_step
 from repro.serving.scheduler import QueryBatcher, QueryRequest, RequestScheduler
+from repro.serving.warmstart import (
+    KernelGridSpec,
+    aot_compile,
+    enable_persistent_cache,
+    enumerate_grid,
+    grid_for,
+    load_grid,
+    save_grid,
+    warm_from_manifest,
+    warmup,
+)
 
 __all__ = [
     "build_decode_step",
@@ -7,4 +18,13 @@ __all__ = [
     "RequestScheduler",
     "QueryBatcher",
     "QueryRequest",
+    "KernelGridSpec",
+    "aot_compile",
+    "enable_persistent_cache",
+    "enumerate_grid",
+    "grid_for",
+    "load_grid",
+    "save_grid",
+    "warm_from_manifest",
+    "warmup",
 ]

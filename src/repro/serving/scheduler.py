@@ -628,6 +628,102 @@ class QueryBatcher:
             for e in self._streams.values() if e.quarantined
         ]
 
+    # -- warm-state checkpoints ---------------------------------------------
+    def checkpoint_state(self, view) -> tuple[dict, dict]:
+        """Serialize the warm serving state attached to ``view``.
+
+        One shared window payload plus every batch group's query payload
+        (``group/<i>/`` prefixes) and the watcher registry (query, source,
+        method, group, quarantine flag).  Returns ``(tree, extra)`` for
+        :meth:`~repro.checkpoint.manager.CheckpointManager.save`; restore
+        with :meth:`resume`.  Checkpoints are taken between windows — the
+        batcher drains in-flight pipelined work first.
+        """
+        from repro.checkpoint.streamstate import (
+            STATE_FORMAT, query_payload, window_payload,
+        )
+
+        self._drain()
+        tree, wmeta = window_payload(view, prefix="window/")
+        groups = [b for b in self._batches.values() if b.view is view]
+        gmetas = []
+        for i, b in enumerate(groups):
+            qtree, qmeta = query_payload(b, prefix=f"group/{i}/")
+            tree.update(qtree)
+            gmetas.append(qmeta)
+        watchers = []
+        for key, e in self._streams.items():
+            if e.sq.view is not view:
+                continue
+            gi = next(i for i, b in enumerate(groups) if b is e.sq.batch)
+            watchers.append({
+                "query": key[1], "source": int(key[2]), "method": key[3],
+                "group": gi, "quarantined": bool(e.quarantined),
+            })
+        extra = {
+            "format": STATE_FORMAT,
+            "state": "query-batcher",
+            "window_meta": wmeta,
+            "groups": gmetas,
+            "watchers": watchers,
+        }
+        return tree, extra
+
+    @classmethod
+    def resume(cls, arrays: dict, extra: dict, *,
+               n_shards: Optional[int] = None, mesh=None, **kwargs):
+        """Rebuild a batcher and its warm watcher groups from a checkpoint.
+
+        ``arrays``/``extra`` are what ``CheckpointManager.load`` returns
+        (pass ``manifest["extra"]``); ``kwargs`` forward to the constructor.
+        Returns ``(batcher, view)`` — the replayed view is a NEW object, so
+        every group/watcher key is re-built against its identity, and
+        watcher TTLs are re-stamped at resume time (a restart is a liveness
+        signal, not idleness).  ``n_shards`` restores elastically onto a
+        different shard count; each group's bound fixpoints are injected
+        warm (no cold solve) and catch-up is plain
+        :meth:`advance_window` replay of the deltas recorded since the
+        checkpoint.
+        """
+        from repro.checkpoint.streamstate import (
+            STATE_FORMAT, rebuild_query, rebuild_view,
+        )
+
+        if int(extra.get("format", 0)) != STATE_FORMAT:
+            raise ValueError(
+                f"unsupported checkpoint format: {extra.get('format')}"
+            )
+        if extra.get("state") != "query-batcher":
+            raise ValueError(f"not a batcher checkpoint: {extra.get('state')}")
+        self = cls(**kwargs)
+        view = rebuild_view(
+            arrays, extra["window_meta"], prefix="window/", n_shards=n_shards
+        )
+        groups = []
+        for i, qmeta in enumerate(extra["groups"]):
+            b = rebuild_query(
+                view, arrays, qmeta, prefix=f"group/{i}/", mesh=mesh
+            )
+            # the batcher prunes shared-view history itself (min over groups)
+            b._owns_view = False
+            b._defer_fetch = self.pipelined
+            groups.append(b)
+        now = self._clock()
+        for w in extra["watchers"]:
+            b = groups[int(w["group"])]
+            if w.get("quarantined"):
+                gkey = (id(view), w["query"], w["method"], "q", int(w["source"]))
+            else:
+                gkey = (id(view), w["query"], w["method"])
+            self._batches[gkey] = b
+            key = (id(view), w["query"], int(w["source"]), w["method"])
+            self._streams[key] = _StreamEntry(
+                sq=_BatchWatcher(batch=b, source=int(w["source"])),
+                last_used=now, gkey=gkey,
+                quarantined=bool(w.get("quarantined")),
+            )
+        return self, view
+
 
 @dataclasses.dataclass
 class _StreamEntry:

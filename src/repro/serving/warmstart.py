@@ -1,0 +1,419 @@
+"""AOT kernel-grid precompilation: warm-start serving off the compile path.
+
+A streaming replica's jitted kernels are keyed by a small set of **compile
+classes** — the log's edge capacity (amortized doubling, STREAM_ALIGN
+quanta), the QRS slot capacity, the sticky ELL row count, the Q-lane
+power-of-two class, the semiring, the method, and the shard count.  A cold
+process pays an XLA compile the first time each (kernel, class) pair is hit
+— on the serving path, between slides.  This module moves all of that
+off-path:
+
+* :class:`KernelGridSpec` names one point of the grid; :func:`grid_for`
+  reads a live query's classes; :func:`enumerate_grid` expands a spec with
+  its growth successors (the classes a capacity doubling would enter).
+* :func:`aot_compile` traces the core engine kernels from
+  ``jax.ShapeDtypeStruct``\\ s and compiles them ahead of time via
+  ``fn.lower(...).compile()`` — no example data, no device transfers.
+* :func:`warmup` drives a **synthetic replica** (an empty-but-capacity-
+  matched log + query) through every serving-path entry point — cold solve,
+  monotone re-relax, parent rebuild, KickStarter trim, per-snapshot eval —
+  so the in-memory jit caches (including the vmapped and ``shard_map``
+  dispatch paths AOT cannot reach) are populated at the exact serving
+  shapes.  All-invalid masks make every fixpoint converge in one superstep,
+  so the warmup *runs* in milliseconds; only the compiles cost anything.
+* :func:`enable_persistent_cache` points JAX's persistent compilation cache
+  at a directory and :func:`save_grid`/:func:`warm_from_manifest` persist
+  the grid itself (``grid.json``), so a **restarted** replica replays the
+  manifest, re-traces against the on-disk executables, and never compiles
+  on the serving path — the crash-recovery half lives in
+  :mod:`repro.checkpoint.streamstate`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Iterable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GRID_MANIFEST = "grid.json"
+GRID_FORMAT = 1
+
+_EMPTY = np.asarray([], np.int64)
+_EMPTY_W = np.asarray([], np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGridSpec:
+    """One point of the reachable kernel grid (all fields are compile keys).
+
+    ``q_cap == 0`` is the scalar (single-source) path; ``n_shards == 0`` the
+    single-host engine.  ``qrs_capacity``/``ell_rows`` of 0 mean "whatever a
+    tiny window naturally needs" (still warms the entry points, at the
+    smallest class).
+    """
+
+    num_vertices: int
+    log_capacity: int
+    qrs_capacity: int = 0
+    semiring: str = "sssp"
+    method: str = "cqrs"
+    q_cap: int = 0
+    ell_rows: int = 0
+    ell_slot_width: int = 128
+    n_shards: int = 0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "KernelGridSpec":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    def key(self) -> str:
+        """Stable content key (manifest dedup + cache bookkeeping)."""
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def grid_for(sq) -> KernelGridSpec:
+    """Read a live streaming query's compile classes into a spec."""
+    sq._ensure_primed()
+    log = sq.view.log
+    sharded = hasattr(log, "shards")
+    if sharded:
+        cache = getattr(sq, "_ell_cache", None)
+        ell_rows = int(getattr(cache, "_row_cap", 0) or 0)
+        qrs_cap = 0  # mask-based QRS: the log capacity IS the eval class
+    else:
+        qrs_cap = int(sq._qrs.capacity)
+        ell_rows = int(sq._qrs._ell_packer.num_rows)
+    return KernelGridSpec(
+        num_vertices=int(log.num_vertices),
+        log_capacity=int(log.capacity),
+        qrs_capacity=qrs_cap,
+        semiring=sq.semiring.name,
+        method=sq.method,
+        q_cap=int(getattr(sq, "_q_cap", 0)),
+        ell_rows=ell_rows,
+        n_shards=int(log.n_shards) if sharded else 0,
+    )
+
+
+def enumerate_grid(
+    specs: Union[KernelGridSpec, Iterable[KernelGridSpec]],
+    *,
+    growth_steps: int = 0,
+) -> list[KernelGridSpec]:
+    """Dedup spec(s) and append their capacity-growth successors.
+
+    Each growth step doubles the three amortized capacities along their real
+    growth ladders (log: STREAM_ALIGN quanta; QRS slots: PAD_ALIGN; ELL
+    rows: the packer's row alignment), so a replica that repacks mid-stream
+    still finds its post-growth kernels precompiled.
+    """
+    from repro.core.qrs import PAD_ALIGN
+    from repro.graph.stream import STREAM_ALIGN
+    from repro.utils.padding import round_up
+
+    if isinstance(specs, KernelGridSpec):
+        specs = [specs]
+    out: list[KernelGridSpec] = []
+    seen: set[str] = set()
+
+    def add(s: KernelGridSpec):
+        if s.key() not in seen:
+            seen.add(s.key())
+            out.append(s)
+
+    for spec in specs:
+        add(spec)
+        s = spec
+        for _ in range(growth_steps):
+            s = dataclasses.replace(
+                s,
+                log_capacity=round_up(2 * s.log_capacity, STREAM_ALIGN),
+                qrs_capacity=(
+                    round_up(2 * s.qrs_capacity, PAD_ALIGN)
+                    if s.qrs_capacity else 0
+                ),
+                ell_rows=round_up(2 * s.ell_rows, 8) if s.ell_rows else 0,
+            )
+            add(s)
+    return out
+
+
+# ==========================================================================
+# Persistent executable cache + grid manifest
+# ==========================================================================
+def enable_persistent_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    Every compile after this call is written to disk keyed by computation
+    hash, and later processes load the executable instead of re-running XLA.
+    Returns False (without raising) on JAX builds lacking the knobs.
+    """
+    os.makedirs(cache_dir, exist_ok=True)
+    ok = True
+    for name, value in (
+        ("jax_compilation_cache_dir", str(cache_dir)),
+        ("jax_persistent_cache_min_compile_time_secs", 0),
+        ("jax_persistent_cache_min_entry_size_bytes", 0),
+    ):
+        try:
+            jax.config.update(name, value)
+        except Exception:
+            ok = False
+    return ok
+
+
+def save_grid(specs: Iterable[KernelGridSpec], cache_dir: str) -> str:
+    """Write the grid manifest next to the executable cache (atomic)."""
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, GRID_MANIFEST)
+    payload = {
+        "format": GRID_FORMAT,
+        "specs": [s.to_json() for s in specs],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+    return path
+
+
+def load_grid(cache_dir: str) -> list[KernelGridSpec]:
+    path = os.path.join(cache_dir, GRID_MANIFEST)
+    with open(path) as f:
+        payload = json.load(f)
+    if int(payload.get("format", 0)) != GRID_FORMAT:
+        raise ValueError(f"unsupported grid manifest format in {path}")
+    return [KernelGridSpec.from_json(d) for d in payload["specs"]]
+
+
+# ==========================================================================
+# AOT: trace from ShapeDtypeStructs, compile via lower().compile()
+# ==========================================================================
+def aot_compile(spec: KernelGridSpec) -> dict:
+    """Ahead-of-time compile the core engine kernels for one grid point.
+
+    Traces each jitted entry point from ``ShapeDtypeStruct``\\ s (no data,
+    no transfers) and runs the XLA compile now — with the persistent cache
+    enabled the executables land on disk.  Returns ``{kernel: "ok" | error
+    string}``.  The vmapped/``shard_map`` dispatch variants are not
+    AOT-traceable through the module-level entry points; :func:`warmup`
+    covers those by dummy invocation.
+    """
+    from repro.core.bounds import detect_uvv
+    from repro.core.concurrent import concurrent_fixpoint_batch
+    from repro.core.engine import (
+        compute_fixpoint,
+        compute_parents,
+        incremental_fixpoint,
+        invalidate_from_deletions,
+    )
+    from repro.core.semiring import get_semiring
+
+    sr = get_semiring(spec.semiring)
+    v, e = spec.num_vertices, spec.log_capacity
+
+    def f32(*s):
+        return jax.ShapeDtypeStruct(s, jnp.float32)
+
+    def i32(*s):
+        return jax.ShapeDtypeStruct(s, jnp.int32)
+
+    def b1(*s):
+        return jax.ShapeDtypeStruct(s, jnp.bool_)
+
+    def u32(*s):
+        return jax.ShapeDtypeStruct(s, jnp.uint32)
+
+    report: dict = {}
+
+    def compile_(name, fn, *args, **statics):
+        try:
+            fn.lower(*args, **statics).compile()
+            report[name] = "ok"
+        except Exception as exc:  # record, never fail the warm path
+            report[name] = f"{type(exc).__name__}: {exc}"
+
+    edge = (i32(e), i32(e), f32(e), b1(e))
+    compile_(
+        "compute_fixpoint", compute_fixpoint, *edge,
+        sr=sr, source=i32(), num_vertices=v, sorted_edges=False,
+    )
+    compile_(
+        "incremental_fixpoint", incremental_fixpoint, f32(v), *edge,
+        sr=sr, num_vertices=v, sorted_edges=False,
+    )
+    compile_(
+        "compute_parents", compute_parents, f32(v), *edge,
+        sr=sr, source=i32(), num_vertices=v, sorted_edges=False,
+    )
+    compile_(
+        "invalidate_from_deletions", invalidate_from_deletions,
+        f32(v), i32(v), b1(e), i32(e),
+        sr=sr, source=i32(), num_vertices=v,
+    )
+    compile_("detect_uvv", detect_uvv, f32(v), f32(v))
+    eq = spec.qrs_capacity
+    if eq:
+        compile_(
+            "incremental_fixpoint@qrs", incremental_fixpoint,
+            f32(v), i32(eq), i32(eq), f32(eq), b1(eq),
+            sr=sr, num_vertices=v, sorted_edges=False,
+        )
+        if spec.q_cap:
+            compile_(
+                "concurrent_fixpoint_batch@qrs", concurrent_fixpoint_batch,
+                f32(spec.q_cap, v), i32(eq), i32(eq), f32(eq),
+                u32(eq, 1), b1(eq),
+                sr=sr, num_vertices=v, num_snapshots=1, sorted_edges=False,
+            )
+    return report
+
+
+# ==========================================================================
+# Warmup: drive a synthetic replica through every serving entry point
+# ==========================================================================
+def _dummy_query(spec: KernelGridSpec):
+    """Capacity-matched synthetic replica: one edge, window of one snapshot.
+
+    Constructing the query through the public front door guarantees every
+    dummy launch has exactly the shapes/dtypes the real serving path will
+    use — the compile classes are injected the same way checkpoint restore
+    does it (``min_capacity``/``min_ell_rows``/``_q_cap``).
+    """
+    from repro.core.api import StreamingQuery, StreamingQueryBatch
+    from repro.core.qrs import PatchableQRS
+    from repro.core.semiring import get_semiring
+    from repro.graph.stream import SnapshotLog
+
+    sr = get_semiring(spec.semiring)
+    v = spec.num_vertices
+    if spec.n_shards:
+        from repro.graph.shardlog import ShardedSnapshotLog
+
+        log = ShardedSnapshotLog(v, spec.n_shards, capacity=spec.log_capacity)
+    else:
+        log = SnapshotLog(v, capacity=spec.log_capacity)
+    log.append_snapshot(
+        np.asarray([0], np.int64), np.asarray([min(1, v - 1)], np.int64),
+        np.asarray([1.0], np.float32), _EMPTY, _EMPTY,
+    )
+    if spec.q_cap:
+        sq = StreamingQueryBatch(log, sr, [0], window=1, method=spec.method)
+        sq._q_cap = max(sq._q_cap, int(spec.q_cap))
+    else:
+        sq = StreamingQuery(log, sr, 0, window=1, method=spec.method)
+    sq._ensure_primed()
+    # re-enter the spec's eval-path capacity classes (prime used the tiny
+    # window's natural ones), exactly as checkpoint restore does
+    if spec.n_shards:
+        if spec.ell_rows and spec.method == "cqrs_ell":
+            sq._ell_cache = sq._make_ell_cache(row_cap=spec.ell_rows)
+    elif spec.qrs_capacity or spec.ell_rows:
+        sq._qrs = PatchableQRS(
+            sq.view, np.asarray(sq._bounds.uvv), sr,
+            min_capacity=spec.qrs_capacity, min_ell_rows=spec.ell_rows,
+        )
+        sq._presence = {}
+    return sq
+
+
+def _warm_one(spec: KernelGridSpec) -> list[str]:
+    """Invoke every serving-path kernel for one grid point; returns labels."""
+    sq = _dummy_query(spec)  # prime: cold solve + refix + parents (+ eval)
+    hit = ["prime"]
+    b = sq._bounds
+    # eval at the spec's QRS/ELL class (snapshot t = the window's only one)
+    t = sq.view.stop - 1
+    sq._eval_snapshot(t)
+    hit.append("eval")
+    # the trim kernel only fires on deletion slides; invoke it directly with
+    # an all-False drop mask (converges immediately, same compiled shape)
+    if spec.n_shards:
+        dev, k = b._device(), b._kernels()
+        dropped = jnp.asarray(
+            np.zeros(sq.view.log.n_shards * sq.view.log.capacity, bool)
+        )
+        k["invalidate"](
+            b.val_cap, b.parent_cap, dropped, dev["src"], b.source
+        )
+    else:
+        src, _ = b._edges()
+        dropped = jnp.asarray(np.zeros(sq.view.log.capacity, bool))
+        b._invalidate(b.val_cap, b.parent_cap, dropped, src)
+    hit.append("invalidate")
+    # maintenance re-relax at the final masks (the per-slide hot pair)
+    if spec.n_shards:
+        dev, k = b._device(), b._kernels()
+        inter = b._stack(sq.view.intersection_masks())
+        b._fixpoint(k, b.val_cap, dev, dev["w_cap"], inter, tally=False)
+    else:
+        src, dst = b._edges()
+        w_cap, _ = b._weights()
+        b._refix(
+            b.val_cap, src, dst, w_cap,
+            jnp.asarray(sq.view.intersection_mask()),
+        )
+    hit.append("refix")
+    return hit
+
+
+def warmup(
+    specs: Union[KernelGridSpec, Iterable[KernelGridSpec]],
+    *,
+    cache_dir: Optional[str] = None,
+    growth_steps: int = 0,
+    aot: bool = True,
+) -> dict:
+    """Precompile the kernel grid for ``specs`` (plus growth successors).
+
+    With ``cache_dir`` the persistent executable cache is enabled first and
+    the grid manifest is written there, so a restarted process can call
+    :func:`warm_from_manifest` and reload every executable from disk.
+    Sharded grid points are skipped (and reported) when the process has
+    fewer devices than shards.  Returns a report dict.
+    """
+    if cache_dir is not None:
+        enable_persistent_cache(cache_dir)
+    grid = enumerate_grid(specs, growth_steps=growth_steps)
+    t0 = time.perf_counter()
+    report: dict = {"specs": [], "skipped": [], "aot": {}}
+    for spec in grid:
+        if spec.n_shards and len(jax.devices()) < spec.n_shards:
+            report["skipped"].append(
+                {"key": spec.key(),
+                 "reason": f"{spec.n_shards} shards > "
+                           f"{len(jax.devices())} devices"}
+            )
+            continue
+        if aot and not spec.n_shards:
+            report["aot"][spec.key()] = aot_compile(spec)
+        hit = _warm_one(spec)
+        report["specs"].append({"key": spec.key(), "warmed": hit})
+    if cache_dir is not None:
+        save_grid(grid, cache_dir)
+        report["manifest"] = os.path.join(cache_dir, GRID_MANIFEST)
+    report["seconds"] = time.perf_counter() - t0
+    return report
+
+
+def warm_from_manifest(cache_dir: str, **kwargs) -> dict:
+    """Replay a saved grid manifest: the restarted-replica warm path.
+
+    Re-traces every grid point against the persistent executable cache in
+    ``cache_dir`` — the expensive XLA compiles are disk hits — and seeds the
+    in-memory jit caches so the serving path never lowers or compiles.
+    """
+    return warmup(load_grid(cache_dir), cache_dir=cache_dir, **kwargs)

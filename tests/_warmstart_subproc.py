@@ -1,0 +1,144 @@
+"""Subprocess halves of the restarted-process compile-stability check.
+
+Run as ``python _warmstart_subproc.py <phase> <cache_dir>``:
+
+* ``warm`` — the pre-crash process: serves the stream once while probing the
+  kernel grid (``grid_for`` after prime and after every slide), then runs
+  :func:`repro.serving.warmstart.warmup` against a persistent executable
+  cache directory.  Everything the serving path will ever compile lands on
+  disk, plus the ``grid.json`` manifest.
+* ``serve`` — the restarted process: replays the manifest
+  (:func:`warm_from_manifest`), then builds the SAME replica and serves the
+  SAME stream, asserting that (a) the executable cache directory gains ZERO
+  new files from the moment the manifest replay finished — every XLA
+  compile, including the vmapped dispatch paths, is a disk hit — and (b)
+  the module-level jit cache-miss counters are frozen across the served
+  slides.  Prints ``CHECK_OK`` on success (the pytest wrapper greps for it).
+
+Prints ``SKIP`` when this JAX build lacks the persistent-cache knobs.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np  # noqa: E402
+
+V = 48
+WINDOW = 3
+SOURCES = [0, 7, 13, 21]
+
+
+def build(seed: int = 0):
+    from repro.core.api import StreamingQueryBatch
+    from repro.graph.generators import (
+        generate_evolving_stream,
+        generate_rmat,
+        generate_uniform_weights,
+    )
+    from repro.graph.stream import SnapshotLog, WindowView
+
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, V, num_snapshots=WINDOW + 4, batch_size=20,
+        readd_prob=0.4, seed=seed + 2,
+    )
+    log = SnapshotLog(V, capacity=512)
+    log.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQueryBatch(view, "sssp", SOURCES, method="cqrs_ell")
+    return sq, deltas[WINDOW - 1:]
+
+
+def _counters():
+    from repro.core.concurrent import concurrent_fixpoint_batch
+    from repro.core.engine import (
+        compute_fixpoint,
+        compute_parents,
+        incremental_fixpoint,
+        invalidate_from_deletions,
+    )
+    from repro.kernels.vrelax.ops import (
+        concurrent_fixpoint_ell,
+        concurrent_fixpoint_ell_batch,
+    )
+
+    return [
+        fn for fn in (
+            compute_fixpoint, incremental_fixpoint, compute_parents,
+            invalidate_from_deletions, concurrent_fixpoint_batch,
+            concurrent_fixpoint_ell, concurrent_fixpoint_ell_batch,
+        )
+        if hasattr(fn, "_cache_size")
+    ]
+
+
+def _listing(cache_dir):
+    return sorted(
+        os.path.relpath(os.path.join(r, f), cache_dir)
+        for r, _, fs in os.walk(cache_dir) for f in fs
+    )
+
+
+def phase_warm(cache_dir):
+    from repro.serving.warmstart import (
+        enable_persistent_cache, grid_for, warmup,
+    )
+
+    if not enable_persistent_cache(cache_dir):
+        print("SKIP: persistent compilation cache unsupported")
+        return
+    sq, pending = build()
+    sq.results
+    specs, seen = [], set()
+
+    def probe():
+        s = grid_for(sq)
+        if s.key() not in seen:
+            seen.add(s.key())
+            specs.append(s)
+
+    probe()
+    for d in pending:
+        sq.advance(d)
+        probe()
+    report = warmup(specs, cache_dir=cache_dir)
+    assert os.path.exists(report["manifest"])
+    n_exec = len(_listing(cache_dir))
+    assert n_exec > 1, "persistent cache captured no executables"
+    print(f"WARM_OK specs={len(report['specs'])} cached={n_exec}")
+
+
+def phase_serve(cache_dir):
+    from repro.serving.warmstart import (
+        enable_persistent_cache, warm_from_manifest,
+    )
+
+    if not enable_persistent_cache(cache_dir):
+        print("SKIP: persistent compilation cache unsupported")
+        return
+    report = warm_from_manifest(cache_dir)
+    assert report["specs"], "manifest replay warmed nothing"
+    on_disk = _listing(cache_dir)
+    sq, pending = build()
+    sq.results  # prime: cold solve — every compile must be a disk hit
+    fns = _counters()
+    misses = [fn._cache_size() for fn in fns]
+    for d in pending:
+        sq.advance(d)
+    assert [fn._cache_size() for fn in fns] == misses, \
+        "serving path traced new kernel variants after manifest replay"
+    new = sorted(set(_listing(cache_dir)) - set(on_disk))
+    assert not new, (
+        f"restarted process compiled {len(new)} new executables on the "
+        f"serving path: {new[:4]}"
+    )
+    print(f"CHECK_OK served={len(pending)} cached={len(on_disk)}")
+
+
+if __name__ == "__main__":
+    {"warm": phase_warm, "serve": phase_serve}[sys.argv[1]](sys.argv[2])

@@ -1,0 +1,215 @@
+"""Compile-stability pinning: AOT warm-up keeps the serving path trace-free.
+
+Satellite of the warm-start tentpole (``repro.serving.warmstart``).  Three
+independent guarantees are pinned:
+
+* **restore re-enters the exact compile classes** — a replica resumed from a
+  checkpoint mid-stream serves the remaining slides with ZERO new jit cache
+  entries (the classes were compiled by the pre-crash replica in the same
+  process, and restore injects the same capacity classes);
+* **AOT warm-up covers the probed grid** — ``jax.clear_caches()`` then
+  ``warmup(specs)`` for the specs probed off a live replica, then a fresh
+  replica primes and serves K slides with frozen cache-miss counters;
+* **a restarted process never compiles on the serving path** — subprocess
+  pair sharing a persistent executable cache directory: the second process
+  replays ``grid.json`` via ``warm_from_manifest`` and its serve loop adds
+  zero files to the cache dir and zero in-memory cache entries (covers the
+  vmapped dispatch paths the counters cannot see).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import resume_streaming, streaming_state
+from repro.core.api import StreamingQuery, StreamingQueryBatch
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.serving.warmstart import (
+    KernelGridSpec,
+    aot_compile,
+    enumerate_grid,
+    grid_for,
+    load_grid,
+    save_grid,
+    warmup,
+)
+
+V = 48
+WINDOW = 3
+SOURCES = [0, 7, 13, 21]
+
+
+def make_log(seed: int, *, capacity: int = 512):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, V, num_snapshots=WINDOW + 4, batch_size=20,
+        readd_prob=0.4, seed=seed + 2,
+    )
+    log = SnapshotLog(V, capacity=capacity)
+    log.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+    return log, deltas[WINDOW - 1:]
+
+
+def _counters():
+    from repro.core.concurrent import concurrent_fixpoint_batch
+    from repro.core.engine import (
+        compute_fixpoint,
+        compute_parents,
+        incremental_fixpoint,
+        invalidate_from_deletions,
+    )
+    from repro.kernels.vrelax.ops import (
+        concurrent_fixpoint_ell,
+        concurrent_fixpoint_ell_batch,
+    )
+
+    return [
+        fn for fn in (
+            compute_fixpoint, incremental_fixpoint, compute_parents,
+            invalidate_from_deletions, concurrent_fixpoint_batch,
+            concurrent_fixpoint_ell, concurrent_fixpoint_ell_batch,
+        )
+        if hasattr(fn, "_cache_size")
+    ]
+
+
+# ==================================================================== restore
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_restored_replica_compiles_nothing(method):
+    """Resume mid-stream and serve the tail with FROZEN jit caches: restore
+    must re-enter the pre-crash replica's exact compile classes (log
+    capacity, QRS slots, ELL rows, Q class) rather than re-deriving its own."""
+    log, pending = make_log(seed=0)
+    view = WindowView(log, size=WINDOW)
+    sq = StreamingQueryBatch(view, "sssp", SOURCES, method=method)
+    sq.results
+    ref = []
+    tree = extra = None
+    for j, d in enumerate(pending):
+        sq.advance(d)
+        ref.append(np.asarray(sq.results).copy())
+        if j == 1:
+            tree, extra = streaming_state(sq)
+    fns = _counters()
+    assert fns, "no countable jitted entry points found"
+    misses = [fn._cache_size() for fn in fns]
+    restored = resume_streaming(tree, extra)
+    np.testing.assert_array_equal(np.asarray(restored.results), ref[1])
+    for j, d in enumerate(pending[2:], start=2):
+        restored.advance(d)
+        np.testing.assert_array_equal(np.asarray(restored.results), ref[j])
+    assert [fn._cache_size() for fn in fns] == misses, \
+        "restore + catch-up traced new kernel variants"
+
+
+# ===================================================================== warmup
+def test_aot_warmup_covers_probed_grid():
+    """Probe the grid off a live replica, clear every jit cache, warm the
+    probed specs, then serve a FRESH replica: zero cache growth across the
+    served slides (vmapped dispatch counters stay frozen too)."""
+    log, pending = make_log(seed=1)
+    probe_sq = StreamingQueryBatch(
+        WindowView(log, size=WINDOW), "sssp", SOURCES, method="cqrs_ell"
+    )
+    probe_sq.results
+    specs, seen = [], set()
+    for step in range(len(pending) + 1):
+        if step:
+            probe_sq.advance(pending[step - 1])
+        s = grid_for(probe_sq)
+        if s.key() not in seen:
+            seen.add(s.key())
+            specs.append(s)
+    jax.clear_caches()
+    report = warmup(specs)
+    assert len(report["specs"]) == len(specs)
+
+    log2, pending2 = make_log(seed=1)
+    sq = StreamingQueryBatch(
+        WindowView(log2, size=WINDOW), "sssp", SOURCES, method="cqrs_ell"
+    )
+    sq.results
+    fns = _counters()
+    misses = [fn._cache_size() for fn in fns]
+    for d in pending2:
+        sq.advance(d)
+    after = [fn._cache_size() for fn in fns]
+    assert after == misses, (
+        "serving missed the warmed grid: "
+        + str([(fn.__name__, b, a)
+               for fn, b, a in zip(fns, misses, after) if a != b])
+    )
+
+
+def test_aot_compile_report_all_ok():
+    """Every AOT-traceable engine kernel lowers and compiles from
+    ShapeDtypeStructs alone for a representative grid point."""
+    spec = KernelGridSpec(
+        num_vertices=V, log_capacity=1024, qrs_capacity=384,
+        semiring="sswp", method="cqrs", q_cap=4,
+    )
+    report = aot_compile(spec)
+    bad = {k: v for k, v in report.items() if v != "ok"}
+    assert not bad, f"AOT compile failures: {bad}"
+    assert {"compute_fixpoint", "incremental_fixpoint", "compute_parents",
+            "invalidate_from_deletions", "detect_uvv",
+            "incremental_fixpoint@qrs",
+            "concurrent_fixpoint_batch@qrs"} <= set(report)
+
+
+def test_grid_manifest_roundtrip(tmp_path):
+    """grid.json survives save/load; enumerate_grid dedups by content key
+    and appends growth successors along the real capacity ladders."""
+    base = KernelGridSpec(num_vertices=V, log_capacity=1024,
+                          qrs_capacity=128, ell_rows=16, q_cap=4)
+    grid = enumerate_grid([base, base], growth_steps=2)
+    assert len(grid) == 3  # duplicate collapsed; two growth successors
+    assert grid[1].log_capacity == 2048 and grid[2].log_capacity == 4096
+    assert grid[1].qrs_capacity == 256 and grid[1].ell_rows == 32
+    path = save_grid(grid, str(tmp_path))
+    assert os.path.basename(path) == "grid.json"
+    loaded = load_grid(str(tmp_path))
+    assert [s.key() for s in loaded] == [s.key() for s in grid]
+    assert loaded[0] == grid[0]
+
+
+# ================================================================= subprocess
+def _run_subproc(phase, cache_dir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + "tests"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, os.path.join("tests", "_warmstart_subproc.py"),
+         phase, cache_dir],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+
+
+def test_restarted_process_zero_compiles_on_serving_path(tmp_path):
+    """The full warm-start story across a REAL process boundary: process A
+    probes + warms a persistent executable cache; process B replays the
+    manifest and serves — the cache dir gains zero files and the jit caches
+    zero entries during B's serve loop."""
+    cache_dir = str(tmp_path / "xla-cache")
+    warm = _run_subproc("warm", cache_dir)
+    assert warm.returncode == 0, warm.stdout + warm.stderr
+    if "SKIP" in warm.stdout:
+        pytest.skip("persistent compilation cache unsupported in this build")
+    assert "WARM_OK" in warm.stdout, warm.stdout + warm.stderr
+    serve = _run_subproc("serve", cache_dir)
+    assert serve.returncode == 0, serve.stdout + serve.stderr
+    assert "CHECK_OK" in serve.stdout, serve.stdout + serve.stderr

@@ -106,3 +106,14 @@ def test_architecture_covers_pipelined_serving():
                 "to_global_lazy", "ell_epoch", "quarantine_factor",
                 "quarantined", "sweep", "validate_bench_json"):
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
+def test_architecture_covers_warm_start_and_recovery():
+    """The warm-start/recovery section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Warm start & recovery" in text
+    for sym in ("CheckpointManager", "streaming_state", "resume_streaming",
+                "replay_log", "from_state", "KernelGridSpec", "grid_for",
+                "aot_compile", "warmup", "warm_from_manifest", "grid.json",
+                "ServeSupervisor", "HeartbeatMonitor", "ckpt_every"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"

@@ -346,7 +346,7 @@ def _run(check: str):
 @pytest.mark.parametrize(
     "check",
     ["equivalence", "growth", "serving", "shard_local", "qbatch",
-     "collectives", "ell", "rebalance"],
+     "collectives", "ell", "rebalance", "warmstart"],
 )
 def test_stream_shard_mesh(check):
     _run(check)
