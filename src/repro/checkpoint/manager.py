@@ -58,6 +58,14 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree, extra: dict | None = None) -> str:
+        from repro.obs.metrics import get_registry
+
+        with get_registry().timer(
+            "checkpoint_write_seconds", "manager.save disk commit wall time"
+        ):
+            return self._save(step, tree, extra)
+
+    def _save(self, step: int, tree, extra: dict | None = None) -> str:
         name = f"step_{step:09d}"
         tmp = os.path.join(self.directory, name + ".tmp")
         final = os.path.join(self.directory, name)
@@ -110,12 +118,17 @@ class CheckpointManager:
         own key set is returned as a flat dict.  The resolved step is pinned
         against ``keep``-pruning for the manager's lifetime.
         """
+        from repro.obs.metrics import get_registry
+
         step = self._resolve(step)
         path = os.path.join(self.directory, f"step_{step:09d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        with np.load(os.path.join(path, "arrays.npz")) as data:
-            arrays = {k: data[k] for k in data.files}
+        with get_registry().timer(
+            "checkpoint_read_seconds", "manager.load disk read wall time"
+        ):
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(path, "arrays.npz")) as data:
+                arrays = {k: data[k] for k in data.files}
         return arrays, manifest
 
     def restore(self, target_tree, step: int | None = None, shardings=None):

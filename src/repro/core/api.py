@@ -75,6 +75,8 @@ from repro.core.qrs import PatchableQRS, build_qrs
 from repro.core.semiring import Semiring, get_semiring
 from repro.graph.structures import EvolvingGraph
 from repro.graph.stream import SnapshotLog, WindowView
+from repro.obs.stability import record_slide
+from repro.obs.trace import mark_ready, span
 
 
 class EvolvingQuery:
@@ -316,10 +318,14 @@ class StreamingQuery:
 
     def _materialize_rows(self) -> None:
         """Fetch any deferred device rows to host (pipelined sync point)."""
-        self._rows = [
-            r if isinstance(r, np.ndarray) else np.asarray(r)
-            for r in self._rows
-        ]
+        if all(isinstance(r, np.ndarray) for r in self._rows):
+            return
+        with span("fetch"):
+            self._rows = [
+                r if isinstance(r, np.ndarray) else np.asarray(r)
+                for r in self._rows
+            ]
+        mark_ready("fixpoint")
 
     @property
     def diff_pos(self) -> int:
@@ -352,22 +358,23 @@ class StreamingQuery:
         a consumer reads :attr:`results`.  Identical state transitions to
         :meth:`advance` (which is exactly this plus a results fetch).
         """
-        if delta is not None:
-            self.view.log.append_snapshot(*delta)
-        if self._bounds is None:
-            self._ensure_primed()
-            return
-        t0 = time.perf_counter()
-        view = self.view
-        view.slide_to_tip()
-        try:
-            pending = view.diffs_since(self._diff_pos)
-        except LookupError:
-            # the shared view pruned slides this query never consumed —
-            # incremental state can't catch up, rebuild from the window
-            self._bounds = None
-            self._ensure_primed()
-            return
+        with span("delta_route"):
+            if delta is not None:
+                self.view.log.append_snapshot(*delta)
+            if self._bounds is None:
+                self._ensure_primed()
+                return
+            t0 = time.perf_counter()
+            view = self.view
+            view.slide_to_tip()
+            try:
+                pending = view.diffs_since(self._diff_pos)
+            except LookupError:
+                # the shared view pruned slides this query never consumed —
+                # incremental state can't catch up, rebuild from the window
+                self._bounds = None
+                self._ensure_primed()
+                return
         if len(pending) > 1 and any(d.weights_changed() for d in pending):
             # the view's window extrema already reflect the whole queue, so
             # an intermediate slide cannot be folded in with the weights it
@@ -385,10 +392,12 @@ class StreamingQuery:
             for diff, (union, inter) in zip(
                 pending, view.rolling_masks(pending)
             ):
-                steps += self._bounds.apply_slide(diff, inter, union)
-                ps = self._qrs.apply_slide(
-                    diff, np.asarray(self._bounds.uvv), union_mask=union
-                )
+                with span("bounds_refresh"):
+                    steps += self._bounds.apply_slide(diff, inter, union)
+                with span("qrs_patch"):
+                    ps = self._qrs.apply_slide(
+                        diff, np.asarray(self._bounds.uvv), union_mask=union
+                    )
                 for key in ("qrs_entered", "qrs_left", "qrs_touched"):
                     patch_stats[key] = patch_stats.get(key, 0) + ps[key]
                 patch_stats["qrs_edges"] = ps["qrs_edges"]
@@ -423,6 +432,7 @@ class StreamingQuery:
             seconds=time.perf_counter() - t0, supersteps=steps,
             advanced=len(pending), **patch_stats,
         )
+        self._publish_metrics()
 
     def _make_bounds(self):
         """Streaming bounds maintainer (overridden by the sharded subclass)."""
@@ -452,6 +462,7 @@ class StreamingQuery:
             seconds=time.perf_counter() - t0, supersteps=steps, advanced=0,
             qrs_edges=self._qrs.num_edges,
         )
+        self._publish_metrics()
 
     def _eval_snapshot(self, t: int, bounds=None) -> tuple[np.ndarray, int]:
         """Exact values for log snapshot ``t``: warm-start from R∩ over the QRS.
@@ -465,23 +476,27 @@ class StreamingQuery:
         v = self.view.log.num_vertices
         mask = self._qrs.snapshot_mask(t)
         if self.method == "cqrs":
-            src, dst, w = self._qrs.device_arrays()
-            vals, it = incremental_fixpoint(
-                bounds.val_cap, src, dst, w, jnp.asarray(mask), sr, v,
-                sorted_edges=False,
-            )
+            with span("ell_pack"):  # device-array refresh (no ELL re-pack)
+                src, dst, w = self._qrs.device_arrays()
+            with span("fixpoint"):
+                vals, it = incremental_fixpoint(
+                    bounds.val_cap, src, dst, w, jnp.asarray(mask), sr, v,
+                    sorted_edges=False,
+                )
         else:  # cqrs_ell — Pallas vrelax kernel over row-split ELL
             from repro.kernels.vrelax.ops import concurrent_fixpoint_ell
 
             # full slot capacity at sticky row count: shapes — and therefore
             # the jitted kernel path — are stable across slides; invalid
             # slots carry all-zero presence words and mask out in-kernel
-            ell = self._qrs.ell_pack()
-            presence_ell = self._presence_plane(ell, mask)
-            vals, it = concurrent_fixpoint_ell(
-                bounds.val_cap, ell, presence_ell, sr, v, 1
-            )
-            vals = vals[0]
+            with span("ell_pack"):
+                ell = self._qrs.ell_pack()
+                presence_ell = self._presence_plane(ell, mask)
+            with span("fixpoint"):
+                vals, it = concurrent_fixpoint_ell(
+                    bounds.val_cap, ell, presence_ell, sr, v, 1
+                )
+                vals = vals[0]
         if self._defer_fetch:
             return vals, it
         return np.asarray(vals), int(it)
@@ -547,6 +562,12 @@ class StreamingQuery:
             "qrs_edges": self._qrs.num_edges,
             **kw,
         }
+
+    def _publish_metrics(self) -> None:
+        """Export this advance's stability telemetry (both serving routes:
+        ``advance``/``advance_nowait`` call this after ``_set_stats``, so
+        the synchronous and pipelined paths share one accounting)."""
+        record_slide(self)
 
 
 class StreamingQueryBatch(StreamingQuery):
@@ -676,23 +697,27 @@ class StreamingQueryBatch(StreamingQuery):
         if self.method == "cqrs":
             from repro.core.concurrent import concurrent_fixpoint_batch
 
-            src, dst, w = self._qrs.device_arrays()
-            presence = jnp.asarray(mask.astype(np.uint32).reshape(-1, 1))
-            vals, it = concurrent_fixpoint_batch(
-                self._bounds.val_cap, src, dst, w, presence,
-                jnp.asarray(mask), sr, v, 1, sorted_edges=False,
-            )
-            vals = vals[:, 0]
+            with span("ell_pack"):  # device-array refresh of the QRS edges
+                src, dst, w = self._qrs.device_arrays()
+                presence = jnp.asarray(mask.astype(np.uint32).reshape(-1, 1))
+            with span("fixpoint"):
+                vals, it = concurrent_fixpoint_batch(
+                    self._bounds.val_cap, src, dst, w, presence,
+                    jnp.asarray(mask), sr, v, 1, sorted_edges=False,
+                )
+                vals = vals[:, 0]
         else:  # cqrs_ell: Q folded into the kernel's snapshot axis
             from repro.kernels.vrelax.ops import concurrent_fixpoint_ell_batch
 
-            ell = self._qrs.ell_pack()
-            q = self._q_cap  # padded lane count (sticky compile class)
-            presence_ell = self._presence_plane(ell, mask, num_queries=q)
-            vals, it = concurrent_fixpoint_ell_batch(
-                self._bounds.val_cap, ell, presence_ell, sr, v, 1, q
-            )
-            vals = vals[:, 0]
+            with span("ell_pack"):
+                ell = self._qrs.ell_pack()
+                q = self._q_cap  # padded lane count (sticky compile class)
+                presence_ell = self._presence_plane(ell, mask, num_queries=q)
+            with span("fixpoint"):
+                vals, it = concurrent_fixpoint_ell_batch(
+                    self._bounds.val_cap, ell, presence_ell, sr, v, 1, q
+                )
+                vals = vals[:, 0]
         if self._defer_fetch:
             return vals, it
         return np.asarray(vals), int(it)

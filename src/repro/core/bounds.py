@@ -227,6 +227,11 @@ class StreamingBounds:
                 raise ValueError("StreamingBounds needs at least one source")
             self.source = jnp.asarray(self.sources, jnp.int32)
         self.supersteps = 0
+        # KickStarter-style maintenance accounting: trims = invalidation
+        # launches (deletion-driven), rerelaxes = monotone re-relax launches
+        # (per slide side; exported as paper-grounded stability telemetry)
+        self.trims = 0
+        self.rerelaxes = 0
         # per-lane superstep accounting (batched mode): lane ``i`` accumulates
         # its own freeze steps — the superstep at which the vmapped while_loop
         # froze its carry — instead of the lockstep max, so serving can spot
@@ -529,8 +534,10 @@ class StreamingBounds:
                 self.val_cap = self._invalidate(
                     self.val_cap, self.parent_cap, jnp.asarray(cap_dropped), src
                 )
+                self.trims += 1
             self.val_cap, it = self._refix(self.val_cap, src, dst, w_cap, inter)
             self.parent_cap = self._parents(self.val_cap, src, dst, w_cap, inter)
+            self.rerelaxes += 1
             steps += self._tally(it)
 
         cup_dropped = _as_mask(cap_n, diff.union_lost, cup_weight_worse)
@@ -545,8 +552,10 @@ class StreamingBounds:
                 self.val_cup = self._invalidate(
                     self.val_cup, self.parent_cup, jnp.asarray(cup_dropped), src
                 )
+                self.trims += 1
             self.val_cup, it = self._refix(self.val_cup, src, dst, w_cup, union)
             self.parent_cup = self._parents(self.val_cup, src, dst, w_cup, union)
+            self.rerelaxes += 1
             steps += self._tally(it)
 
         self.supersteps += steps

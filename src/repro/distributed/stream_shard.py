@@ -56,6 +56,7 @@ from repro.core.engine import PARENT_FRAGILE
 from repro.core.qrs import PatchableQRS
 from repro.core.semiring import Semiring
 from repro.graph.shardlog import ShardedSnapshotLog, ShardedWindowView
+from repro.obs.trace import span
 from repro.utils.padding import pad_to
 
 MODEL_AXIS = "model"
@@ -595,6 +596,8 @@ class ShardedStreamingBounds:
             self.source = jnp.asarray(self.sources, jnp.int32)
         self.supersteps = 0
         self.launches = 0  # shard_map kernel launches (bench accounting)
+        self.trims = 0      # invalidation launches (same ledger as the
+        self.rerelaxes = 0  # single-host StreamingBounds — obs/stability)
         self.lane_supersteps = (
             None if self.sources is None
             else np.zeros(len(self.sources), np.int64)
@@ -788,6 +791,7 @@ class ShardedStreamingBounds:
                     self.source,
                 )
                 self.launches += 1
+                self.trims += 1
             self.val_cap, it = self._fixpoint(
                 k, self.val_cap, dev, dev["w_cap"], inter
             )
@@ -796,6 +800,7 @@ class ShardedStreamingBounds:
                 inter, self.source,
             )
             self.launches += 1
+            self.rerelaxes += 1
             steps += it
 
         cup_drop_ids = [
@@ -816,6 +821,7 @@ class ShardedStreamingBounds:
                     self.source,
                 )
                 self.launches += 1
+                self.trims += 1
             self.val_cup, it = self._fixpoint(
                 k, self.val_cup, dev, dev["w_cup"], union
             )
@@ -824,6 +830,7 @@ class ShardedStreamingBounds:
                 union, self.source,
             )
             self.launches += 1
+            self.rerelaxes += 1
             steps += it
 
         self.supersteps += steps
@@ -1148,24 +1155,28 @@ class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):
         """
         bounds = self._bounds if bounds is None else bounds
         if self.method == "cqrs":
-            dev, k = bounds._device(), bounds._kernels()
-            mask = bounds._stack(self._qrs.snapshot_masks(t))
-            vals, it = bounds._fixpoint(
-                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False,
-                fetch=not self._defer_fetch,
-            )
+            with span("ell_pack"):  # shard-local device-array refresh
+                dev, k = bounds._device(), bounds._kernels()
+                mask = bounds._stack(self._qrs.snapshot_masks(t))
+            with span("fixpoint"):
+                vals, it = bounds._fixpoint(
+                    k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False,
+                    fetch=not self._defer_fetch,
+                )
             if self._defer_fetch:
                 return bounds.to_global_lazy(vals), it
             return bounds.to_global(vals), it
         # cqrs_ell — per-shard Pallas vrelax under shard_map: shard-local
         # ELL tiles, one all-gather of the per-vertex state per superstep
-        _, dev = self._ell().pack()
-        words = self._ell().presence(self._qrs.snapshot_masks(t))
-        k = self._ell_kernels()
-        vals, it = k["fixpoint"](
-            bounds.val_cap, dev["src"], dev["weight"], words,
-            dev["row2vertex"],
-        )
+        with span("ell_pack"):
+            _, dev = self._ell().pack()
+            words = self._ell().presence(self._qrs.snapshot_masks(t))
+        with span("fixpoint"):
+            k = self._ell_kernels()
+            vals, it = k["fixpoint"](
+                bounds.val_cap, dev["src"], dev["weight"], words,
+                dev["row2vertex"],
+            )
         bounds.launches += 1
         if self._defer_fetch:
             return bounds.to_global_lazy(vals), it
@@ -1232,27 +1243,31 @@ class ShardedStreamingQueryBatch(_ShardedEllMixin, StreamingQueryBatch):
         """Exact ``(Q, V)`` values for log snapshot ``t`` in ONE launch."""
         bounds = self._bounds
         if self.method == "cqrs":
-            dev, k = bounds._device(), bounds._kernels()
-            mask = bounds._stack(self._qrs.snapshot_masks(t))
-            vals, it = bounds._fixpoint(
-                k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False,
-                fetch=not self._defer_fetch,
-            )
+            with span("ell_pack"):  # shard-local device-array refresh
+                dev, k = bounds._device(), bounds._kernels()
+                mask = bounds._stack(self._qrs.snapshot_masks(t))
+            with span("fixpoint"):
+                vals, it = bounds._fixpoint(
+                    k, bounds.val_cap, dev, dev["w_cap"], mask, tally=False,
+                    fetch=not self._defer_fetch,
+                )
             if self._defer_fetch:
                 return bounds.to_global_lazy(vals), it
             return bounds.to_global(vals), it
         # cqrs_ell: Q folded into the per-shard kernel's snapshot axis —
         # still one shard_map launch, one all-gather per superstep
-        _, dev = self._ell().pack()
-        q = int(bounds.val_cap.shape[0])
-        words = self._ell().presence(
-            self._qrs.snapshot_masks(t), num_queries=q
-        )
-        k = self._ell_kernels()
-        vals, it, _ = k["fixpoint_q"](
-            bounds.val_cap, dev["src"], dev["weight"], words,
-            dev["row2vertex"],
-        )
+        with span("ell_pack"):
+            _, dev = self._ell().pack()
+            q = int(bounds.val_cap.shape[0])
+            words = self._ell().presence(
+                self._qrs.snapshot_masks(t), num_queries=q
+            )
+        with span("fixpoint"):
+            k = self._ell_kernels()
+            vals, it, _ = k["fixpoint_q"](
+                bounds.val_cap, dev["src"], dev["weight"], words,
+                dev["row2vertex"],
+            )
         bounds.launches += 1
         if self._defer_fetch:
             return bounds.to_global_lazy(vals), it

@@ -4,12 +4,22 @@ Workers post monotonic timestamps; a worker is declared dead after
 ``timeout`` without a beat.  The supervisor (ft/recovery.py) polls
 ``dead_workers`` each step and triggers checkpoint-restart / elastic
 rescale when membership changes.
+
+Missed-beat detections are no longer silent: each newly-declared death
+emits a structured ``missed_beat`` JSON-lines event (worker id, beat age)
+to the optional :class:`~repro.obs.export.EventLog`, and every worker's
+last-beat age is exported as a lazy ``heartbeat_last_beat_age_seconds``
+gauge — the closure reads the clock at scrape time, so the hot path
+(``beat``) stays a dict write.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Optional
+
+from repro.obs.export import EventLog
+from repro.obs.metrics import get_registry
 
 
 @dataclasses.dataclass
@@ -17,11 +27,25 @@ class HeartbeatMonitor:
     num_workers: int
     timeout: float = 60.0
     clock: Callable[[], float] = time.monotonic
+    events: Optional[EventLog] = None
 
     def __post_init__(self):
         now = self.clock()
         self.last_beat = {w: now for w in range(self.num_workers)}
         self.declared_dead: set[int] = set()
+        reg = get_registry()
+        gauge = reg.gauge(
+            "heartbeat_last_beat_age_seconds",
+            "seconds since each worker's last heartbeat (lazy: read at scrape)",
+        )
+        for w in range(self.num_workers):
+            gauge.set(self._age_reader(w), worker=str(w))
+
+    def _age_reader(self, worker: int) -> Callable[[], float]:
+        def _age() -> float:
+            return self.clock() - self.last_beat[worker]
+
+        return _age
 
     def beat(self, worker: int, at: float | None = None):
         if worker in self.declared_dead:
@@ -34,6 +58,15 @@ class HeartbeatMonitor:
         for w, t in self.last_beat.items():
             if w not in self.declared_dead and now - t > self.timeout:
                 self.declared_dead.add(w)
+                get_registry().counter(
+                    "heartbeat_missed_beats_total",
+                    "workers declared dead by beat timeout",
+                ).inc(worker=str(w))
+                if self.events is not None:
+                    self.events.emit(
+                        "missed_beat", worker=w, age=now - t,
+                        timeout=self.timeout,
+                    )
         return set(self.declared_dead)
 
     def alive_count(self) -> int:

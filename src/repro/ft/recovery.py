@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.ft.heartbeat import HeartbeatMonitor
+from repro.obs.export import EventLog
+from repro.obs.metrics import get_registry
 
 
 @dataclasses.dataclass
@@ -93,6 +95,14 @@ class ServeSupervisor:
     ``heartbeat``: optional :class:`~repro.ft.heartbeat.HeartbeatMonitor` —
     a beat is posted per served slide and the worker is re-admitted after a
     restart, so a supervisor-of-supervisors can watch replica liveness.
+
+    ``events``: optional :class:`~repro.obs.export.EventLog` — each restart
+    emits a structured ``restart`` JSON-lines event carrying the failure
+    cause, the slide restored to, and the catch-up depth (slides that will
+    be re-served by delta replay); restarts are also counted in the
+    ``serving_restarts_total`` registry counter and checkpoint save/restore
+    wall times land in ``checkpoint_save_seconds``/
+    ``checkpoint_restore_seconds`` histograms.
     """
 
     manager: CheckpointManager
@@ -100,6 +110,7 @@ class ServeSupervisor:
     max_restarts: int = 10
     heartbeat: Optional[HeartbeatMonitor] = None
     worker: int = 0
+    events: Optional[EventLog] = None
 
     def run(
         self,
@@ -120,10 +131,13 @@ class ServeSupervisor:
         """
         from repro.checkpoint.streamstate import resume_streaming, streaming_state
 
+        reg = get_registry()
         deltas = list(deltas)
         replica.results  # prime: the cold solve happens before traffic
-        tree, extra = streaming_state(replica)
-        self.manager.save(0, tree, extra=extra)
+        with reg.timer("checkpoint_save_seconds",
+                       "streaming-state serialize + manager.save wall time"):
+            tree, extra = streaming_state(replica)
+            self.manager.save(0, tree, extra=extra)
         served: dict[int, np.ndarray] = {}
         step = 0
         restarts = 0
@@ -135,18 +149,37 @@ class ServeSupervisor:
                 if self.heartbeat is not None:
                     self.heartbeat.beat(self.worker)
                 if step % self.ckpt_every == 0 or step == len(deltas):
-                    tree, extra = streaming_state(replica)
-                    self.manager.save(step, tree, extra=extra)
-            except Exception:
+                    with reg.timer(
+                        "checkpoint_save_seconds",
+                        "streaming-state serialize + manager.save wall time",
+                    ):
+                        tree, extra = streaming_state(replica)
+                        self.manager.save(step, tree, extra=extra)
+            except Exception as exc:
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise
-                arrays, manifest = self.manager.load()
-                replica = resume_streaming(
-                    arrays, manifest["extra"],
-                    n_shards=n_shards, mesh=mesh, method=method,
-                )
+                failed_step = step
+                with reg.timer(
+                    "checkpoint_restore_seconds",
+                    "manager.load + warm resume wall time",
+                ):
+                    arrays, manifest = self.manager.load()
+                    replica = resume_streaming(
+                        arrays, manifest["extra"],
+                        n_shards=n_shards, mesh=mesh, method=method,
+                    )
                 step = int(manifest["step"])
+                reg.counter(
+                    "serving_restarts_total",
+                    "replica crash → checkpoint-restore restarts",
+                ).inc(worker=str(self.worker))
+                if self.events is not None:
+                    self.events.emit(
+                        "restart", worker=self.worker, cause=repr(exc),
+                        failed_slide=failed_step, restore_slide=step,
+                        catchup_depth=failed_step - step,
+                    )
                 if self.heartbeat is not None:
                     self.heartbeat.readmit(self.worker)
                 if on_restore is not None:

@@ -158,11 +158,26 @@ class StableEllPacker:
         :class:`repro.distributed.stream_shard._ShardedEllCache`) passes the
         group-wide capacity here so every member packs identical row counts.
         """
+        from repro.obs.metrics import get_registry
+
+        reg = get_registry()
         need = max(self._natural_rows(dst), int(min_rows))
         if need > self.num_rows:
             # growth: double past the immediate need, then pack exactly once
             floor = max(need, 2 * self.num_rows) if self.num_rows else need
             self.num_rows = round_up(floor, self.row_align)
+            # a capacity-class transition recompiles every ELL consumer —
+            # the signal the AOT grid / warm-start work keys on
+            reg.counter(
+                "ell_class_transitions_total",
+                "sticky ELL row-capacity growth events (recompile class)",
+            ).inc()
+            reg.gauge(
+                "ell_row_capacity", "current sticky ELL row capacity"
+            ).set(self.num_rows)
+        reg.counter(
+            "ell_repacks_total", "StableEllPacker pack_ell invocations"
+        ).inc()
         ell = pack_ell(
             src, dst, weight, self.num_vertices,
             slot_width=self.slot_width, row_align=self.row_align,

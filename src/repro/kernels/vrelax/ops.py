@@ -210,11 +210,13 @@ class EllPresenceCache:
             self._plane = jnp.asarray(plane)
             self._mask = mask.copy()
             self.rebuilds += 1
+            _obs_presence(rebuild=True)
             return self._plane
         (diff,) = np.nonzero(mask != self._mask)
         diff = diff[self._rows[diff] >= 0]  # slot-less ids cannot scatter
         self._mask = mask.copy()
         self.touched.append(int(len(diff)))
+        _obs_presence(touched=len(diff))
         if len(diff) == 0:
             return self._plane
         rows = self._rows[diff]
@@ -231,6 +233,32 @@ class EllPresenceCache:
             jnp.asarray(rows), jnp.asarray(cols)
         ].set(jnp.asarray(vals))
         return self._plane
+
+
+def _obs_presence(*, rebuild: bool = False, touched: int = 0) -> None:
+    """Mirror presence-plane maintenance into the metrics registry.
+
+    The per-cache ``touched``/``rebuilds`` attributes stay the pinned
+    source of truth (tests and ``presence_stats`` read them); the registry
+    aggregates across every cache instance on BOTH serving routes — the
+    unified accounting the pipelined path previously lacked.
+    """
+    from repro.obs.metrics import get_registry
+
+    reg = get_registry()
+    if not reg.enabled:
+        return
+    if rebuild:
+        reg.counter(
+            "presence_rebuilds_total", "full presence-plane rebuilds"
+        ).inc()
+    else:
+        reg.counter(
+            "presence_updates_total", "incremental presence scatters"
+        ).inc()
+        reg.counter(
+            "presence_touched_slots_total", "slots flipped by presence scatters"
+        ).inc(touched)
 
 
 def vrelax_partial(

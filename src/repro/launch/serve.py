@@ -1,28 +1,31 @@
-"""Serving launcher: batched decode with the request scheduler (smoke config).
+"""Serving launcher: LM decode smoke OR a live streaming-graph replica.
 
+    # batched decode with the request scheduler (smoke config)
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 8
+
+    # streaming-graph serving replica with live telemetry:
+    # watch Q sources over a sliding window of an RMAT delta stream, serve
+    # every slide through the pipelined QueryBatcher, and expose the metrics
+    # registry on a Prometheus /metrics scrape endpoint
+    PYTHONPATH=src python -m repro.launch.serve --mode stream \
+        --watchers 8 --slides 16 --prom-port 9464 --metrics-jsonl slides.jsonl
+
+Imports are gated per mode so the stream replica never pulls the LM stack
+(and vice versa).
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_arch, list_archs
-from repro.models.params import init_params
-from repro.models.transformer import cache_defs, decode_step, transformer_defs
-from repro.serving.scheduler import Request, RequestScheduler
+def run_decode(args) -> None:
+    import jax
+    import jax.numpy as jnp
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma-2b",
-                    choices=[a for a in list_archs() if get_arch(a).family == "lm"])
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
-    args = ap.parse_args()
+    from repro.configs import get_arch
+    from repro.models.params import init_params
+    from repro.models.transformer import cache_defs, decode_step, transformer_defs
+    from repro.serving.scheduler import Request, RequestScheduler
 
     cfg = get_arch(args.arch).smoke_config
     defs = transformer_defs(cfg)
@@ -47,6 +50,129 @@ def main():
     for r in sorted(done, key=lambda r: r.uid)[:4]:
         print(f"req {r.uid}: {r.prompt} → {r.generated}")
     print(f"served {len(done)}/{args.requests} requests with {args.arch} smoke config")
+
+
+def run_stream(args) -> None:
+    """Streaming-graph serving replica with the full telemetry stack on.
+
+    One pipelined :class:`~repro.serving.scheduler.QueryBatcher` serves
+    ``--watchers`` sources over a size-``--window`` sliding window; each
+    slide's stability gauges (UVV fraction, QRS fractions, bounds-match
+    rate) and phase spans land in the process registry, scrapeable live at
+    ``--prom-port`` and appended per slide to ``--metrics-jsonl``.
+    """
+    import numpy as np
+
+    from repro.graph.generators import (
+        generate_evolving_stream, generate_rmat, generate_uniform_weights,
+    )
+    from repro.graph.stream import SnapshotLog, WindowView
+    from repro.obs.export import serve_prometheus, to_prometheus
+    from repro.obs.trace import Tracer, tracing
+    from repro.serving.scheduler import QueryBatcher
+
+    v, e, s = args.vertices, args.vertices * 8, args.window
+    src, dst = generate_rmat(v, e, seed=7)
+    w = generate_uniform_weights(len(src), seed=8, grid=16)
+    base, deltas = generate_evolving_stream(
+        src, dst, w, v, num_snapshots=s + args.slides + 1,
+        batch_size=args.delta_batch, seed=9,
+    )
+    log = SnapshotLog(v, capacity=e + (s + args.slides + 1) * args.delta_batch)
+    log.append_snapshot(*base)
+    for d in deltas[: s - 1]:
+        log.append_snapshot(*d)
+    view = WindowView(log, size=s)
+
+    server = None
+    if args.prom_port is not None:
+        server = serve_prometheus(args.prom_port)
+        print(f"prometheus: http://127.0.0.1:{server.server_port}/metrics")
+
+    rng = np.random.default_rng(13)
+    sources = sorted(int(x) for x in rng.choice(v, size=args.watchers, replace=False))
+    qb = QueryBatcher(method="cqrs_ell", pipelined=True)
+    tracer = Tracer()
+    with tracing(tracer):
+        for x in sources:
+            qb.watch(view, args.query, x, method="cqrs_ell")
+        pending = None
+        for k, d in enumerate(deltas[s - 1 : s - 1 + args.slides]):
+            nxt = qb.advance_window_async(view, d)
+            if pending is not None:
+                pending.result()
+                _report_slide(k - 1, args)
+            pending = nxt
+        pending.result()
+        _report_slide(args.slides - 1, args)
+    qb.close()
+
+    phases = sorted(tracer.names())
+    print(f"served {args.slides} slides x {args.watchers} watchers "
+          f"({args.query}, window={s}); traced phases: {', '.join(phases)}")
+    if server is not None:
+        n = len(to_prometheus().splitlines())
+        print(f"final scrape: {n} exposition lines "
+              f"(http://127.0.0.1:{server.server_port}/metrics)")
+        if args.linger:
+            import time
+            print(f"lingering {args.linger}s for scrapes...")
+            time.sleep(args.linger)
+        server.shutdown()
+
+
+def _report_slide(k: int, args) -> None:
+    from repro.obs.export import write_jsonl
+    from repro.obs.metrics import get_registry
+
+    if args.metrics_jsonl:
+        write_jsonl(args.metrics_jsonl, slide=k)
+    line = f"slide {k}: served"
+    for name, fmt in (("stream_uvv_fraction", "uvv={:.3f}"),
+                      ("stream_qrs_edge_fraction", "qrs_edges={:.3f}"),
+                      ("stream_bounds_match_rate", "match={:.3f}")):
+        samples = get_registry().gauge(name).samples()  # resolves lazies
+        if samples:
+            vals = [v for _, v in samples]
+            line += "  " + fmt.format(sum(vals) / len(vals))
+    print(line, flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="decode", choices=["decode", "stream"],
+                    help="decode: LM request-scheduler smoke; stream: live "
+                         "streaming-graph replica with telemetry")
+    # decode-mode knobs
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    # stream-mode knobs
+    ap.add_argument("--query", default="sssp")
+    ap.add_argument("--watchers", type=int, default=8)
+    ap.add_argument("--vertices", type=int, default=512)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--slides", type=int, default=8)
+    ap.add_argument("--delta-batch", type=int, default=64,
+                    help="edge insertions/deletions per stream delta")
+    ap.add_argument("--prom-port", type=int, default=None, metavar="PORT",
+                    help="expose the registry at /metrics on PORT (0 = any "
+                         "free port); stream mode only")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append one registry snapshot per served slide")
+    ap.add_argument("--linger", type=float, default=0.0,
+                    help="keep the /metrics endpoint up this many seconds "
+                         "after the last slide")
+    args = ap.parse_args()
+    if args.mode == "stream":
+        run_stream(args)
+    else:
+        from repro.configs import get_arch, list_archs
+        lm = [a for a in list_archs() if get_arch(a).family == "lm"]
+        if args.arch not in lm:
+            raise SystemExit(f"--arch must be one of {lm}")
+        run_decode(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Unified observability: metrics registry, slide tracing, stability telemetry.
+
+Layers (see the module docstrings for the contracts):
+
+* :mod:`repro.obs.metrics` — lock-cheap counters/gauges/histograms with
+  lazy (device-side) gauge values; :func:`get_registry` is the process
+  default everything records to.
+* :mod:`repro.obs.trace` — span API over every phase of a window slide,
+  thread-shared so the pipelined worker is visible, with
+  ``jax.profiler.TraceAnnotation`` for XLA-profile attribution.
+* :mod:`repro.obs.stability` — the paper's study-table statistics (UVV
+  fraction, QRS vertex/edge subgraph fractions, trims/re-relaxes, per-lane
+  supersteps) as a live per-slide time series.
+* :mod:`repro.obs.export` — JSON-lines snapshots, Prometheus text format,
+  the structured :class:`~repro.obs.export.EventLog`, and a stdlib
+  ``/metrics`` scrape server.
+"""
+from .export import (  # noqa: F401
+    EventLog,
+    serve_prometheus,
+    snapshot,
+    to_jsonl,
+    to_prometheus,
+    write_jsonl,
+)
+from .metrics import (  # noqa: F401
+    MetricsRegistry,
+    disabled,
+    get_registry,
+    use_registry,
+)
+from .stability import record_slide, window_union_edges  # noqa: F401
+from .trace import (  # noqa: F401
+    PHASES,
+    Tracer,
+    get_tracer,
+    mark_ready,
+    span,
+    tracing,
+)

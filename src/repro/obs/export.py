@@ -1,0 +1,174 @@
+"""Export surfaces: JSON-lines snapshots, Prometheus text format, events.
+
+This module is the *sync point* of the observability layer: lazy gauge
+values (callables, device arrays) recorded on the hot path are resolved
+here, when an operator scrapes or a bench writes a snapshot — never during
+a slide.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import IO, Optional, Union
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, get_registry
+
+
+def _labels_str(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(
+        f'{k}="{str(v)}"' for k, v in sorted(labels.items())
+    )
+    return "{" + inner + "}"
+
+
+def snapshot(registry: Optional[MetricsRegistry] = None) -> dict:
+    """Resolve every instrument to plain JSON-serializable values.
+
+    Shape: ``{"counters": {...}, "gauges": {...}, "histograms": {...}}``
+    with flat ``name{label="v"}`` keys, matching the Prometheus exposition
+    names so the two formats are cross-referenceable.
+    """
+    reg = registry if registry is not None else get_registry()
+    out = {"counters": {}, "gauges": {}, "histograms": {}}
+    for inst in reg.instruments():
+        if isinstance(inst, Counter):
+            for labels, v in inst.samples():
+                out["counters"][inst.name + _labels_str(labels)] = v
+        elif isinstance(inst, Gauge):
+            for labels, v in inst.samples():
+                out["gauges"][inst.name + _labels_str(labels)] = v
+        elif isinstance(inst, Histogram):
+            for labels, snap in inst.samples():
+                out["histograms"][inst.name + _labels_str(labels)] = {
+                    "le": [b if b != float("inf") else "+Inf"
+                           for b in inst.buckets],
+                    "buckets": snap["buckets"],
+                    "sum": snap["sum"],
+                    "count": snap["count"],
+                }
+    return out
+
+
+def to_jsonl(registry: Optional[MetricsRegistry] = None, **extra) -> str:
+    """One JSON line: a timestamped :func:`snapshot` plus ``extra`` keys."""
+    rec = {"ts": time.time(), **extra, **snapshot(registry)}
+    return json.dumps(rec, sort_keys=True)
+
+
+def write_jsonl(path, registry: Optional[MetricsRegistry] = None, **extra) -> None:
+    with open(path, "a") as f:
+        f.write(to_jsonl(registry, **extra) + "\n")
+
+
+def to_prometheus(registry: Optional[MetricsRegistry] = None) -> str:
+    """Render the registry in the Prometheus text exposition format."""
+    reg = registry if registry is not None else get_registry()
+    lines: list[str] = []
+    for inst in reg.instruments():
+        if inst.help:
+            lines.append(f"# HELP {inst.name} {inst.help}")
+        if isinstance(inst, Counter):
+            lines.append(f"# TYPE {inst.name} counter")
+            for labels, v in inst.samples():
+                lines.append(f"{inst.name}{_labels_str(labels)} {v}")
+        elif isinstance(inst, Gauge):
+            lines.append(f"# TYPE {inst.name} gauge")
+            for labels, v in inst.samples():
+                lines.append(f"{inst.name}{_labels_str(labels)} {v}")
+        elif isinstance(inst, Histogram):
+            lines.append(f"# TYPE {inst.name} histogram")
+            for labels, snap in inst.samples():
+                for b, c in zip(inst.buckets, snap["buckets"]):
+                    le = "+Inf" if b == float("inf") else repr(b)
+                    bl = dict(labels, le=le)
+                    lines.append(f"{inst.name}_bucket{_labels_str(bl)} {c}")
+                lines.append(
+                    f"{inst.name}_sum{_labels_str(labels)} {snap['sum']}"
+                )
+                lines.append(
+                    f"{inst.name}_count{_labels_str(labels)} {snap['count']}"
+                )
+    return "\n".join(lines) + "\n"
+
+
+class EventLog:
+    """Structured JSON-lines event sink (restarts, missed beats, evictions).
+
+    Events are appended to an in-memory list (for tests and supervisors that
+    inspect recent history) and, when a ``path`` or stream is given, written
+    through as one JSON object per line.
+    """
+
+    def __init__(self, path: Optional[Union[str, IO]] = None):
+        self.events: list[dict] = []
+        self._lock = threading.Lock()
+        self._stream: Optional[IO] = None
+        self._path: Optional[str] = None
+        if path is None:
+            pass
+        elif hasattr(path, "write"):
+            self._stream = path
+        else:
+            self._path = str(path)
+
+    def emit(self, kind: str, **fields) -> dict:
+        rec = {"ts": time.time(), "event": kind, **fields}
+        line = json.dumps(rec, sort_keys=True, default=str)
+        with self._lock:
+            self.events.append(rec)
+            if self._stream is not None:
+                self._stream.write(line + "\n")
+                self._stream.flush()
+            elif self._path is not None:
+                with open(self._path, "a") as f:
+                    f.write(line + "\n")
+        return rec
+
+    def of_kind(self, kind: str) -> list:
+        with self._lock:
+            return [e for e in self.events if e["event"] == kind]
+
+
+def serve_prometheus(
+    port: int,
+    registry: Optional[MetricsRegistry] = None,
+    *,
+    host: str = "127.0.0.1",
+):
+    """Start a daemon-thread HTTP server exposing ``/metrics`` for scraping.
+
+    Stdlib-only (``http.server``); returns the server object — call
+    ``.shutdown()`` to stop.  Port 0 picks a free port (``server_port``
+    tells you which).
+    """
+    import http.server
+
+    reg = registry if registry is not None else get_registry()
+
+    class _Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 (http.server API)
+            if self.path.rstrip("/") not in ("", "/metrics"):
+                self.send_response(404)
+                self.end_headers()
+                return
+            body = to_prometheus(reg).encode()
+            self.send_response(200)
+            self.send_header(
+                "Content-Type", "text/plain; version=0.0.4; charset=utf-8"
+            )
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):
+            pass
+
+    server = http.server.ThreadingHTTPServer((host, port), _Handler)
+    thread = threading.Thread(
+        target=server.serve_forever, name="prom-scrape", daemon=True
+    )
+    thread.start()
+    return server

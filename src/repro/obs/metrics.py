@@ -1,0 +1,263 @@
+"""Lock-cheap metrics registry: counters, gauges, histograms.
+
+The serving stack's quantitative story — UVV rates, QRS subgraph fractions,
+presence-scatter sizes, cache hit ratios, per-phase slide latencies — was
+scattered across ad-hoc attributes (``cache_info()`` tuples, ``stats``
+dicts, test-pinned counter lists).  This registry gives them one home with
+two hard requirements:
+
+* **Near-zero hot-path cost.**  Recording is a Python int/float update (no
+  locks on the increment path — CPython's GIL makes the single ``+=`` safe
+  enough for monitoring data, and torn reads cost a sample, not
+  correctness).  When the registry is disabled every instrument is a single
+  attribute check and an early return.
+* **No device syncs.**  A gauge may hold a *lazy* value — a callable or a
+  device array — which is resolved to a float only when a snapshot is
+  collected (:func:`repro.obs.export.snapshot`).  The serving path records
+  device-side scalars as-is and the fetch rides the existing
+  ``_defer_fetch`` materialization points; export is the sync point, never
+  the slide loop.
+
+Instruments are identified by name; re-requesting a name returns the same
+object (so modules can declare instruments at call sites without plumbing).
+Per-instance accounting that tests pin exactly (``EllPresenceCache.touched``,
+``QueryBatcher.cache_info()``) keeps its façade and *mirrors* into the
+registry — the registry is the export surface, not the source of truth for
+those invariants.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def resolve_value(v) -> float:
+    """Resolve a recorded value to a float (the lazy-value sync point)."""
+    if callable(v):
+        v = v()
+    return float(np.asarray(v))
+
+
+class Counter:
+    """Monotone counter (optionally labelled)."""
+
+    kind = "counter"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str = ""):
+        self._registry = registry
+        self.name = name
+        self.help = help
+        self._values: dict[tuple, float] = {}
+
+    def inc(self, amount: float = 1, **labels) -> None:
+        if not self._registry._enabled:
+            return
+        key = _label_key(labels)
+        self._values[key] = self._values.get(key, 0) + amount
+
+    def value(self, **labels) -> float:
+        return float(self._values.get(_label_key(labels), 0))
+
+    def samples(self) -> list:
+        return [(dict(k), float(v)) for k, v in self._values.items()]
+
+
+class Gauge:
+    """Point-in-time value; may hold a lazy (callable / device-array) value."""
+
+    kind = "gauge"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str = ""):
+        self._registry = registry
+        self.name = name
+        self.help = help
+        self._values: dict[tuple, object] = {}
+
+    def set(self, value, **labels) -> None:
+        """Record ``value`` — a number, a device array, or a zero-arg
+        callable; lazy values are resolved at snapshot time, never here."""
+        if not self._registry._enabled:
+            return
+        self._values[_label_key(labels)] = value
+
+    def value(self, **labels) -> Optional[float]:
+        v = self._values.get(_label_key(labels))
+        return None if v is None else resolve_value(v)
+
+    def samples(self) -> list:
+        return [(dict(k), resolve_value(v)) for k, v in self._values.items()]
+
+
+DEFAULT_BUCKETS = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+    10.0, 25.0, 50.0, 100.0, float("inf"),
+)
+
+
+class Histogram:
+    """Cumulative-bucket histogram (Prometheus semantics: le-upper-bounds)."""
+
+    kind = "histogram"
+
+    def __init__(
+        self,
+        registry: "MetricsRegistry",
+        name: str,
+        help: str = "",
+        buckets: Sequence[float] = DEFAULT_BUCKETS,
+    ):
+        self._registry = registry
+        self.name = name
+        self.help = help
+        bs = sorted(float(b) for b in buckets)
+        if not bs or bs[-1] != float("inf"):
+            bs.append(float("inf"))
+        self.buckets = tuple(bs)
+        self._series: dict[tuple, list] = {}  # key -> [counts..., sum, n]
+
+    def _slot(self, labels: dict) -> list:
+        key = _label_key(labels)
+        s = self._series.get(key)
+        if s is None:
+            s = self._series[key] = [[0] * len(self.buckets), 0.0, 0]
+        return s
+
+    def observe(self, value: float, **labels) -> None:
+        if not self._registry._enabled:
+            return
+        v = float(value)
+        counts, _, _ = s = self._slot(labels)
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                counts[i] += 1
+                break
+        s[1] += v
+        s[2] += 1
+
+    def snapshot(self, **labels) -> dict:
+        """Cumulative bucket counts + sum/count for one label set."""
+        s = self._series.get(_label_key(labels))
+        if s is None:
+            return {"buckets": [0] * len(self.buckets), "sum": 0.0, "count": 0}
+        cum, total = [], 0
+        for c in s[0]:
+            total += c
+            cum.append(total)
+        return {"buckets": cum, "sum": float(s[1]), "count": int(s[2])}
+
+    def samples(self) -> list:
+        return [(dict(k), self.snapshot(**dict(k))) for k in self._series]
+
+
+class MetricsRegistry:
+    """Named instrument store; one per process by default (:func:`get_registry`)."""
+
+    def __init__(self, *, enabled: bool = True):
+        self._enabled = bool(enabled)
+        self._instruments: dict[str, object] = {}
+        self._lock = threading.Lock()  # instrument creation only, never inc
+
+    # -- enablement ---------------------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def enable(self) -> None:
+        self._enabled = True
+
+    def disable(self) -> None:
+        self._enabled = False
+
+    # -- instrument factories ----------------------------------------------
+    def _get(self, cls, name: str, help: str, **kw):
+        inst = self._instruments.get(name)
+        if inst is not None:
+            if not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {inst.kind}"
+                )
+            return inst
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = cls(self, name, help, **kw)
+        return inst
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(
+        self, name: str, help: str = "",
+        buckets: Sequence[float] = DEFAULT_BUCKETS,
+    ) -> Histogram:
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    @contextlib.contextmanager
+    def timer(self, name: str, help: str = "", **labels):
+        """Time a block into a (seconds) histogram; no-op when disabled."""
+        if not self._enabled:
+            yield
+            return
+        h = self.histogram(name, help)
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            h.observe(time.perf_counter() - t0, **labels)
+
+    # -- introspection ------------------------------------------------------
+    def instruments(self) -> list:
+        return list(self._instruments.values())
+
+    def reset(self) -> None:
+        """Drop every instrument (tests / fresh serving epochs)."""
+        with self._lock:
+            self._instruments.clear()
+
+
+_DEFAULT = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-default registry every instrumented module records to."""
+    return _DEFAULT
+
+
+@contextlib.contextmanager
+def use_registry(registry: MetricsRegistry):
+    """Temporarily swap the process-default registry (tests, benches).
+
+    Instruments bound at construction time (e.g. a ``QueryBatcher``'s cache
+    counters) stay bound to the registry that was active when their owner
+    was constructed — build the owner inside this context to scope it.
+    """
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = registry
+    try:
+        yield registry
+    finally:
+        _DEFAULT = prev
+
+
+@contextlib.contextmanager
+def disabled():
+    """Temporarily disable the default registry (the metrics-off baseline)."""
+    reg = _DEFAULT
+    prev = reg._enabled
+    reg._enabled = False
+    try:
+        yield
+    finally:
+        reg._enabled = prev

@@ -1,0 +1,224 @@
+"""Slide-lifecycle tracing: spans over every phase of a window advance.
+
+A slide is a pipeline — delta routing, witness/bounds refresh, QRS patch,
+ELL repack + presence scatter, per-group fixpoint, result fetch — and on
+the pipelined serving path those phases run on *two* threads (the batcher's
+worker packs slide k+1 while the caller materializes slide k).  A
+contextvar-scoped tracer would lose the worker thread entirely, so the
+active tracer is a deliberate module-level global shared across threads;
+each thread keeps its own span *stack* (``threading.local``) so nesting is
+per-thread while the recorded span list is shared.
+
+Spans carry two end timestamps: ``end`` (the instrumented block returned —
+on the async path that is when the future was *created*) and ``ready`` (the
+result was actually materialized, stamped by :func:`mark_ready` from the
+existing ``_defer_fetch`` sync points).  The gap between a span's ``end``
+and its ``ready`` is the pipeline overlap the async path buys — measurable,
+not assumed.
+
+Inside jit boundaries wall-clock spans are meaningless, so :func:`span`
+also enters :class:`jax.profiler.TraceAnnotation` (host-side annotation
+visible in a captured XLA profile) and jitted code uses
+``jax.named_scope`` at trace time; neither adds ops to the HLO.
+
+When no tracer is installed, :func:`span` returns a shared no-op context
+manager — one dict lookup and an ``is None`` test on the hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+
+from .metrics import get_registry
+
+# Canonical phase names, in slide order.  Keep in sync with the call sites
+# in core/api.py and serving/scheduler.py; tests/test_observability.py pins
+# that a pipelined slide's span tree covers all of these.
+PHASES = (
+    "delta_route",      # sweep/evict + append deltas + slide window to tip
+    "bounds_refresh",   # witness diff -> StreamingBounds.apply_slide
+    "qrs_patch",        # PatchableQRS.apply_slide
+    "ell_pack",         # QRS ELL re-pack + presence scatter
+    "fixpoint",         # per-group concurrent fixpoint launch
+    "fetch",            # result materialization (np.asarray sync point)
+)
+
+
+@dataclass
+class SpanRecord:
+    name: str
+    start: float
+    end: Optional[float] = None
+    ready: Optional[float] = None
+    thread: str = ""
+    depth: int = 0
+    parent: Optional[str] = None
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def wall(self) -> Optional[float]:
+        return None if self.end is None else self.end - self.start
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "start": self.start,
+            "end": self.end,
+            "ready": self.ready,
+            "thread": self.thread,
+            "depth": self.depth,
+            "parent": self.parent,
+            **({"meta": self.meta} if self.meta else {}),
+        }
+
+
+class Tracer:
+    """Collects :class:`SpanRecord`\\ s from every thread that runs spans."""
+
+    def __init__(self):
+        self.spans: list[SpanRecord] = []
+        self._lock = threading.Lock()
+        self._stacks = threading.local()
+
+    def _stack(self) -> list:
+        st = getattr(self._stacks, "stack", None)
+        if st is None:
+            st = self._stacks.stack = []
+        return st
+
+    def begin(self, name: str, **meta) -> SpanRecord:
+        stack = self._stack()
+        rec = SpanRecord(
+            name=name,
+            start=time.perf_counter(),
+            thread=threading.current_thread().name,
+            depth=len(stack),
+            parent=stack[-1].name if stack else None,
+            meta=dict(meta),
+        )
+        stack.append(rec)
+        with self._lock:
+            self.spans.append(rec)
+        return rec
+
+    def end(self, rec: SpanRecord) -> None:
+        rec.end = time.perf_counter()
+        stack = self._stack()
+        if stack and stack[-1] is rec:
+            stack.pop()
+
+    def mark_ready(self, name: str) -> None:
+        """Stamp the most recent span named ``name`` whose result just
+        became host-visible (called from materialization sync points)."""
+        now = time.perf_counter()
+        with self._lock:
+            for rec in reversed(self.spans):
+                if rec.name == name and rec.ready is None:
+                    rec.ready = now
+                    return
+
+    # -- introspection -------------------------------------------------------
+    def names(self) -> set:
+        with self._lock:
+            return {r.name for r in self.spans}
+
+    def threads(self) -> set:
+        with self._lock:
+            return {r.thread for r in self.spans}
+
+    def tree(self) -> list:
+        """Spans as (depth, name, wall) rows in start order."""
+        with self._lock:
+            spans = sorted(self.spans, key=lambda r: r.start)
+        return [(r.depth, r.name, r.wall) for r in spans]
+
+    def as_dicts(self) -> list:
+        with self._lock:
+            return [r.as_dict() for r in self.spans]
+
+
+_ACTIVE: Optional[Tracer] = None
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def tracing(tracer: Optional[Tracer] = None):
+    """Install ``tracer`` (or a fresh one) as the active tracer."""
+    global _ACTIVE
+    prev = _ACTIVE
+    t = tracer if tracer is not None else Tracer()
+    _ACTIVE = t
+    try:
+        yield t
+    finally:
+        _ACTIVE = prev
+
+
+class _NullSpan:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _LiveSpan:
+    __slots__ = ("name", "meta", "_rec", "_annot", "_t0")
+
+    def __init__(self, name: str, meta: dict):
+        self.name = name
+        self.meta = meta
+
+    def __enter__(self):
+        tracer = _ACTIVE
+        self._rec = tracer.begin(self.name, **self.meta) if tracer else None
+        self._annot = jax.profiler.TraceAnnotation(f"repro/{self.name}")
+        self._annot.__enter__()
+        self._t0 = time.perf_counter()
+        return self._rec
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        self._annot.__exit__(*exc)
+        if self._rec is not None:
+            tracer = _ACTIVE
+            if tracer is not None:
+                tracer.end(self._rec)
+        reg = get_registry()
+        if reg.enabled:
+            reg.histogram(
+                "span_seconds", "wall time per slide phase"
+            ).observe(dt, phase=self.name)
+        return False
+
+
+def span(name: str, **meta):
+    """Context manager timing one phase of a slide.
+
+    No-op (a shared null object) when neither a tracer nor the metrics
+    registry is active; otherwise records a :class:`SpanRecord` and feeds
+    the ``span_seconds{phase=...}`` histogram so per-phase timings are
+    exported even outside an explicit tracing session.
+    """
+    if _ACTIVE is None and not get_registry().enabled:
+        return _NULL_SPAN
+    return _LiveSpan(name, meta)
+
+
+def mark_ready(name: str) -> None:
+    """Stamp result-readiness on the latest span named ``name`` (no-op
+    without an active tracer)."""
+    tracer = _ACTIVE
+    if tracer is not None:
+        tracer.mark_ready(name)

@@ -40,6 +40,9 @@ from typing import Callable, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import get_registry
+from repro.obs.trace import mark_ready, span
+
 StreamCacheInfo = namedtuple(
     "StreamCacheInfo",
     ["hits", "misses", "evictions", "currsize", "maxsize", "lane_supersteps"],
@@ -196,10 +199,20 @@ class QueryBatcher:
         # (quarantined watchers get a dedicated per-source group key).
         self._streams: "OrderedDict[tuple, _StreamEntry]" = OrderedDict()
         self._batches: dict = {}
+        # per-instance counters stay the cache_info() façade (tests pin
+        # them); every bump is mirrored into the metrics registry bound at
+        # construction (use_registry() scopes a batcher to a test registry)
         self._stream_hits = 0
         self._stream_misses = 0
         self._stream_evictions = 0
         self._stream_quarantines = 0
+        self._obs = get_registry()
+
+    def _obs_inc(self, name: str, help: str, n: int = 1, **labels) -> None:
+        self._obs.counter(name, help).inc(n, **labels)
+        self._obs.gauge(
+            "serving_stream_watchers", "warm watcher handles resident"
+        ).set(len(self._streams))
 
     def submit(
         self,
@@ -304,11 +317,15 @@ class QueryBatcher:
             # touch BEFORE housekeeping: a re-watch is exactly the liveness
             # signal TTL measures, so the warm state must survive it
             self._stream_hits += 1
+            self._obs_inc("serving_stream_hits_total", "warm-cache watch hits")
             entry.last_used = self._clock()
             self._streams.move_to_end(key)
         self._evict_stale(exempt_view=view)
         if entry is None:
             self._stream_misses += 1
+            self._obs_inc(
+                "serving_stream_misses_total", "warm-cache watch misses"
+            )
             gkey = (id(view), str(query), method)
             batch = self._batches.get(gkey)
             if batch is None:
@@ -336,6 +353,11 @@ class QueryBatcher:
                 old_entry = self._streams.pop(old_key)
                 self._drop_lane(old_key, old_entry)
                 self._stream_evictions += 1
+                self._obs_inc(
+                    "serving_stream_evictions_total",
+                    "warm watcher evictions by cause",
+                    reason="capacity",
+                )
         return entry.sq
 
     def _drop_lane(self, key: tuple, entry) -> None:
@@ -425,11 +447,16 @@ class QueryBatcher:
             expired = ttl is not None and now - e.last_used > ttl
             divergent = e.sq.view is not exempt_view and self._is_divergent(e.sq)
             if expired or divergent:
-                dead.append(key)
-        for key in dead:
+                dead.append((key, "ttl" if expired else "divergent"))
+        for key, reason in dead:
             entry = self._streams.pop(key)
             self._drop_lane(key, entry)
             self._stream_evictions += 1
+            self._obs_inc(
+                "serving_stream_evictions_total",
+                "warm watcher evictions by cause",
+                reason=reason,
+            )
         return len(dead)
 
     def advance_window(self, view, delta=None) -> dict:
@@ -461,10 +488,11 @@ class QueryBatcher:
         """
         if self.pipelined:
             return self.advance_window_async(view, delta).result()
-        self._evict_stale(exempt_view=view)
-        if delta is not None:
-            view.log.append_snapshot(*delta)
-        view.slide_to_tip()
+        with span("delta_route"):
+            self._evict_stale(exempt_view=view)
+            if delta is not None:
+                view.log.append_snapshot(*delta)
+            view.slide_to_tip()
         out = {}
         served = []
         for batch in list(self._batches.values()):
@@ -539,10 +567,11 @@ class QueryBatcher:
         ingest can never overtake an earlier window's group advances on the
         FIFO worker queue.
         """
-        self._evict_stale(exempt_view=view)
-        if delta is not None:
-            view.log.append_snapshot(*delta)
-        view.slide_to_tip()
+        with span("delta_route"):
+            self._evict_stale(exempt_view=view)
+            if delta is not None:
+                view.log.append_snapshot(*delta)
+            view.slide_to_tip()
         groups = [b for b in self._batches.values() if b.view is view]
         futs = []
         for b in groups:
@@ -620,6 +649,10 @@ class QueryBatcher:
                 entry.gkey = gkey
                 entry.quarantined = True
                 self._stream_quarantines += 1
+                self._obs_inc(
+                    "serving_quarantines_total",
+                    "lanes moved to dedicated QoS groups",
+                )
 
     def quarantined(self) -> list:
         """``(query, source)`` pairs currently serving from quarantine."""
@@ -756,9 +789,11 @@ class _GroupResult:
     watchers: list  # (query_name, source) pairs served from this group
 
     def materialize(self) -> dict:
-        stacked = np.stack(
-            [np.asarray(r) for r in self.rows], axis=1
-        )[: len(self.sources)]
+        with span("fetch"):
+            stacked = np.stack(
+                [np.asarray(r) for r in self.rows], axis=1
+            )[: len(self.sources)]
+        mark_ready("fixpoint")
         lanes = {s: i for i, s in enumerate(self.sources)}
         return {
             (q, s): stacked[lanes[s]] for (q, s) in self.watchers

@@ -9,6 +9,10 @@ the free-form ``derived`` column.  The payload carries:
 * per-mode latency records for the pipelined-serving bench (per-slide
   milliseconds, p50/p99 slide-to-result, presence touched-slot counts, and
   shard occupancy spread),
+* schema v2: an optional ``metrics`` block — a resolved registry snapshot
+  (``counters``/``gauges`` name→number maps, see
+  :func:`repro.obs.export.snapshot`) plus optional ``per_slide`` dicts and
+  an ``overhead`` measurement from the latency bench,
 * a ``meta`` dict (fast/full, argv, device count) for provenance.
 
 :func:`validate_bench_json` is the schema contract: CI's well-formedness
@@ -19,7 +23,7 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # every latency record carries exactly these keys (see LATENCY_RECORD_KEYS
 # usage in validate_bench_json); per_slide_ms and touched_slots are
@@ -45,13 +49,16 @@ def make_payload(
     mode: str,
     meta: Optional[dict] = None,
     latency: Optional[Sequence[dict]] = None,
+    metrics: Optional[dict] = None,
 ) -> dict:
     """Build the ``BENCH_*.json`` payload from emitted CSV rows.
 
     ``rows`` is the ``(name, us_per_call, derived)`` list ``emit()``
     accumulates; ``mode`` is ``"fast"`` or ``"full"``; ``latency`` is the
     per-mode record list the latency bench produces (omitted when the bench
-    did not run).  The result always passes :func:`validate_bench_json`.
+    did not run); ``metrics`` is a resolved registry snapshot (schema v2 —
+    ``counters``/``gauges`` maps plus optional ``per_slide``/``overhead``).
+    The result always passes :func:`validate_bench_json`.
     """
     payload = {
         "schema_version": SCHEMA_VERSION,
@@ -64,7 +71,19 @@ def make_payload(
     }
     if latency is not None:
         payload["latency"] = [dict(r) for r in latency]
+    if metrics is not None:
+        payload["metrics"] = dict(metrics)
     return payload
+
+
+def _check_number_map(obj, what: str) -> None:
+    if not isinstance(obj, dict):
+        raise ValueError(f"{what} must be a dict")
+    for k, v in obj.items():
+        if not isinstance(k, str):
+            raise ValueError(f"{what} keys must be strings")
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            raise ValueError(f"{what}[{k!r}] must be a number")
 
 
 def validate_bench_json(payload: dict) -> dict:
@@ -129,4 +148,20 @@ def validate_bench_json(payload: dict) -> dict:
                 for x in rec["touched_slots"]
             ):
                 raise ValueError(f"latency[{i}] touched_slots must be an int list")
+    if "metrics" in payload:
+        m = payload["metrics"]
+        if not isinstance(m, dict):
+            raise ValueError("metrics must be a dict")
+        for req in ("counters", "gauges"):
+            if req not in m:
+                raise ValueError(f"metrics must carry a {req!r} map")
+            _check_number_map(m[req], f"metrics.{req}")
+        if "per_slide" in m:
+            ps = m["per_slide"]
+            if not isinstance(ps, list) or not all(
+                isinstance(r, dict) for r in ps
+            ):
+                raise ValueError("metrics.per_slide must be a list of dicts")
+        if "overhead" in m:
+            _check_number_map(m["overhead"], "metrics.overhead")
     return payload

@@ -301,7 +301,7 @@ def check_collectives():
     # The hot per-slide kernel: its single while-body must carry exactly one
     # all-gather (the source-value gather) and one all-reduce (the scalar
     # convergence psum) — nothing else crosses shards.
-    c = ops(kernels["fixpoint"], vals, src, dstl, w, active)
+    c = base_fix = ops(kernels["fixpoint"], vals, src, dstl, w, active)
     assert c.get("all-gather", 0) == 1, c
     assert c.get("all-reduce", 0) == 1, c
     assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
@@ -353,10 +353,31 @@ def check_collectives():
     assert c.get("all-gather", 0) == 1, c
     assert c.get("all-reduce", 0) == 1, c
     assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
-    c = ops(ke["fixpoint_q"], vals_q, esrc, ew, ewords, erow2v)
+    c = base_ellq = ops(ke["fixpoint_q"], vals_q, esrc, ew, ewords, erow2v)
     assert c.get("all-gather", 0) == 1, c
     assert c.get("all-reduce", 0) == 1, c
     assert c.get("all-to-all", 0) == 0 and c.get("collective-permute", 0) == 0, c
+
+    # Observability must be HLO-invariant: with a live tracer AND an enabled
+    # metrics registry, kernels built and lowered from scratch must compile
+    # to the IDENTICAL collective schedule — spans/counters are host-side
+    # only, so instrumentation may not add (or move) a single collective.
+    from repro.obs.metrics import MetricsRegistry, use_registry
+    from repro.obs.trace import Tracer, tracing
+
+    with use_registry(MetricsRegistry()), tracing(Tracer()):
+        k2 = _kernels(mesh, SEMIRINGS["sssp"], V, e_cap, "model")
+        ke2 = _ell_kernels(mesh, SEMIRINGS["sssp"], V, "model", True)
+        traced = {
+            "fixpoint": ops(k2["fixpoint"], vals, src, dstl, w, active),
+            "ell_fixpoint_q": ops(
+                ke2["fixpoint_q"], vals_q, esrc, ew, ewords, erow2v
+            ),
+        }
+    assert traced == {"fixpoint": base_fix, "ell_fixpoint_q": base_ellq}, (
+        f"instrumentation changed the collective schedule: "
+        f"{traced} vs base fixpoint={base_fix}, ell_q={base_ellq}"
+    )
     print("CHECK_OK")
 
 

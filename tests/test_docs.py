@@ -108,6 +108,18 @@ def test_architecture_covers_pipelined_serving():
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
 
 
+def test_architecture_covers_observability():
+    """The observability section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Observability" in text
+    for sym in ("MetricsRegistry", "get_registry", "use_registry", "span",
+                "mark_ready", "PHASES", "record_slide", "window_union_edges",
+                "stream_uvv_fraction", "stream_qrs_edge_fraction",
+                "stream_bounds_match_rate", "to_prometheus",
+                "serve_prometheus", "write_jsonl", "EventLog"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
 def test_architecture_covers_warm_start_and_recovery():
     """The warm-start/recovery section and its entry points are on the map."""
     text = (REPO / "docs" / "ARCHITECTURE.md").read_text()

@@ -1,0 +1,538 @@
+"""Observability layer contracts: metrics, tracing, stability telemetry.
+
+What this file pins:
+
+* registry primitives — counter/gauge/histogram semantics, lazy gauge
+  values (callables and device arrays resolved only at export), the
+  disabled registry being inert, name→kind conflicts raising;
+* export surfaces — snapshot / JSON-lines / Prometheus text exposition
+  round-trips, the ``EventLog`` JSON-lines sink, and a live ``/metrics``
+  scrape through ``serve_prometheus``;
+* **metrics-on ≡ metrics-off**: serving with a live tracer AND an enabled
+  registry is bit-for-bit equal to serving with everything disabled —
+  observability may not perturb a single float;
+* the pipelined slide's span tree covers EVERY phase (``PHASES``) and spans
+  land from both the caller and the batcher's worker thread, with ``ready``
+  timestamps stamped at the materialization sync points;
+* **sync ≡ async accounting**: the synchronous and pipelined serving routes
+  produce identical registry counters and gauges (kernel launches, presence
+  touched/rebuilds, slides, QRS churn) — one accounting, two schedules;
+* stability gauges match ground truth recomputed from ``materialize()``
+  (UVV fraction vs a fresh ``compute_bounds``/``detect_uvv``, QRS edge
+  fraction vs an independent union-mask count, bounds-match rate vs the
+  served rows themselves);
+* presence/packer counters mirror the test-pinned per-instance façades
+  exactly (``EllPresenceCache.touched``/``rebuilds``);
+* ``HeartbeatMonitor`` missed-beat events + last-beat-age gauge, and
+  ``ServeSupervisor`` restart events (cause, restore slide, catch-up
+  depth) with checkpoint save/restore timers;
+* the BENCH json schema-v2 ``metrics`` block validation.
+"""
+from __future__ import annotations
+
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.api import StreamingQuery, StreamingQueryBatch
+from repro.core.bounds import compute_bounds
+from repro.core.semiring import SEMIRINGS
+from repro.ft import HeartbeatMonitor, ServeSupervisor
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.obs.export import (
+    EventLog,
+    serve_prometheus,
+    snapshot,
+    to_jsonl,
+    to_prometheus,
+)
+from repro.obs.metrics import (
+    MetricsRegistry,
+    disabled,
+    get_registry,
+    resolve_value,
+    use_registry,
+)
+from repro.obs.stability import window_union_edges
+from repro.obs.trace import PHASES, Tracer, get_tracer, span, tracing
+from repro.serving.scheduler import QueryBatcher
+
+V = 48
+WINDOW = 3
+
+
+def make_stream(seed: int, *, num_snapshots: int = WINDOW + 4, batch_size: int = 20):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return generate_evolving_stream(
+        src, dst, w, V, num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=0.4, seed=seed + 2,
+    )
+
+
+def feed(log, base, deltas, upto: int):
+    log.append_snapshot(*base)
+    for d in deltas[: upto - 1]:
+        log.append_snapshot(*d)
+    return log
+
+
+def primed_view(seed: int):
+    base, deltas = make_stream(seed)
+    log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    return WindowView(log, size=WINDOW), deltas[WINDOW - 1:]
+
+
+# ===================================================================
+# registry primitives
+# ===================================================================
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "a counter")
+    c.inc()
+    c.inc(2, lane="3")
+    assert c.value() == 1
+    assert c.value(lane="3") == 2
+    assert reg.counter("c_total") is c  # name → same instrument
+
+    g = reg.gauge("g", "a gauge")
+    g.set(1.5)
+    g.set(lambda: 7.0, kind="lazy")  # resolved at read, not at set
+    assert g.value() == 1.5
+    assert g.value(kind="lazy") == 7.0
+
+    import jax.numpy as jnp
+
+    g.set(jnp.float32(2.25), kind="dev")  # device scalar stays lazy
+    assert g.value(kind="dev") == 2.25
+
+    h = reg.histogram("h_seconds", "a histogram", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 99.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 3 and snap["sum"] == pytest.approx(101.0)
+    assert snap["buckets"] == [1, 2, 3]  # cumulative le counts incl. +Inf
+
+    with pytest.raises(TypeError):
+        reg.gauge("c_total")  # kind conflict on an existing name
+
+
+def test_disabled_registry_is_inert():
+    reg = MetricsRegistry(enabled=False)
+    reg.counter("c").inc()
+    reg.gauge("g").set(3)
+    reg.histogram("h").observe(1.0)
+    assert reg.counter("c").value() == 0
+    assert reg.gauge("g").value() is None
+    assert reg.histogram("h").snapshot()["count"] == 0
+    with reg.timer("t"):
+        pass
+    assert reg.histogram("t").snapshot()["count"] == 0
+
+
+def test_disabled_context_and_null_span():
+    with use_registry(MetricsRegistry()):
+        with disabled():
+            assert not get_registry().enabled
+            # no tracer + disabled registry → the shared null span
+            s1, s2 = span("fixpoint"), span("fetch")
+            assert s1 is s2
+            with s1:
+                pass
+        assert get_registry().enabled
+
+
+def test_timer_observes_wall_seconds():
+    reg = MetricsRegistry()
+    with reg.timer("op_seconds", "timed", stage="x"):
+        pass
+    snap = reg.histogram("op_seconds").snapshot(stage="x")
+    assert snap["count"] == 1 and 0 <= snap["sum"] < 5.0
+
+
+def test_resolve_value():
+    assert resolve_value(2) == 2.0
+    assert resolve_value(lambda: 3.5) == 3.5
+    assert resolve_value(np.float32(0.25)) == 0.25
+
+
+# ===================================================================
+# export surfaces
+# ===================================================================
+def test_snapshot_and_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("hits_total", "hits").inc(3, route="a")
+    reg.gauge("depth", "queue depth").set(lambda: 4.0)
+    reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0)).observe(0.05)
+    snap = snapshot(reg)
+    assert snap["counters"] == {'hits_total{route="a"}': 3.0}
+    assert snap["gauges"] == {"depth": 4.0}
+    hist = snap["histograms"]["lat_seconds"]
+    assert hist["buckets"] == [1, 1, 1] and hist["count"] == 1
+
+    text = to_prometheus(reg)
+    assert "# HELP hits_total hits" in text
+    assert "# TYPE hits_total counter" in text
+    assert 'hits_total{route="a"} 3.0' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "lat_seconds_sum 0.05" in text
+    assert "lat_seconds_count 1" in text
+
+    rec = json.loads(to_jsonl(reg, slide=7))
+    assert rec["slide"] == 7 and rec["counters"] == snap["counters"]
+    assert "ts" in rec
+
+
+def test_event_log_jsonl_file(tmp_path):
+    path = tmp_path / "events.jsonl"
+    log = EventLog(str(path))
+    log.emit("restart", worker=0, cause="boom")
+    log.emit("missed_beat", worker=1)
+    assert [e["event"] for e in log.events] == ["restart", "missed_beat"]
+    assert log.of_kind("restart")[0]["cause"] == "boom"
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == 2 and lines[0]["event"] == "restart"
+    assert all("ts" in l for l in lines)
+
+
+def test_serve_prometheus_scrape():
+    reg = MetricsRegistry()
+    reg.counter("scraped_total", "scrape me").inc(5)
+    server = serve_prometheus(0, reg)  # port 0: any free port
+    try:
+        url = f"http://127.0.0.1:{server.server_port}/metrics"
+        body = urllib.request.urlopen(url, timeout=10).read().decode()
+        assert "scraped_total 5.0" in body
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{server.server_port}/nope", timeout=10
+            )
+    finally:
+        server.shutdown()
+
+
+# ===================================================================
+# metrics-on ≡ metrics-off (the zero-perturbation contract)
+# ===================================================================
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_metrics_on_bit_for_bit_equals_metrics_off(method):
+    view_on, pending = primed_view(seed=9)
+    view_off, _ = primed_view(seed=9)
+    with use_registry(MetricsRegistry()), tracing(Tracer()):
+        sq_on = StreamingQuery(view_on, "sssp", 0, method=method)
+        on = [np.asarray(sq_on.results).copy()]
+        for d in pending:
+            sq_on.advance(d)
+            on.append(np.asarray(sq_on.results).copy())
+    with use_registry(MetricsRegistry(enabled=False)):
+        sq_off = StreamingQuery(view_off, "sssp", 0, method=method)
+        off = [np.asarray(sq_off.results).copy()]
+        for d in pending:
+            sq_off.advance(d)
+            off.append(np.asarray(sq_off.results).copy())
+    for k, (a, b) in enumerate(zip(on, off)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{method}: metrics-on != metrics-off at slide {k}"
+        )
+
+
+# ===================================================================
+# span tree of a pipelined slide
+# ===================================================================
+def test_pipelined_span_tree_covers_every_phase():
+    view, pending = primed_view(seed=12)
+    tracer = Tracer()
+    with use_registry(MetricsRegistry()), tracing(tracer):
+        qb = QueryBatcher(method="cqrs_ell", pipelined=True)
+        for x in (0, 7):
+            qb.watch(view, "sssp", x, method="cqrs_ell")
+        futs = [qb.advance_window_async(view, d) for d in pending[:2]]
+        for f in futs:
+            f.result()
+        qb.close()
+    names = tracer.names()
+    assert set(PHASES) <= names, f"missing phases: {set(PHASES) - names}"
+    # the ingest phases ran on the batcher's worker thread, the fetch on the
+    # caller's — the tracer must have heard from both
+    assert len(tracer.threads()) >= 2, tracer.threads()
+    ended = [r for r in tracer.spans if r.name in PHASES]
+    assert ended and all(r.wall is not None and r.wall >= 0 for r in ended)
+    # ready stamps: at least one fixpoint span was marked at a materialize
+    # sync point, and readiness never precedes the span's own start
+    fixed = [r for r in tracer.spans if r.name == "fixpoint"
+             and r.ready is not None]
+    assert fixed, "no fixpoint span was marked ready at materialization"
+    assert all(r.ready >= r.start for r in fixed)
+
+
+def test_span_seconds_histogram_without_tracer():
+    """The registry alone (no tracing session) still collects per-phase
+    wall timings through the same span() call sites."""
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        assert get_tracer() is None
+        with span("qrs_patch"):
+            pass
+    snap = reg.histogram("span_seconds").snapshot(phase="qrs_patch")
+    assert snap["count"] == 1
+
+
+# ===================================================================
+# sync ≡ async accounting (one ledger, two schedules)
+# ===================================================================
+def test_sync_and_pipelined_accounting_identical():
+    base, deltas = make_stream(seed=5)
+    runs = {}
+    for mode, pipelined in (("sync", False), ("pipe", True)):
+        log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+        view = WindowView(log, size=WINDOW)
+        reg = MetricsRegistry()
+        with use_registry(reg):
+            qb = QueryBatcher(method="cqrs_ell", pipelined=pipelined)
+            for x in (0, 7, 13):
+                qb.watch(view, "sssp", x, method="cqrs_ell")
+            outs = [qb.advance_window(view, d) for d in deltas[WINDOW - 1:]]
+            batches = list(qb._batches.values())
+            snap = snapshot(reg)  # resolve before qb/query teardown
+            qb.close()
+        touched = []
+        rebuilds = 0
+        for b in batches:
+            for cache in getattr(b, "_presence", {}).values():
+                touched += cache.touched
+                rebuilds += cache.rebuilds
+        runs[mode] = (outs, snap, touched, rebuilds)
+    outs_s, snap_s, touched_s, rebuilds_s = runs["sync"]
+    outs_p, snap_p, touched_p, rebuilds_p = runs["pipe"]
+    for k, (a, b) in enumerate(zip(outs_s, outs_p)):
+        assert set(a) == set(b)
+        for key in a:
+            np.testing.assert_array_equal(
+                a[key], b[key], err_msg=f"slide {k} lane {key}"
+            )
+    # the per-instance façades agree across schedules ...
+    assert touched_s == touched_p
+    assert rebuilds_s == rebuilds_p
+    # ... and so does EVERY registry counter and gauge: kernel launches,
+    # presence touched/rebuilds, slides served, QRS churn, supersteps
+    assert snap_s["counters"] == snap_p["counters"]
+    assert snap_s["gauges"] == snap_p["gauges"]
+    # the mirrored presence counters equal the pinned façade exactly
+    assert snap_s["counters"].get("presence_touched_slots_total", 0) == \
+        sum(touched_s)
+    assert snap_s["counters"].get("presence_rebuilds_total", 0) == rebuilds_s
+
+
+# ===================================================================
+# stability gauges vs ground truth
+# ===================================================================
+def test_stability_gauges_match_ground_truth():
+    view, pending = primed_view(seed=3)
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        sq = StreamingQuery(view, "sssp", 0, method="cqrs")
+        sq.results
+        for d in pending:
+            sq.advance(d)
+        labels = {"query": "sssp", "source": "0"}
+
+        # UVV fraction == a fresh intersection/union analysis of the
+        # materialized window (Theorem 2 ground truth)
+        ref = compute_bounds(view.materialize(), SEMIRINGS["sssp"], 0)
+        want_uvv = float(np.asarray(ref.uvv).mean())
+        got_uvv = reg.gauge("stream_uvv_fraction").value(**labels)
+        assert got_uvv == pytest.approx(want_uvv)
+
+        # QRS edge fraction == resident QRS edges over an independently
+        # counted union-mask denominator
+        union_edges = int(
+            np.asarray(view.union_mask()[: view.log.num_edges]).sum()
+        )
+        assert window_union_edges(view) == union_edges
+        want_frac = sq._qrs.num_edges / union_edges
+        got_frac = reg.gauge("stream_qrs_edge_fraction").value(**labels)
+        assert got_frac == pytest.approx(want_frac)
+        assert 0.0 < got_frac <= 1.0
+
+        # QRS vertex fraction == 1 - mean of the folded keep mask
+        want_vfrac = float(1.0 - np.asarray(sq._qrs.uvv).mean())
+        got_vfrac = reg.gauge("stream_qrs_vertex_fraction").value(**labels)
+        assert got_vfrac == pytest.approx(want_vfrac)
+
+        # bounds-match rate == newest served row vs the live G∩ bound
+        newest = np.asarray(sq.results)[-1]
+        want_match = float(
+            (newest == np.asarray(sq._bounds.val_cap)).mean()
+        )
+        got_match = reg.gauge("stream_bounds_match_rate").value(**labels)
+        assert got_match == pytest.approx(want_match)
+
+        # slide counter == the number of advances we made
+        assert reg.counter("stream_slides_total").value(**labels) == \
+            len(pending)
+        # maintenance ledgers mirrored exactly
+        assert reg.counter("stream_trims_total").value(**labels) == \
+            sq._bounds.trims
+        assert reg.counter("stream_rerelaxes_total").value(**labels) == \
+            sq._bounds.rerelaxes
+
+
+def test_stability_gauges_live_after_query_freed():
+    """Weakref lazy gauges degrade to 0.0 once the query is gone — an
+    evicted watcher must not be kept alive by the registry."""
+    view, pending = primed_view(seed=4)
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        sq = StreamingQuery(view, "sssp", 0, method="cqrs")
+        sq.results
+        sq.advance(pending[0])
+    labels = {"query": "sssp", "source": "0"}
+    assert reg.gauge("stream_qrs_edge_fraction").value(**labels) > 0
+    del sq
+    import gc
+
+    gc.collect()
+    assert reg.gauge("stream_qrs_edge_fraction").value(**labels) == 0.0
+
+
+# ===================================================================
+# heartbeat + supervisor events
+# ===================================================================
+def test_heartbeat_missed_beat_event_and_age_gauge():
+    clock = {"t": 0.0}
+    events = EventLog()
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        hb = HeartbeatMonitor(
+            num_workers=2, timeout=10.0, clock=lambda: clock["t"],
+            events=events,
+        )
+        hb.beat(0)
+        hb.beat(1)
+        clock["t"] = 5.0
+        hb.beat(0)  # worker 1 goes quiet
+        assert hb.dead_workers() == set()
+        # the age gauge is lazy: it reads the clock at scrape time
+        assert reg.gauge("heartbeat_last_beat_age_seconds").value(
+            worker="1"
+        ) == pytest.approx(5.0)
+        clock["t"] = 12.0
+        hb.beat(0)  # worker 0 stays chatty
+        clock["t"] = 16.0
+        assert hb.dead_workers() == {1}
+        assert hb.dead_workers() == {1}  # second poll: no duplicate event
+    (ev,) = events.of_kind("missed_beat")
+    assert ev["worker"] == 1
+    assert ev["age"] == pytest.approx(16.0)
+    assert ev["timeout"] == 10.0
+    assert reg.counter("heartbeat_missed_beats_total").value(worker="1") == 1
+
+
+def test_supervisor_restart_event_and_checkpoint_timers(tmp_path, monkeypatch):
+    from repro.checkpoint import CheckpointManager
+
+    base, deltas = make_stream(seed=0)
+    log = feed(SnapshotLog(V, capacity=512), base, deltas, WINDOW)
+    view = WindowView(log, size=WINDOW)
+    pending = deltas[WINDOW - 1:]
+
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs")
+    calls = {"n": 0}
+    orig = StreamingQuery.advance
+
+    def chaos(self, delta=None):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("injected preemption")
+        return orig(self, delta)
+
+    monkeypatch.setattr(StreamingQuery, "advance", chaos)
+    events = EventLog()
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        sup = ServeSupervisor(
+            CheckpointManager(str(tmp_path)), ckpt_every=2, events=events
+        )
+        replica, served, stats = sup.run(sq, pending)
+    assert stats["restarts"] == 1
+    (ev,) = events.of_kind("restart")
+    assert "injected preemption" in ev["cause"]
+    assert ev["restore_slide"] <= ev["failed_slide"]
+    assert ev["catchup_depth"] == ev["failed_slide"] - ev["restore_slide"]
+    assert 0 <= ev["catchup_depth"] < sup.ckpt_every
+    assert reg.counter("serving_restarts_total").value(worker="0") == 1
+    # checkpoint wall-time histograms: initial save + periodic saves, one
+    # restore, and the manager-level disk write/read timers underneath
+    assert reg.histogram("checkpoint_save_seconds").snapshot()["count"] >= 2
+    assert reg.histogram("checkpoint_restore_seconds").snapshot()["count"] == 1
+    assert reg.histogram("checkpoint_write_seconds").snapshot()["count"] >= 2
+    assert reg.histogram("checkpoint_read_seconds").snapshot()["count"] >= 1
+
+
+# ===================================================================
+# presence / packer mirrors
+# ===================================================================
+def test_presence_and_packer_counters_mirror_facades():
+    view, pending = primed_view(seed=7)
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        sqb = StreamingQueryBatch(view, "sssp", [0, 7], method="cqrs_ell")
+        sqb.results
+        for d in pending:
+            sqb.advance(d)
+        touched = []
+        rebuilds = 0
+        for cache in sqb._presence.values():
+            touched += cache.touched
+            rebuilds += cache.rebuilds
+    snap = snapshot(reg)
+    assert snap["counters"]["presence_rebuilds_total"] == rebuilds
+    assert snap["counters"].get("presence_touched_slots_total", 0) == \
+        sum(touched)
+    assert snap["counters"].get("presence_updates_total", 0) == len(touched)
+    assert snap["counters"]["ell_repacks_total"] >= 1
+    assert snap["counters"]["ell_class_transitions_total"] >= 1
+    assert snap["gauges"]["ell_row_capacity"] >= 1
+
+
+# ===================================================================
+# BENCH json schema v2: the metrics block
+# ===================================================================
+def test_bench_payload_metrics_block_validates():
+    from repro.utils.benchjson import make_payload, validate_bench_json
+
+    metrics = {
+        "counters": {"stream_slides_total": 6.0},
+        "gauges": {"stream_uvv_fraction": 0.83},
+        "per_slide": [{"slide": 0, "counters": {}}],
+        "overhead": {"frac_of_p50": 0.001},
+    }
+    payload = make_payload(
+        [("a", 1.0, "")], mode="fast", metrics=metrics
+    )
+    assert validate_bench_json(payload) is payload
+    assert payload["metrics"] == metrics
+    # omitted metrics block stays valid (schema v2 keeps it optional)
+    validate_bench_json(make_payload([], mode="fast"))
+
+    def bad(mutate):
+        p = make_payload([], mode="fast", metrics=json.loads(
+            json.dumps(metrics)
+        ))
+        mutate(p["metrics"])
+        with pytest.raises(ValueError):
+            validate_bench_json(p)
+
+    bad(lambda m: m.pop("counters"))
+    bad(lambda m: m.pop("gauges"))
+    bad(lambda m: m["counters"].update(x="not-a-number"))
+    bad(lambda m: m.update(per_slide="nope"))
+    bad(lambda m: m.update(per_slide=[1, 2]))
+    bad(lambda m: m.update(overhead={"frac": "high"}))
