@@ -901,6 +901,147 @@ def bench_warmstart(fast: bool):
         shutil.rmtree(work, ignore_errors=True)
 
 
+def bench_reshard(fast: bool):
+    """Online resharding under hub drift: fixed vs live-migrated layout.
+
+    **Spread track** (host-level, 4 shards, no mesh): a 200-slide adds-only
+    stream whose hub region sweeps the vertex space is ingested twice — once
+    on a layout balanced for the opening histogram and frozen (``fixed``),
+    once under a ``ReshardPolicy`` that rebalances on the live histogram
+    when the occupancy spread drifts past 1.5 (``online``).  Rows record the
+    per-slide ingest+policy cost and the occupancy-spread trajectory; the
+    bench asserts the online layout holds the tail spread ≤ 2.0x max/mean
+    where the fixed one degrades past it.
+
+    **Migration track** (SPMD, in-process 1-shard shard_map with a hash
+    assignment — a nontrivial position permutation): a live ``cqrs`` query
+    is resharded mid-stream; the row's value is the migration pause
+    (``reshard()`` wall time) with moved-bytes and the resulting spread in
+    the derived column, and every post-migration slide is asserted
+    bit-for-bit against a never-resharded run with zero fixpoint re-solves.
+    """
+    from repro.core.api import StreamingQuery
+    from repro.graph.generators import (
+        generate_evolving_stream, generate_rmat, generate_uniform_weights,
+    )
+    from repro.graph.shardlog import (
+        ShardedSnapshotLog, ShardedWindowView, degree_histogram,
+    )
+    from repro.serving.scheduler import ReshardPolicy, plan_reshard
+
+    v = 256
+    slides = 60 if fast else 200
+    per_slide, width = 32, v // 8
+    rng = np.random.default_rng(17)
+    base = (rng.integers(0, v, size=per_slide),
+            rng.integers(0, width, size=per_slide),
+            np.ones(per_slide, np.float32))
+    drift = []
+    for t in range(1, slides):
+        center = (t * v) // slides
+        drift.append((
+            rng.integers(0, v, size=per_slide),
+            (center + rng.integers(0, width, size=per_slide)) % v,
+            (1.0 + rng.integers(0, 8, size=per_slide) / 8.0).astype(np.float32),
+            (), (),
+        ))
+
+    hist0 = degree_histogram(base, [], v)
+    logs = {
+        "fixed": ShardedSnapshotLog(v, 4, capacity=128, assignment="balanced",
+                                    degree_hist=hist0),
+        "online": ShardedSnapshotLog(v, 4, capacity=128, assignment="balanced",
+                                     degree_hist=hist0),
+    }
+    pol = ReshardPolicy(spread_threshold=1.5, min_slides=4,
+                        on_capacity_growth=False)
+    spreads: dict[str, list] = {"fixed": [], "online": []}
+    migrations, t_paused = 0, 0.0
+    since = 0
+    times = {"fixed": 0.0, "online": 0.0}
+    for name, log in logs.items():
+        log.append_snapshot(*base)
+    for d in drift:
+        for name, log in logs.items():
+            t0 = time.perf_counter()
+            log.append_snapshot(*d)
+            if name == "online":
+                since += 1
+                got = plan_reshard(log, pol, slides_since=since)
+                if got is not None:
+                    tm = time.perf_counter()
+                    log.reshard(got)
+                    t_paused += time.perf_counter() - tm
+                    migrations += 1
+                    since = 0
+            times[name] += time.perf_counter() - t0
+            spreads[name].append(log.occupancy_spread())
+    tail = max(1, slides // 8)
+    for name in ("fixed", "online"):
+        tr = spreads[name]
+        emit(
+            f"reshard/hubdrift/{name}",
+            times[name] / len(drift) * 1e6,
+            f"spread_final={tr[-1]:.2f};spread_max={max(tr):.2f};"
+            f"spread_tail_max={max(tr[-tail:]):.2f};slides={slides}"
+            + (f";migrations={migrations};"
+               f"migration_pause_s={t_paused:.4f}" if name == "online" else ""),
+        )
+    assert max(spreads["online"][-tail:]) <= 2.0, (
+        f"online layout did not hold the spread: {spreads['online'][-tail:]}"
+    )
+    assert spreads["fixed"][-1] > 2.0, (
+        "hub drift failed to degrade the fixed layout — stream too tame "
+        f"(fixed final spread {spreads['fixed'][-1]:.2f})"
+    )
+    assert spreads["online"][-1] < spreads["fixed"][-1]
+    assert migrations >= 1
+
+    # -- migration track: live SPMD query, pause + bit-for-bit -------------
+    vq, eq, s = (512, 4096, 8) if fast else (1024, 8192, 8)
+    src, dst = generate_rmat(vq, eq, seed=21)
+    w = generate_uniform_weights(len(src), seed=22, grid=16)
+    qbase, qdeltas = generate_evolving_stream(
+        src, dst, w, vq, num_snapshots=s + 6, batch_size=128, seed=23,
+    )
+
+    def replica():
+        slog = ShardedSnapshotLog(vq, 1, capacity=eq * 2, assignment="hash")
+        slog.append_snapshot(*qbase)
+        for d in qdeltas[: s - 1]:
+            slog.append_snapshot(*d)
+        return StreamingQuery(
+            ShardedWindowView(slog, size=s), "sssp", 0
+        ), qdeltas[s - 1:]
+
+    ref_sq, pending = replica()
+    ref = [np.asarray(ref_sq.results).copy()]
+    for d in pending:
+        ref_sq.advance(d)
+        ref.append(np.asarray(ref_sq.results).copy())
+    sq, _ = replica()
+    sq.results
+    sq.advance(pending[0])
+    pre_ss = sq._bounds.supersteps
+    report = sq.reshard()  # hash -> balanced: a real position permutation
+    assert sq._bounds.supersteps == pre_ss, "migration re-solved a fixpoint"
+    np.testing.assert_array_equal(np.asarray(sq.results), ref[1])
+    for j, d in enumerate(pending[1:], start=1):
+        sq.advance(d)
+        np.testing.assert_array_equal(
+            np.asarray(sq.results), ref[j + 1],
+            err_msg=f"post-migration slide {j}",
+        )
+    emit(
+        "reshard/migration/pause",
+        report["seconds"] * 1e6,
+        f"moved_positions={report['moved_positions']};"
+        f"bytes_moved={report['bytes_moved']};epoch={report['epoch']};"
+        f"spread={report['occupancy_spread']:.2f};V={vq};window={s};"
+        "resolves=0;bit_for_bit=pass",
+    )
+
+
 def bench_roofline_summary(fast: bool):
     pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
     files = sorted(glob.glob(pat))
@@ -940,6 +1081,11 @@ def main() -> None:
                          "warm (AOT manifest replay + checkpoint resume) "
                          "time-to-first-served-slide, bit-for-bit asserted, "
                          "warm >=3x cold (>=1.5x with --fast)")
+    ap.add_argument("--reshard", action="store_true",
+                    help="run evolving-stream in resharding mode: fixed vs "
+                         "online layout occupancy spread over a hub-drift "
+                         "stream (online tail spread <=2x asserted) plus a "
+                         "live-migration pause row, bit-for-bit asserted")
     ap.add_argument("--out", default=None, help="also write the CSV to this path")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a structured BENCH payload (CSV rows + "
@@ -950,7 +1096,9 @@ def main() -> None:
     args = ap.parse_args()
     global METRICS_JSONL
     METRICS_JSONL = args.metrics_jsonl
-    if args.warmstart:
+    if args.reshard:
+        stream_bench = bench_reshard
+    elif args.warmstart:
         stream_bench = bench_warmstart
     elif args.latency:
         stream_bench = bench_evolving_stream_latency

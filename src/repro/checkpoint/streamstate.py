@@ -76,12 +76,18 @@ def _snapshot_arrays(log: SnapshotLog, t: int):
 # ==========================================================================
 # Checkpoint payload (flat array tree + JSON-able meta)
 # ==========================================================================
-def window_payload(view, *, prefix: str = "") -> tuple[dict, dict]:
+def window_payload(view, *, prefix: str = "",
+                   encoding: str = "delta") -> tuple[dict, dict]:
     """Serialize a window view's snapshot contents in global terms.
 
-    One ``snap/<i>/{src,dst,w}`` triple per window snapshot (sharded views
-    concatenate their shards — per-shard logs store global vertex ids), plus
-    the shard assignment's owner/local maps so a same-shard-count restore
+    ``encoding="delta"`` (the default) stores the FIRST window snapshot as
+    a full ``snap/0/{src,dst,w}`` triple and every later one as its own
+    add/del batch (``delta/<i>/...`` — :meth:`SnapshotLog.delta_batch`,
+    the log's retirement-surviving O(batch) record), so the payload is
+    O(window·batch) instead of O(window·E).  ``encoding="full"`` keeps the
+    legacy one-triple-per-snapshot layout.  Sharded views concatenate
+    their shards — per-shard logs store global vertex ids — and include
+    the assignment's owner/local maps so a same-shard-count restore
     reproduces the exact layout.  Requires the view to be at the log tip
     (checkpoints are taken between advances).
     """
@@ -91,16 +97,35 @@ def window_payload(view, *, prefix: str = "") -> tuple[dict, dict]:
             f"checkpoint requires the window at the log tip "
             f"(window ends at {view.stop}, log has {log.num_snapshots})"
         )
+    if encoding not in ("delta", "full"):
+        raise ValueError(f"unknown window encoding: {encoding!r}")
     sharded = _is_sharded_view(view)
     tree: dict = {}
-    for i, t in enumerate(range(view.start, view.stop)):
+
+    def full_snap(t):
         if sharded:
             parts = [_snapshot_arrays(sh, t) for sh in log.shards]
-            src = np.concatenate([p[0] for p in parts])
-            dst = np.concatenate([p[1] for p in parts])
-            w = np.concatenate([p[2] for p in parts])
-        else:
-            src, dst, w = _snapshot_arrays(log, t)
+            return tuple(np.concatenate([p[k] for p in parts])
+                         for k in range(3))
+        return _snapshot_arrays(log, t)
+
+    ts = list(range(view.start, view.stop))
+    for i, t in enumerate(ts):
+        if encoding == "delta" and i > 0:
+            if sharded:
+                parts = [sh.delta_batch(t) for sh in log.shards]
+                batch = tuple(np.concatenate([p[k] for p in parts])
+                              for k in range(5))
+            else:
+                batch = log.delta_batch(t)
+            asrc, adst, aw, dsrc, ddst = batch
+            tree[f"{prefix}delta/{i}/asrc"] = np.asarray(asrc, np.int32)
+            tree[f"{prefix}delta/{i}/adst"] = np.asarray(adst, np.int32)
+            tree[f"{prefix}delta/{i}/aw"] = np.asarray(aw, np.float32)
+            tree[f"{prefix}delta/{i}/dsrc"] = np.asarray(dsrc, np.int32)
+            tree[f"{prefix}delta/{i}/ddst"] = np.asarray(ddst, np.int32)
+            continue
+        src, dst, w = full_snap(t)
         tree[f"{prefix}snap/{i}/src"] = src
         tree[f"{prefix}snap/{i}/dst"] = dst
         tree[f"{prefix}snap/{i}/w"] = w
@@ -108,6 +133,7 @@ def window_payload(view, *, prefix: str = "") -> tuple[dict, dict]:
         "num_vertices": int(log.num_vertices),
         "window": int(view.size),
         "log_capacity": int(log.capacity),
+        "encoding": encoding,
         "sharded": bool(sharded),
         "n_shards": int(log.n_shards) if sharded else 0,
     }
@@ -197,19 +223,10 @@ def streaming_state(sq) -> tuple[dict, dict]:
 # ==========================================================================
 # Restore: replay the window, inject the fixpoints
 # ==========================================================================
-def replay_log(snaps, num_vertices: int, *, capacity: Optional[int] = None,
+def _fresh_log(num_vertices: int, *, capacity: Optional[int] = None,
                n_shards: int = 0, assignment="range", v_cap: int = 0,
                owner=None, local=None, mode: str = "range"):
-    """Replay global per-snapshot edge lists into a fresh log.
-
-    ``snaps`` is a list of ``(src, dst, w)`` triples (full membership per
-    snapshot).  Consecutive snapshots are diffed host-side: membership
-    changes become add/del batches and an in-place weight change becomes a
-    re-add with the new weight (a weight *event* in the log — exactly how
-    the original stream recorded it).  Iteration order is the array order of
-    each snapshot, so edge-id assignment is deterministic (though generally
-    a permutation of the original log's — harmless, results are order-exact).
-    """
+    """Empty (sharded) log under the checkpointed capacity + layout spec."""
     cap = int(capacity or STREAM_ALIGN)
     if n_shards:
         from repro.graph.shardlog import ShardAssignment, ShardedSnapshotLog
@@ -220,11 +237,42 @@ def replay_log(snaps, num_vertices: int, *, capacity: Optional[int] = None,
                 np.asarray(owner, np.int64), np.asarray(local, np.int64),
                 int(v_cap),
             )
-        log = ShardedSnapshotLog(
+        return ShardedSnapshotLog(
             num_vertices, n_shards, capacity=cap, assignment=assignment
         )
-    else:
-        log = SnapshotLog(num_vertices, capacity=cap)
+    return SnapshotLog(num_vertices, capacity=cap)
+
+
+def replay_delta_log(base, deltas, num_vertices: int, **kwargs):
+    """Replay a delta-encoded window into a fresh log — O(window·batch).
+
+    ``base`` is the first snapshot's full ``(src, dst, w)`` membership;
+    ``deltas`` the later snapshots' ``(add_src, add_dst, add_w, del_src,
+    del_dst)`` batches (:meth:`SnapshotLog.delta_batch` records).  Each
+    batch is exactly what the original log committed (weight re-assignments
+    included), so the replayed log reproduces membership, weight events,
+    and window extrema without any host-side diffing.
+    """
+    log = _fresh_log(num_vertices, **kwargs)
+    src, dst, w = base
+    log.append_snapshot(src, dst, w)
+    for add_src, add_dst, add_w, del_src, del_dst in deltas:
+        log.append_snapshot(add_src, add_dst, add_w, del_src, del_dst)
+    return log
+
+
+def replay_log(snaps, num_vertices: int, **kwargs):
+    """Replay global per-snapshot edge lists into a fresh log.
+
+    ``snaps`` is a list of ``(src, dst, w)`` triples (full membership per
+    snapshot).  Consecutive snapshots are diffed host-side: membership
+    changes become add/del batches and an in-place weight change becomes a
+    re-add with the new weight (a weight *event* in the log — exactly how
+    the original stream recorded it).  Iteration order is the array order of
+    each snapshot, so edge-id assignment is deterministic (though generally
+    a permutation of the original log's — harmless, results are order-exact).
+    """
+    log = _fresh_log(num_vertices, **kwargs)
     # Vectorized host-side diff: each snapshot's edges become int64 keys
     # ``s * V + d`` and consecutive snapshots are compared through sorted
     # key arrays (searchsorted), not Python dicts — restore cost is a few
@@ -287,14 +335,6 @@ def rebuild_view(arrays: dict, meta: dict, *, prefix: str = "",
     spec is built — values are shard-layout independent.
     """
     size = int(meta["window"])
-    snaps = [
-        (
-            arrays[f"{prefix}snap/{i}/src"],
-            arrays[f"{prefix}snap/{i}/dst"],
-            arrays[f"{prefix}snap/{i}/w"],
-        )
-        for i in range(size)
-    ]
     want = int(meta.get("n_shards", 0)) if n_shards is None else int(n_shards)
     kwargs: dict = {}
     if want and assignment is not None:
@@ -306,11 +346,38 @@ def rebuild_view(arrays: dict, meta: dict, *, prefix: str = "",
             local=arrays.get(f"{prefix}assign/local"),
             mode=str(meta.get("assignment_mode", "range")),
         )
-    log = replay_log(
-        snaps, int(meta["num_vertices"]),
-        capacity=int(meta.get("log_capacity", 0)) or None,
-        n_shards=want, **kwargs,
+    kwargs.update(
+        capacity=int(meta.get("log_capacity", 0)) or None, n_shards=want,
     )
+    if str(meta.get("encoding", "full")) == "delta":
+        base = (
+            arrays[f"{prefix}snap/0/src"],
+            arrays[f"{prefix}snap/0/dst"],
+            arrays[f"{prefix}snap/0/w"],
+        )
+        deltas = [
+            (
+                arrays[f"{prefix}delta/{i}/asrc"],
+                arrays[f"{prefix}delta/{i}/adst"],
+                arrays[f"{prefix}delta/{i}/aw"],
+                arrays[f"{prefix}delta/{i}/dsrc"],
+                arrays[f"{prefix}delta/{i}/ddst"],
+            )
+            for i in range(1, size)
+        ]
+        log = replay_delta_log(
+            base, deltas, int(meta["num_vertices"]), **kwargs
+        )
+    else:
+        snaps = [
+            (
+                arrays[f"{prefix}snap/{i}/src"],
+                arrays[f"{prefix}snap/{i}/dst"],
+                arrays[f"{prefix}snap/{i}/w"],
+            )
+            for i in range(size)
+        ]
+        log = replay_log(snaps, int(meta["num_vertices"]), **kwargs)
     if want:
         from repro.graph.shardlog import ShardedWindowView
 

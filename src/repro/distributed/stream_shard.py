@@ -735,6 +735,42 @@ class ShardedStreamingBounds:
     # source + val/parent/lane arrays + supersteps) deliberately matches
     # StreamingBounds, so the bookkeeping is shared rather than re-encoded
     from_state = classmethod(StreamingBounds.from_state.__func__)
+
+    def reshard(self, view: ShardedWindowView, plan, *,
+                mesh: Optional[Mesh] = None) -> "ShardedStreamingBounds":
+        """Migrated copy of this maintainer on ``view``'s new layout.
+
+        ``plan`` is the :func:`~repro.graph.shardlog.migration_plan` from
+        this maintainer's (pre-migration) assignment to the one ``view``
+        now carries.  The warm ``val_cap``/``val_cup`` fixpoints are
+        permuted through global vertex space onto the new position layout
+        and re-injected via :meth:`from_state` — monotone fixpoints are
+        unique, so **zero solves** run; only the parent forests (trim
+        metadata) are recomputed on the new layout (2 launches).  Counters
+        carry over so the obs ledger spans the migration.
+        """
+        old = self.assign
+        inv = np.full(old.state_len, -1, np.int64)
+        inv[old.positions] = np.arange(old.num_vertices)
+        if self.batched:
+            src = [int(inv[p]) for p in self.sources]
+        else:
+            src = int(inv[int(self.source)])
+        ident = np.float32(self.sr.identity)
+        new = type(self).from_state(
+            view, self.sr, src,
+            plan.permute(np.asarray(self.val_cap), ident),
+            plan.permute(np.asarray(self.val_cup), ident),
+            supersteps=self.supersteps,
+            lane_supersteps=self.lane_supersteps,
+            mesh=mesh if mesh is not None else self.mesh,
+            model_axis=self.model_axis,
+        )
+        new.launches += self.launches
+        new.trims = self.trims
+        new.rerelaxes = self.rerelaxes
+        return new
+
     append_lane = StreamingBounds.append_lane
     drop_lane = StreamingBounds.drop_lane
     set_lane = StreamingBounds.set_lane
@@ -1085,6 +1121,84 @@ class _ShardedEllMixin:
             self.mesh, self.semiring, self.view.log.state_len,
             self.model_axis, default_interpret(),
         )
+
+    # -- live migration (layout epochs) ---------------------------------------
+    def reshard(self, assignment=None, *, degree_hist=None,
+                mesh: Optional[Mesh] = None) -> dict:
+        """Migrate this query to a new shard layout mid-stream — no restart.
+
+        Re-routes the host log onto ``assignment`` (default: a degree-
+        balanced :meth:`~repro.graph.shardlog.ShardAssignment.rebalance` of
+        the live universe), permutes the warm ``val_cap``/``val_cup``
+        fixpoints through global vertex space onto the new position layout
+        (zero solves — see :meth:`ShardedStreamingBounds.reshard`), rebuilds
+        the QRS keep masks and the per-shard ELL packers *at their saved
+        sticky capacity classes* on the new layout, and re-derives the mesh
+        when ``n_shards`` changed.  Subsequent slides are bit-for-bit equal
+        to a never-resharded run.
+
+        Requires a caught-up query (``advance()`` to the log tip first);
+        sibling queries sharing the view each call this once — the first
+        call migrates the log, the rest only migrate their own warm state.
+
+        Returns a migration report: new ``epoch``/``n_shards``, positions
+        and bytes moved, wall seconds, post-migration occupancy spread.
+        """
+        import time
+
+        from repro.graph.shardlog import migration_plan
+        from repro.obs.metrics import get_registry
+
+        view = self.view
+        log = view.log
+        if view.stop != log.num_snapshots or self._diff_pos != view.history_end:
+            raise RuntimeError(
+                "reshard() needs a caught-up query: advance() to the log "
+                "tip before migrating"
+            )
+        t0 = time.perf_counter()
+        with span("reshard"):
+            bounds = self._bounds
+            old = bounds.assign
+            cap_pos = np.asarray(bounds.val_cap)
+            cup_pos = np.asarray(bounds.val_cup)
+            installed = view.reshard(assignment, degree_hist=degree_hist)
+            plan = migration_plan(old, installed)
+            if mesh is not None:
+                self.mesh = mesh
+            elif installed.n_shards != old.n_shards:
+                self.mesh = host_mesh(installed.n_shards, self.model_axis)
+            self._bounds = bounds.reshard(view, plan, mesh=self.mesh)
+            self._qrs = self._make_qrs()
+            if self._ell_cache is not None:
+                # fresh packers on the new layout, re-seeded at the sticky
+                # row class so the kernel compile cache stays warm; the
+                # rebuilt pack key (assignment epoch ∈ state_key) is what
+                # invalidates the persistent presence planes
+                self._ell_cache = self._make_ell_cache(
+                    row_cap=self._ell_cache._row_cap
+                )
+            self._diff_pos = view.history_end
+        seconds = time.perf_counter() - t0
+        moved_bytes = plan.bytes_moved(cap_pos, cup_pos)
+        reg = get_registry()
+        reg.counter(
+            "reshard_total", "completed live shard-layout migrations"
+        ).inc()
+        reg.counter(
+            "reshard_bytes_moved_total", "warm-state bytes relocated"
+        ).inc(moved_bytes)
+        reg.histogram(
+            "reshard_seconds", "live migration wall time"
+        ).observe(seconds)
+        return {
+            "epoch": installed.epoch,
+            "n_shards": installed.n_shards,
+            "moved_positions": plan.moved,
+            "bytes_moved": moved_bytes,
+            "seconds": seconds,
+            "occupancy_spread": log.occupancy_spread(),
+        }
 
 
 class ShardedStreamingQuery(_ShardedEllMixin, StreamingQuery):

@@ -103,6 +103,15 @@ class ServeSupervisor:
     ``serving_restarts_total`` registry counter and checkpoint save/restore
     wall times land in ``checkpoint_save_seconds``/
     ``checkpoint_restore_seconds`` histograms.
+
+    ``reshard_policy``: optional
+    :class:`~repro.serving.scheduler.ReshardPolicy` — checked after every
+    served slide; when it fires (occupancy spread past threshold, capacity
+    growth, or an ``n_shards`` target differing from the replica's current
+    layout) the replica live-migrates via its ``reshard()`` (layout epochs,
+    zero re-solves, bit-for-bit) instead of waiting for a crash-restore to
+    pick the new layout.  Each migration emits a ``reshard`` event and
+    counts into ``serving_reshards_total``.
     """
 
     manager: CheckpointManager
@@ -111,6 +120,41 @@ class ServeSupervisor:
     heartbeat: Optional[HeartbeatMonitor] = None
     worker: int = 0
     events: Optional[EventLog] = None
+    reshard_policy: Optional[object] = None
+
+    def _maybe_reshard(self, replica, reg, state: dict) -> None:
+        """Post-slide policy check → live layout migration of ``replica``."""
+        pol = self.reshard_policy
+        if pol is None or not hasattr(replica, "reshard"):
+            return
+        from repro.serving.scheduler import plan_reshard
+
+        log = replica.view.log
+        if not hasattr(log, "occupancy_spread"):
+            return
+        state["slides"] = state.get("slides", 0) + 1
+        cap = int(log.capacity)
+        grew = cap > state.get("e_cap", cap)
+        state["e_cap"] = cap
+        assignment = plan_reshard(
+            log, pol, capacity_grew=grew, slides_since=state["slides"]
+        )
+        if assignment is None:
+            return
+        state["slides"] = 0
+        report = replica.reshard(assignment)
+        reg.counter(
+            "serving_reshards_total", "policy-triggered layout migrations"
+        ).inc(worker=str(self.worker))
+        if self.events is not None:
+            self.events.emit(
+                "reshard", worker=self.worker,
+                epoch=int(report["epoch"]),
+                n_shards=int(report["n_shards"]),
+                bytes_moved=int(report["bytes_moved"]),
+                seconds=float(report["seconds"]),
+                occupancy_spread=float(report["occupancy_spread"]),
+            )
 
     def run(
         self,
@@ -141,11 +185,13 @@ class ServeSupervisor:
         served: dict[int, np.ndarray] = {}
         step = 0
         restarts = 0
+        reshard_state: dict = {}
         while step < len(deltas):
             try:
                 replica.advance(deltas[step])
                 served[step] = np.asarray(replica.results).copy()
                 step += 1
+                self._maybe_reshard(replica, reg, reshard_state)
                 if self.heartbeat is not None:
                     self.heartbeat.beat(self.worker)
                 if step % self.ckpt_every == 0 or step == len(deltas):

@@ -139,6 +139,11 @@ class StableEllPacker:
         self.slot_width = int(slot_width)
         self.row_align = int(row_align)
         self.num_rows = 0  # current sticky row capacity (0 = unset)
+        # every sticky capacity class this packer has entered, in order —
+        # the data-dependent growth ladder enumerate_grid cannot predict;
+        # checkpointed into grid.json so a first-boot replica pre-traces
+        # the classes a prior run actually walked (see serving.warmstart)
+        self.class_history: list[int] = []
 
     def _natural_rows(self, dst) -> int:
         """Row count the edge set needs, from the dst degree histogram
@@ -184,4 +189,6 @@ class StableEllPacker:
             min_rows=self.num_rows,
         )
         self.num_rows = ell.num_rows
+        if not self.class_history or self.class_history[-1] != self.num_rows:
+            self.class_history.append(self.num_rows)
         return ell

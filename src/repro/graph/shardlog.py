@@ -82,6 +82,7 @@ class ShardAssignment:
     v_cap: int  # uniform per-shard local width (padded)
     global_ids: np.ndarray  # (n_shards, v_cap) int32 — local → global, -1 pad
     positions: np.ndarray  # (V,) int64 — owner·v_cap + local
+    epoch: int = 0  # layout epoch; bumped by rebalance/resize/reshard
 
     @property
     def state_len(self) -> int:
@@ -90,13 +91,43 @@ class ShardAssignment:
 
     @classmethod
     def _build(cls, mode: str, num_vertices: int, n_shards: int,
-               owner: np.ndarray, local: np.ndarray, v_cap: int):
+               owner: np.ndarray, local: np.ndarray, v_cap: int,
+               epoch: int = 0):
         gid = np.full((n_shards, v_cap), -1, np.int32)
         gid[owner, local] = np.arange(num_vertices, dtype=np.int32)
         positions = owner.astype(np.int64) * v_cap + local
         return cls(mode, int(n_shards), int(num_vertices),
                    owner.astype(np.int32), local.astype(np.int32),
-                   int(v_cap), gid, positions)
+                   int(v_cap), gid, positions, int(epoch))
+
+    # -- layout-epoch derivations ---------------------------------------------
+    def rebalance(self, degree_hist) -> "ShardAssignment":
+        """Next-epoch balanced layout at the same shard count.
+
+        Re-derives degree-histogram-balanced range boundaries from a *fresh*
+        histogram (typically :meth:`ShardedSnapshotLog.live_degree_histogram`
+        so drifting hubs re-even the per-shard edge mass) and stamps the
+        successor epoch — the input to a live :meth:`ShardedSnapshotLog.reshard`.
+        """
+        new = ShardAssignment.balanced(
+            self.num_vertices, self.n_shards, degree_hist
+        )
+        return dataclasses.replace(new, epoch=self.epoch + 1)
+
+    def resize(self, n_shards: int, degree_hist=None) -> "ShardAssignment":
+        """Next-epoch balanced layout at a *different* shard count.
+
+        With no histogram each vertex carries uniform mass, so the ranges
+        split evenly regardless of divisibility (unlike :meth:`ranged`).
+        """
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if degree_hist is None:
+            degree_hist = np.ones(self.num_vertices)
+        new = ShardAssignment.balanced(
+            self.num_vertices, int(n_shards), degree_hist
+        )
+        return dataclasses.replace(new, epoch=self.epoch + 1)
 
     @classmethod
     def ranged(cls, num_vertices: int, n_shards: int) -> "ShardAssignment":
@@ -170,6 +201,61 @@ class ShardAssignment:
                         - np.repeat(np.cumsum(counts) - counts, counts))
         return cls._build("hash", num_vertices, n_shards,
                           owner, local, int(max(counts.max(), 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """Old → new flat-position-space map between two layout epochs.
+
+    ``new_to_old[p]`` is the old position holding the vertex that position
+    ``p`` owns under the new layout (``-1`` at padding positions, which own
+    no vertex).  :meth:`permute` routes any ``(..., old.state_len)``
+    per-vertex state array through the global vertex space in one gather —
+    the whole live state migration, because position-space values *are*
+    global values at permuted indices (identity at padding).  ``moved``
+    counts vertices whose flat position changed (the migration's real
+    traffic; unchanged positions are copies a device could elide).
+    """
+
+    old: ShardAssignment
+    new: ShardAssignment
+    new_to_old: np.ndarray  # (new.state_len,) int64, -1 at padding
+    moved: int
+
+    def permute(self, vals, fill) -> np.ndarray:
+        """Map an old-position-space array onto the new position space."""
+        vals = np.asarray(vals)
+        out = np.full(vals.shape[:-1] + (self.new.state_len,), fill,
+                      vals.dtype)
+        live = self.new_to_old >= 0
+        out[..., live] = vals[..., self.new_to_old[live]]
+        return out
+
+    def bytes_moved(self, *state_arrays) -> int:
+        """Bytes of per-vertex state the migration rerouted (obs accounting)."""
+        total = 0
+        for a in state_arrays:
+            a = np.asarray(a)
+            per_pos = a.size // max(a.shape[-1], 1) * a.dtype.itemsize
+            total += per_pos * self.moved
+        return int(total)
+
+
+def migration_plan(old: ShardAssignment,
+                   new: ShardAssignment) -> MigrationPlan:
+    """Build the old→new position-space map for a layout transition."""
+    if old.num_vertices != new.num_vertices:
+        raise ValueError(
+            f"cannot migrate between vertex spaces ({old.num_vertices} -> "
+            f"{new.num_vertices})"
+        )
+    new_to_old = np.full(new.state_len, -1, np.int64)
+    new_to_old[new.positions] = old.positions
+    if old.state_len == new.state_len:
+        moved = int((old.positions != new.positions).sum())
+    else:
+        moved = old.num_vertices
+    return MigrationPlan(old, new, new_to_old, moved)
 
 
 def make_assignment(
@@ -334,8 +420,14 @@ class ShardedSnapshotLog:
         return max(sh.capacity for sh in self.shards)
 
     def state_key(self) -> tuple:
-        """Hashable fingerprint of universe/extrema state (cache key)."""
-        return tuple(
+        """Hashable fingerprint of universe/extrema state (cache key).
+
+        Includes the layout epoch: a live :meth:`reshard` swaps in fresh
+        per-shard logs whose (generation, edges, weight-version) tuples could
+        coincide with the old layout's, and every stacked-array / device /
+        ELL-pack cache keyed on this fingerprint must miss across epochs.
+        """
+        return (self.assignment.epoch,) + tuple(
             (sh.generation, sh.num_edges, sh.weight_version) for sh in self.shards
         )
 
@@ -433,6 +525,99 @@ class ShardedSnapshotLog:
         occ = np.asarray([sh.num_edges for sh in self.shards], np.float64)
         mean = occ.mean()
         return float(occ.max() / mean) if mean > 0 else 1.0
+
+    def live_degree_histogram(self) -> np.ndarray:
+        """Per-vertex in-degree mass of the *registered universe*.
+
+        Unlike :func:`degree_histogram` (which needs the original stream)
+        this reads the live per-shard universes — one universe slot per
+        destination, the exact mass :meth:`occupancy_spread` measures — so a
+        reshard policy can derive a fresh balanced assignment mid-stream.
+        """
+        hist = np.zeros(self.num_vertices, np.int64)
+        for sh in self.shards:
+            n = sh.num_edges
+            if n:
+                hist += np.bincount(
+                    sh.dst[:n].astype(np.int64), minlength=self.num_vertices
+                )
+        return hist
+
+    def reshard(self, assignment: ShardAssignment) -> ShardAssignment:
+        """Re-route the log onto a new layout epoch, **in place**.
+
+        Rebuilds the per-shard :class:`SnapshotLog`\\ s under ``assignment``
+        by replaying the log against itself from the retirement watermark:
+        the full membership in effect there seeds the new shards (weights in
+        effect via :meth:`SnapshotLog.weight_at`), then every retained
+        snapshot re-applies its own O(batch) :meth:`SnapshotLog.delta_batch`
+        — membership, weight extrema, *and* weight events reproduce exactly,
+        just routed to the new owners.  Snapshot indices are preserved
+        (pre-watermark entries are empty and pre-retired), so registered
+        views keep their absolute window coordinates.  ``n_shards`` may
+        change.  Universe slots dead before the watermark (edges that left
+        and never returned) are dropped — a compaction; they own no presence
+        in any reachable window, so results are unaffected.
+
+        The swap is atomic: the new shards are fully built (and validated by
+        the ordinary append path) before ``self`` mutates.  Returns the
+        installed assignment (epoch force-bumped past the current one if the
+        caller's wasn't).
+        """
+        if not isinstance(assignment, ShardAssignment):
+            raise TypeError(
+                "reshard needs a prebuilt ShardAssignment (see "
+                "ShardAssignment.rebalance/resize)"
+            )
+        if assignment.num_vertices != self.num_vertices:
+            raise ValueError(
+                f"assignment is for {assignment.num_vertices} vertices, "
+                f"log has {self.num_vertices}"
+            )
+        if assignment.epoch <= self.assignment.epoch:
+            assignment = dataclasses.replace(
+                assignment, epoch=self.assignment.epoch + 1
+            )
+        old_shards = self.shards
+        watermark = max(sh.retired_upto for sh in old_shards)
+        num_snaps = self.num_snapshots
+        tmp = ShardedSnapshotLog(
+            self.num_vertices, assignment.n_shards,
+            capacity=self.capacity, assignment=assignment,
+        )
+        for _ in range(min(watermark, num_snaps)):
+            tmp.append_snapshot((), (), ())
+        if num_snaps > watermark:
+            bs, bd, bw = [], [], []
+            for sh in old_shards:
+                ids = sh.snapshot_edges(watermark)
+                bs.append(sh.src[ids].astype(np.int64))
+                bd.append(sh.dst[ids].astype(np.int64))
+                bw.append(np.asarray(
+                    [sh.weight_at(j, watermark) for j in ids], np.float32
+                ))
+            tmp.append_snapshot(
+                np.concatenate(bs), np.concatenate(bd), np.concatenate(bw)
+            )
+            for t in range(watermark + 1, num_snaps):
+                parts = [sh.delta_batch(t) for sh in old_shards]
+                tmp.append_snapshot(*(
+                    np.concatenate([p[i] for p in parts]) for i in range(5)
+                ))
+        for sh in tmp.shards:
+            # pre-watermark snapshots were empty placeholders for index
+            # alignment; mark them retired so reads fail loudly, like the
+            # originals
+            for t in range(min(watermark, num_snaps)):
+                sh._snapshots[t] = None
+            sh._retired_upto = watermark
+        self.assignment = assignment
+        self.n_shards = assignment.n_shards
+        self.v_local = assignment.v_cap
+        self.shards = tmp.shards
+        self._stack_key = None
+        self._stack = {}
+        return assignment
 
     # -- stacked host arrays (the shard_map feed) -----------------------------
     def stacked_arrays(self) -> dict:
@@ -553,6 +738,40 @@ class ShardedWindowView:
             self._history_offset += drop
         for v in self.views:
             v.prune_history(upto)  # also retires per-shard log history
+
+    # -- online resharding ----------------------------------------------------
+    def reshard(self, assignment: Optional[ShardAssignment] = None, *,
+                degree_hist=None) -> ShardAssignment:
+        """Migrate the log *and* this view onto a new layout epoch, live.
+
+        With no ``assignment`` a balanced one is derived from the live
+        universe histogram (:meth:`ShardedSnapshotLog.live_degree_histogram`,
+        or ``degree_hist``).  The per-shard views are rebuilt at the same
+        ``(start, size)`` on the re-routed shards — witness counts recompute
+        from the new shard-local presence, which is the old presence
+        re-routed.  Slide history is cut at the current position (the
+        re-routed shards speak new shard-local ids): callers must be caught
+        up — a consumer behind ``history_end`` gets the ordinary pruned-
+        history ``LookupError`` and re-primes.  Idempotent when the log is
+        already on ``assignment`` (so several queries sharing one view can
+        each call this with the same target).
+        """
+        log = self.log
+        if assignment is not None and assignment is log.assignment:
+            return assignment  # a sibling query already migrated this view
+        if assignment is None:
+            assignment = log.assignment.rebalance(
+                log.live_degree_histogram() if degree_hist is None
+                else degree_hist
+            )
+        size, start = self.size, self.start
+        installed = log.reshard(assignment)
+        self.views = [
+            WindowView(sh, size=size, start=start) for sh in log.shards
+        ]
+        self._history_offset = self.history_end
+        self.history = []
+        return installed
 
     # -- sliding --------------------------------------------------------------
     def slide(self) -> ShardSlideDiff:

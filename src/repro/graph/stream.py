@@ -383,6 +383,51 @@ class SnapshotLog:
         """
         return self._deltas[t]
 
+    def delta_batch(
+        self, t: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Snapshot ``t`` as a replayable ``(add_src, add_dst, add_w,
+        del_src, del_dst)`` batch in **global vertex ids**.
+
+        Appending this batch onto a log positioned at snapshot ``t - 1``
+        reproduces snapshot ``t`` exactly: membership comes from the
+        retirement-surviving :meth:`snapshot_delta` record, entering edges
+        carry their weight **in effect** at ``t`` (:meth:`weight_at`), and
+        weight re-assignments of edges already present (re-adds that changed
+        the weight — the events :meth:`append_snapshot` records) are emitted
+        as re-adds so the replayed log records the same events.  This is the
+        O(batch) encoding the delta checkpoints and the live reshard replay
+        share; re-adds of a present edge at an *unchanged* weight are not
+        reproduced (they alter no observable state).
+        """
+        entered, left = self._deltas[t]
+        ent = np.asarray(entered, np.int64)
+        add_w = np.asarray(
+            [self.weight_at(j, t) for j in ent], np.float32
+        )
+        if self._wevents:
+            ent_set = set(ent.tolist())
+            re_ids, re_w = [], []
+            for j, ev in self._wevents.items():
+                if j in ent_set:
+                    continue
+                # rightmost event at exactly t — duplicate adds in one
+                # batch record several events with the same stamp and the
+                # last one is the weight in effect (weight_at semantics)
+                idx = bisect.bisect_right(ev, t, key=_EV_TIME) - 1
+                if idx >= 0 and ev[idx][0] == t:
+                    re_ids.append(j)
+                    re_w.append(ev[idx][1])
+            if re_ids:
+                ent = np.concatenate([ent, np.asarray(re_ids, np.int64)])
+                add_w = np.concatenate(
+                    [add_w, np.asarray(re_w, np.float32)]
+                )
+        left = np.asarray(left, np.int64)
+        return (self.src[ent].astype(np.int64), self.dst[ent].astype(np.int64),
+                add_w, self.src[left].astype(np.int64),
+                self.dst[left].astype(np.int64))
+
     # -- history compaction ---------------------------------------------------
     @property
     def retired_upto(self) -> int:

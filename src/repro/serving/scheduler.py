@@ -128,6 +128,65 @@ class RequestScheduler:
 
 
 # ==========================================================================
+# Online resharding policy (layout epochs, serving-path trigger)
+# ==========================================================================
+@dataclasses.dataclass
+class ReshardPolicy:
+    """When and how the serving path migrates a sharded log's layout.
+
+    Checked once per served slide (``QueryBatcher.advance_window`` /
+    ``ServeSupervisor.run``).  A migration is triggered when any of:
+
+    * ``n_shards`` is set and differs from the log's current shard count
+      (elastic resize — replica scale-out/in);
+    * the live universe's ``occupancy_spread()`` (max/mean per-shard edges)
+      exceeds ``spread_threshold`` (drifting hubs unbalanced the layout);
+    * ``on_capacity_growth`` and a shard's edge capacity class grew since
+      the last check (growth epochs are natural migration points — the
+      kernels recompile for the new capacity class anyway).
+
+    ``min_slides`` rate-limits migrations.  The derived layout is a
+    degree-balanced assignment over the live universe
+    (:meth:`~repro.graph.shardlog.ShardAssignment.rebalance`); a derived
+    layout identical to the current one is skipped, so a balanced stream
+    never migrates.
+    """
+
+    spread_threshold: float = 1.5
+    on_capacity_growth: bool = True
+    n_shards: Optional[int] = None
+    min_slides: int = 8
+
+
+def plan_reshard(log, policy: ReshardPolicy, *, capacity_grew: bool = False,
+                 slides_since: Optional[int] = None):
+    """Evaluate ``policy`` against a sharded log's live occupancy.
+
+    Returns the new :class:`~repro.graph.shardlog.ShardAssignment` to
+    migrate to, or ``None`` to keep the current layout.
+    """
+    if slides_since is not None and slides_since < policy.min_slides:
+        return None
+    cur = log.assignment
+    want = policy.n_shards
+    resize = want is not None and int(want) != cur.n_shards
+    trigger = (
+        resize
+        or log.occupancy_spread() > policy.spread_threshold
+        or (policy.on_capacity_growth and capacity_grew)
+    )
+    if not trigger:
+        return None
+    hist = log.live_degree_histogram()
+    if resize:
+        return cur.resize(int(want), hist)
+    new = cur.rebalance(hist)
+    if np.array_equal(new.positions, cur.positions):
+        return None  # same layout would be installed: skip the no-op epoch
+    return new
+
+
+# ==========================================================================
 # Evolving-graph query batching (Q×S×V CQRS serving front-end)
 # ==========================================================================
 @dataclasses.dataclass
@@ -169,6 +228,7 @@ class QueryBatcher:
         clock: Callable[[], float] = time.monotonic,
         pipelined: bool = False,
         quarantine_factor: Optional[float] = None,
+        reshard_policy: Optional[ReshardPolicy] = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -188,6 +248,12 @@ class QueryBatcher:
         # pathological watcher stops holding its group's lockstep
         # while_loops hostage.  None disables quarantining.
         self.quarantine_factor = quarantine_factor
+        # online resharding: after each served slide the policy is checked
+        # against the view's log and, when it fires, every group on the
+        # view live-migrates to the derived layout as part of the same
+        # (pipelined-executor) window job — serving lanes keep draining
+        self.reshard_policy = reshard_policy
+        self._reshard_state: dict = {}  # id(view) → {"slides", "e_cap"}
         self._clock = clock
         self._executor: Optional[ThreadPoolExecutor] = None
         self.queue: deque[QueryRequest] = deque()
@@ -512,9 +578,48 @@ class QueryBatcher:
             # abandoned (query, source) does eventually expire even on a view
             # that is advanced every slide
         self._quarantine_pathological(view)
+        self._maybe_reshard(view)
         if served:
             view.prune_history(min(b.diff_pos for b in served))
         return out
+
+    def _maybe_reshard(self, view) -> Optional[dict]:
+        """Check the reshard policy for one served view; migrate if it fires.
+
+        Runs after the window's group advances (every group is caught up to
+        the tip, the migration precondition) and inside the same executor
+        job on the pipelined path.  Returns the last group's migration
+        report, or ``None`` when nothing fired.
+        """
+        pol = self.reshard_policy
+        if pol is None:
+            return None
+        log = getattr(view, "log", None)
+        if log is None or not hasattr(log, "occupancy_spread"):
+            return None  # single-host view: nothing to migrate
+        groups = [b for b in self._batches.values() if b.view is view]
+        if not groups:
+            return None
+        st = self._reshard_state.setdefault(
+            id(view), {"slides": 0, "e_cap": int(log.capacity)}
+        )
+        st["slides"] += 1
+        cap = int(log.capacity)
+        grew = cap > st["e_cap"]
+        st["e_cap"] = cap
+        assignment = plan_reshard(
+            log, pol, capacity_grew=grew, slides_since=st["slides"]
+        )
+        if assignment is None:
+            return None
+        st["slides"] = 0
+        report = None
+        for b in groups:  # first call migrates the log; the rest are
+            report = b.reshard(assignment)  # view-idempotent lane migrations
+        self._obs_inc(
+            "serving_reshards_total", "policy-triggered layout migrations"
+        )
+        return report
 
     # -- pipelined serving ---------------------------------------------------
     def _ensure_executor(self) -> ThreadPoolExecutor:
@@ -608,8 +713,9 @@ class QueryBatcher:
         )
 
     def _post_advance(self, view, groups) -> None:
-        """Worker-side epilogue: QoS quarantine + history pruning."""
+        """Worker-side epilogue: QoS quarantine + resharding + pruning."""
         self._quarantine_pathological(view)
+        self._maybe_reshard(view)
         served = [
             b for b in groups
             if any(b is bb for bb in self._batches.values())
@@ -672,11 +778,31 @@ class QueryBatcher:
         with :meth:`resume`.  Checkpoints are taken between windows — the
         batcher drains in-flight pipelined work first.
         """
+        self._drain()
+        return self._checkpoint_state_sync(view)
+
+    def checkpoint_state_async(self, view) -> Future:
+        """:meth:`checkpoint_state` as a pipelined-executor job.
+
+        Serialization rides the batcher's single FIFO worker — it runs
+        after any in-flight window jobs (so the captured state is a
+        consistent between-windows snapshot) and the serving thread never
+        blocks on it: the call returns a :class:`~concurrent.futures.Future`
+        immediately and the caller hands its eventual ``(tree, extra)`` to
+        the checkpoint manager whenever convenient.  Later windows may be
+        submitted while the snapshot job is still queued — FIFO order keeps
+        the capture point well-defined (after every previously submitted
+        window, before every later one).
+        """
+        return self._ensure_executor().submit(
+            self._checkpoint_state_sync, view
+        )
+
+    def _checkpoint_state_sync(self, view) -> tuple[dict, dict]:
         from repro.checkpoint.streamstate import (
             STATE_FORMAT, query_payload, window_payload,
         )
 
-        self._drain()
         tree, wmeta = window_payload(view, prefix="window/")
         groups = [b for b in self._batches.values() if b.view is view]
         gmetas = []

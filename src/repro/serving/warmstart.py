@@ -106,6 +106,46 @@ def grid_for(sq) -> KernelGridSpec:
     )
 
 
+def observed_ell_ladder(sq) -> list[int]:
+    """Distinct sticky ELL row classes this replica has actually entered.
+
+    The ladder is data-dependent (repack growth follows the stream's degree
+    skew), so :func:`enumerate_grid`'s doubling successors can miss the
+    classes a real stream walks.  Reads the packer's recorded
+    ``class_history`` (single-host: the QRS's packer; sharded: the per-shard
+    packers run in lockstep, so shard 0's history is the group's).
+    """
+    qrs = getattr(sq, "_qrs", None)
+    packer = getattr(qrs, "_ell_packer", None)
+    if packer is None:
+        cache = getattr(sq, "_ell_cache", None)
+        packers = getattr(cache, "_packers", None)
+        packer = packers[0] if packers else None
+    if packer is None:
+        return []
+    out: list[int] = []
+    for r in packer.class_history:
+        if r and r not in out:
+            out.append(int(r))
+    return out
+
+
+def ladder_specs(sq) -> list[KernelGridSpec]:
+    """Current grid point plus one spec per observed ELL growth class.
+
+    Checkpointing these into ``grid.json`` (``warmup(ladder_specs(sq),
+    cache_dir=...)``) lets :func:`warm_from_manifest` pre-trace the exact
+    repack ladder a previous run walked, so a first-boot replica of the
+    same stream never compiles on a data-dependent ELL growth.
+    """
+    base = grid_for(sq)
+    out = [base]
+    for r in observed_ell_ladder(sq):
+        if r != base.ell_rows:
+            out.append(dataclasses.replace(base, ell_rows=r))
+    return out
+
+
 def enumerate_grid(
     specs: Union[KernelGridSpec, Iterable[KernelGridSpec]],
     *,

@@ -120,6 +120,17 @@ def test_architecture_covers_observability():
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
 
 
+def test_architecture_covers_online_resharding():
+    """The online-resharding section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Online resharding" in text
+    for sym in ("MigrationPlan", "migration_plan", "rebalance", "resize",
+                "ReshardPolicy", "plan_reshard", "occupancy_spread",
+                "reshard", "window_payload", "replay_delta_log",
+                "observed_ell_ladder", "ladder_specs"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
 def test_architecture_covers_warm_start_and_recovery():
     """The warm-start/recovery section and its entry points are on the map."""
     text = (REPO / "docs" / "ARCHITECTURE.md").read_text()

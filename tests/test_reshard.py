@@ -1,0 +1,592 @@
+"""Elastic online resharding: layout epochs + live shard-state migration.
+
+Tier-1 coverage of the resharding tentpole on the lone CPU device:
+
+* layout-epoch derivations (``rebalance``/``resize``) and the position-space
+  ``MigrationPlan`` permutation;
+* mid-stream ``reshard()`` of a live SPMD query — bit-for-bit equal to a
+  never-resharded run with ZERO fixpoint re-solves (the hash assignment's
+  local-id map is a nontrivial vertex permutation even on one shard, so the
+  warm-value permute is genuinely exercised in-process; the 8-device
+  grow/shrink variant lives in ``_stream_shard_checks.py::check_reshard``);
+* host-level log/view resharding across shard counts (no mesh needed);
+* the serving-path trigger (``ReshardPolicy``/``plan_reshard``) through
+  ``QueryBatcher`` and ``ServeSupervisor``, including occupancy-spread
+  recovery on a hub-drift stream;
+* reshard → checkpoint → restore roundtrips, the delta-encoded checkpoint
+  payload, the non-blocking background checkpoint job, and the observed ELL
+  class ladder checkpointed into the warm-start grid.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.api import EvolvingQuery, StreamingQuery, StreamingQueryBatch
+from repro.graph.generators import (
+    generate_evolving_stream,
+    generate_rmat,
+    generate_uniform_weights,
+)
+from repro.graph.shardlog import (
+    MigrationPlan,
+    ShardedSnapshotLog,
+    ShardedWindowView,
+    degree_histogram,
+    migration_plan,
+)
+from repro.graph.stream import SnapshotLog, WindowView
+from repro.serving.scheduler import QueryBatcher, ReshardPolicy, plan_reshard
+
+V = 48
+WINDOW = 3
+
+
+def make_stream(seed: int, *, num_snapshots: int = 9, batch_size: int = 20):
+    src, dst = generate_rmat(V, 192, seed=seed)
+    w = generate_uniform_weights(len(src), seed=seed + 1, grid=16)
+    return generate_evolving_stream(
+        src, dst, w, V, num_snapshots=num_snapshots, batch_size=batch_size,
+        readd_prob=0.4, seed=seed + 2,
+    )
+
+
+def hash_slog(base, deltas, *, n_prime: int = WINDOW, seed: int = 0):
+    """1-shard hash-assigned log primed to ``n_prime`` snapshots.
+
+    Hash local ids are a nontrivial permutation of the vertex space, so the
+    position machinery (and a later rebalance to identity-local ``balanced``
+    ranges) moves real state even on one shard.
+    """
+    slog = ShardedSnapshotLog(V, 1, capacity=64, assignment="hash", seed=seed)
+    slog.append_snapshot(*base)
+    for d in deltas[: n_prime - 1]:
+        slog.append_snapshot(*d)
+    return slog, deltas[n_prime - 1:]
+
+
+def hub_drift_stream(slides: int = 24, *, per_slide: int = 16, width: int = 6,
+                     seed: int = 0):
+    """Adds-only stream whose in-edge mass drifts across the vertex space.
+
+    Each slide lands ``per_slide`` edges on a ``width``-wide hub region whose
+    center sweeps 0 → V.  A layout balanced for the early hubs ends up owning
+    almost none of the late mass — the workload online resharding exists for.
+    """
+    rng = np.random.default_rng(seed)
+    base_dst = rng.integers(0, width, size=per_slide)
+    base_src = rng.integers(0, V, size=per_slide)
+    base = (base_src, base_dst, np.ones(per_slide, np.float32))
+    deltas = []
+    for t in range(1, slides):
+        center = (t * V) // slides
+        dst = (center + rng.integers(0, width, size=per_slide)) % V
+        src = rng.integers(0, V, size=per_slide)
+        w = (1.0 + rng.integers(0, 8, size=per_slide) / 8.0).astype(np.float32)
+        deltas.append((src, dst, w, (), ()))
+    return base, deltas
+
+
+# ===================================================== layout-epoch mechanics
+def test_layout_epochs_and_migration_plan():
+    base, deltas = make_stream(seed=0)
+    slog = ShardedSnapshotLog.from_stream(base, deltas, V, 4, capacity=64)
+    old = slog.assignment
+    assert old.epoch == 0
+    hist = slog.live_degree_histogram()
+
+    new = old.rebalance(hist)
+    assert new.epoch == old.epoch + 1 and new.n_shards == old.n_shards
+    grown = old.resize(6, hist)
+    assert grown.epoch == old.epoch + 1 and grown.n_shards == 6
+    shrunk = new.resize(2)
+    assert shrunk.epoch == new.epoch + 1 and shrunk.n_shards == 2
+    with pytest.raises(ValueError):
+        old.resize(0)
+
+    # the plan routes every vertex's old position to its new one
+    plan = migration_plan(old, grown)
+    assert isinstance(plan, MigrationPlan)
+    vals = np.full(old.state_len, -7.0, np.float32)
+    vals[old.positions] = np.arange(V, dtype=np.float32)
+    out = plan.permute(vals, np.float32(-7.0))
+    assert out.shape == (grown.state_len,)
+    np.testing.assert_array_equal(out[grown.positions],
+                                  np.arange(V, dtype=np.float32))
+    # padding slots carry the fill identity
+    mask = np.ones(grown.state_len, bool)
+    mask[grown.positions] = False
+    assert (out[mask] == -7.0).all()
+    assert 0 < plan.moved <= V
+    assert plan.bytes_moved(vals) == plan.moved * vals.itemsize
+
+
+# ============================================== live SPMD migration (1 shard)
+@pytest.mark.parametrize("query,source", [("sssp", 0), ("sswp", 5), ("bfs", 7)])
+@pytest.mark.parametrize("method", ["cqrs", "cqrs_ell"])
+def test_midstream_reshard_bit_for_bit(query, source, method):
+    """A live query resharded mid-stream (hash → balanced layout) serves
+    every later slide bit-for-bit equal to a never-resharded run, without
+    re-solving a single fixpoint (supersteps frozen; exactly the two parent
+    forest recomputes are launched)."""
+    base, deltas = make_stream(seed=3)
+    rlog, pending = hash_slog(base, deltas)
+    ref_sq = StreamingQuery(
+        ShardedWindowView(rlog, size=WINDOW), query, source, method=method
+    )
+    ref = [np.asarray(ref_sq.results).copy()]
+    for d in pending:
+        ref_sq.advance(d)
+        ref.append(np.asarray(ref_sq.results).copy())
+
+    slog, _ = hash_slog(base, deltas)
+    sq = StreamingQuery(
+        ShardedWindowView(slog, size=WINDOW), query, source, method=method
+    )
+    sq.results
+    sq.advance(pending[0])
+    sq.advance(pending[1])
+    pre_ss, pre_la = sq._bounds.supersteps, sq._bounds.launches
+    report = sq.reshard()  # default: rebalance on the live histogram
+    assert report["epoch"] == 1 and slog.assignment.epoch == 1
+    assert report["n_shards"] == 1
+    assert report["moved_positions"] > 0  # hash → balanced really permutes
+    assert report["bytes_moved"] > 0 and report["seconds"] >= 0.0
+    assert sq._bounds.supersteps == pre_ss, "migration re-solved a fixpoint"
+    assert sq._bounds.launches == pre_la + 2
+    np.testing.assert_array_equal(np.asarray(sq.results), ref[2])
+    for j, d in enumerate(pending[2:], start=2):
+        sq.advance(d)
+        np.testing.assert_array_equal(
+            np.asarray(sq.results), ref[j + 1],
+            err_msg=f"{query}/{method} slide {j} after migration",
+        )
+
+
+def test_midstream_batch_reshard_bit_for_bit():
+    """Q-folded groups migrate as one unit: warm lane values permute through
+    the shared plan (padding lanes ride along) and stay bit-for-bit."""
+    base, deltas = make_stream(seed=4)
+    for method in ("cqrs", "cqrs_ell"):
+        rlog, pending = hash_slog(base, deltas)
+        ref_sq = StreamingQueryBatch(
+            ShardedWindowView(rlog, size=WINDOW), "sssp", [0, 5, 9],
+            method=method,
+        )
+        ref = [np.asarray(ref_sq.results).copy()]
+        for d in pending:
+            ref_sq.advance(d)
+            ref.append(np.asarray(ref_sq.results).copy())
+
+        slog, _ = hash_slog(base, deltas)
+        sq = StreamingQueryBatch(
+            ShardedWindowView(slog, size=WINDOW), "sssp", [0, 5, 9],
+            method=method,
+        )
+        sq.results
+        sq.advance(pending[0])
+        pre_ss, pre_la = sq._bounds.supersteps, sq._bounds.launches
+        sq.reshard()
+        assert sq._bounds.supersteps == pre_ss
+        assert sq._bounds.launches == pre_la + 2
+        np.testing.assert_array_equal(np.asarray(sq.results), ref[1])
+        for j, d in enumerate(pending[1:], start=1):
+            sq.advance(d)
+            np.testing.assert_array_equal(
+                np.asarray(sq.results), ref[j + 1],
+                err_msg=f"batch/{method} slide {j} after migration",
+            )
+
+
+def test_reshard_requires_caught_up_query():
+    base, deltas = make_stream(seed=5)
+    slog, pending = hash_slog(base, deltas)
+    sq = StreamingQuery(ShardedWindowView(slog, size=WINDOW), "sssp", 0)
+    sq.results
+    slog.append_snapshot(*pending[0])
+    with pytest.raises(RuntimeError, match="caught-up"):
+        sq.reshard()
+
+
+def test_view_reshard_is_idempotent_for_siblings():
+    """Several queries sharing one view each call reshard with the same
+    target; only the first migrates the log."""
+    base, deltas = make_stream(seed=6)
+    slog, _ = hash_slog(base, deltas)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    target = slog.assignment.rebalance(slog.live_degree_histogram())
+    installed = sview.reshard(target)
+    assert slog.assignment is installed
+    again = sview.reshard(installed)
+    assert again is installed and slog.assignment.epoch == installed.epoch
+
+
+# ============================================ host-level resize (no mesh)
+def test_host_log_resize_grow_and_shrink():
+    """``ShardedSnapshotLog.reshard`` across shard counts: the re-routed log
+    materializes identically to a single-host log on every remaining slide,
+    snapshot indices and the retirement watermark survive, and epochs only
+    move forward."""
+    base, deltas = make_stream(seed=7)
+    log = SnapshotLog(V, capacity=512)
+    slog = ShardedSnapshotLog(V, 4, capacity=64)
+    log.append_snapshot(*base)
+    slog.append_snapshot(*base)
+    for d in deltas[: WINDOW - 1]:
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+    view = WindowView(log, size=WINDOW)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    pending = deltas[WINDOW - 1:]
+
+    def serve(d):
+        log.append_snapshot(*d)
+        slog.append_snapshot(*d)
+        view.slide()
+        sview.slide()
+        ref = EvolvingQuery(view.materialize(), "sssp", 0).evaluate("cqrs")
+        got = EvolvingQuery(sview.materialize(), "sssp", 0).evaluate("cqrs")
+        np.testing.assert_array_equal(got, ref)
+
+    serve(pending[0])
+    sview.prune_history(sview.history_end)  # sets a nonzero watermark
+    watermark = max(sh.retired_upto for sh in slog.shards)
+    assert watermark > 0
+
+    hist = slog.live_degree_histogram()
+    for n_to in (2, 6):  # shrink, then grow past the original count
+        before = slog.assignment.epoch
+        installed = sview.reshard(slog.assignment.resize(n_to, hist))
+        assert slog.n_shards == n_to == installed.n_shards
+        assert installed.epoch == before + 1
+        assert slog.num_snapshots == log.num_snapshots
+        assert max(sh.retired_upto for sh in slog.shards) == watermark
+        # every stored edge sits on the shard the new layout names
+        owner = slog.assignment.owner
+        for s, sh in enumerate(slog.shards):
+            n = sh.num_edges
+            assert n == 0 or (owner[sh.dst[:n]] == s).all()
+        serve(pending[1])
+        pending = pending[1:]
+    for d in pending[1:]:
+        serve(d)
+
+
+# ================================================== policy trigger + serving
+def test_plan_reshard_policy_gates():
+    base, deltas = make_stream(seed=8)
+    slog = ShardedSnapshotLog.from_stream(base, deltas, V, 4, capacity=64)
+
+    pol = ReshardPolicy(spread_threshold=0.0, min_slides=8)
+    assert plan_reshard(slog, pol, slides_since=3) is None  # rate limit
+    got = plan_reshard(slog, pol, slides_since=8)
+    assert got is not None and got.epoch == slog.assignment.epoch + 1
+
+    # spread under threshold, no growth, no resize target → keep the layout
+    calm = ReshardPolicy(spread_threshold=1e9, on_capacity_growth=False)
+    assert plan_reshard(slog, calm, capacity_grew=True) is None
+
+    # capacity growth is a trigger on its own
+    growth = ReshardPolicy(spread_threshold=1e9, on_capacity_growth=True)
+    assert plan_reshard(slog, growth, capacity_grew=True) is not None
+
+    # an explicit shard-count target always wins
+    resize = ReshardPolicy(spread_threshold=1e9, n_shards=2,
+                           on_capacity_growth=False)
+    got = plan_reshard(slog, resize)
+    assert got is not None and got.n_shards == 2
+
+    # a derived layout identical to the current one is skipped entirely
+    slog.reshard(slog.assignment.rebalance(slog.live_degree_histogram()))
+    eager = ReshardPolicy(spread_threshold=0.0, min_slides=0)
+    assert plan_reshard(slog, eager, slides_since=99) is None
+
+
+def test_occupancy_spread_recovery_on_hub_drift():
+    """The workload argument: on a hub-drift stream a fixed layout degrades
+    to the skew ceiling while periodic policy resharding holds the live
+    spread near even — and recovery is a single rebalance away."""
+    base, deltas = hub_drift_stream()
+    fixed = ShardedSnapshotLog(V, 4, capacity=64, assignment="balanced",
+                               degree_hist=degree_histogram(base, [], V))
+    online = ShardedSnapshotLog(V, 4, capacity=64, assignment="balanced",
+                                degree_hist=degree_histogram(base, [], V))
+    fixed.append_snapshot(*base)
+    online.append_snapshot(*base)
+    pol = ReshardPolicy(spread_threshold=1.5, min_slides=4,
+                        on_capacity_growth=False)
+    slides = 0
+    online_spreads = []
+    for d in deltas:
+        fixed.append_snapshot(*d)
+        online.append_snapshot(*d)
+        slides += 1
+        got = plan_reshard(online, pol, slides_since=slides)
+        if got is not None:
+            online.reshard(got)
+            slides = 0
+        online_spreads.append(online.occupancy_spread())
+    assert fixed.occupancy_spread() > 2.0, fixed.occupancy_spread()
+    assert max(online_spreads[-8:]) <= 2.0, online_spreads
+    assert online.occupancy_spread() < fixed.occupancy_spread()
+    assert online.assignment.epoch >= 1
+    # a single recovery rebalance fixes even the degraded fixed log
+    fixed.reshard(fixed.assignment.rebalance(fixed.live_degree_histogram()))
+    assert fixed.occupancy_spread() <= 2.0
+
+
+def test_query_batcher_policy_migration_bit_for_bit():
+    """``QueryBatcher(reshard_policy=...)`` migrates a served view when the
+    policy fires and keeps serving bit-for-bit; the derived-layout dedup
+    stops repeat migrations once the layout is balanced."""
+    from repro.obs.metrics import MetricsRegistry, use_registry
+
+    base, deltas = make_stream(seed=9)
+    rlog, pending = hash_slog(base, deltas)
+    rview = ShardedWindowView(rlog, size=WINDOW)
+    ref_qb = QueryBatcher()
+    ref_qb.watch(rview, "sssp", 0)
+    ref_qb.watch(rview, "bfs", 7)
+
+    slog, _ = hash_slog(base, deltas)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    with use_registry(MetricsRegistry()) as reg:
+        qb = QueryBatcher(reshard_policy=ReshardPolicy(
+            spread_threshold=0.5, min_slides=2, on_capacity_growth=False,
+        ))
+        qb.watch(sview, "sssp", 0)
+        qb.watch(sview, "bfs", 7)
+        for k, d in enumerate(pending):
+            want = ref_qb.advance_window(rview, d)
+            got = qb.advance_window(sview, d)
+            for key in want:
+                np.testing.assert_array_equal(
+                    got[key], want[key], err_msg=f"slide {k} {key}"
+                )
+        assert slog.assignment.epoch == 1  # fired once, then deduped
+        assert reg.counter("serving_reshards_total").value() == 1
+
+
+def test_query_batcher_pipelined_path_reshards():
+    """The async serving path runs the same policy check inside the worker
+    job — migration is pipelined, not a stop-the-world stall."""
+    base, deltas = make_stream(seed=10)
+    rlog, pending = hash_slog(base, deltas)
+    rview = ShardedWindowView(rlog, size=WINDOW)
+    ref_qb = QueryBatcher()
+    ref_qb.watch(rview, "sssp", 0)
+
+    slog, _ = hash_slog(base, deltas)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    qb = QueryBatcher(reshard_policy=ReshardPolicy(
+        spread_threshold=0.5, min_slides=2, on_capacity_growth=False,
+    ))
+    qb.watch(sview, "sssp", 0)
+    try:
+        handles = [qb.advance_window_async(sview, d) for d in pending]
+        for k, (h, d) in enumerate(zip(handles, pending)):
+            want = ref_qb.advance_window(rview, d)
+            got = h.result()
+            np.testing.assert_array_equal(
+                got[("sssp", 0)], want[("sssp", 0)], err_msg=f"slide {k}"
+            )
+        assert slog.assignment.epoch == 1
+    finally:
+        qb.close()
+
+
+def test_serve_supervisor_policy_migration():
+    """``ServeSupervisor(reshard_policy=...)`` live-migrates its replica
+    mid-run, serves identically to an unsupervised stream, and emits a
+    structured ``reshard`` event."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.ft.recovery import ServeSupervisor
+    from repro.obs.export import EventLog
+
+    base, deltas = make_stream(seed=11)
+    rlog, pending = hash_slog(base, deltas)
+    ref_sq = StreamingQuery(ShardedWindowView(rlog, size=WINDOW), "sswp", 5)
+    ref = []
+    for d in pending:
+        ref_sq.advance(d)
+        ref.append(np.asarray(ref_sq.results).copy())
+
+    slog, _ = hash_slog(base, deltas)
+    sq = StreamingQuery(ShardedWindowView(slog, size=WINDOW), "sswp", 5)
+    import tempfile
+
+    events = EventLog()
+    with tempfile.TemporaryDirectory() as d:
+        sup = ServeSupervisor(
+            CheckpointManager(d), ckpt_every=100, events=events,
+            reshard_policy=ReshardPolicy(spread_threshold=0.5, min_slides=2,
+                                         on_capacity_growth=False),
+        )
+        replica, served, stats = sup.run(sq, pending)
+    assert stats["restarts"] == 0
+    for k, (got, want) in enumerate(zip(served, ref)):
+        np.testing.assert_array_equal(got, want, err_msg=f"slide {k}")
+    assert slog.assignment.epoch == 1
+    kinds = [e["event"] for e in events.events]
+    assert "reshard" in kinds
+    ev = next(e for e in events.events if e["event"] == "reshard")
+    assert ev["n_shards"] == 1 and ev["epoch"] == 1
+    assert ev["bytes_moved"] > 0
+
+
+# ===================================== checkpoints: reshard/delta/background
+def test_reshard_then_checkpoint_then_restore_roundtrip():
+    """A migrated replica checkpoints and restores like any other: the saved
+    global-space values re-enter the post-migration layout and every later
+    slide stays bit-for-bit."""
+    from repro.checkpoint import resume_streaming, streaming_state
+
+    base, deltas = make_stream(seed=12)
+    rlog, pending = hash_slog(base, deltas)
+    ref_sq = StreamingQuery(
+        ShardedWindowView(rlog, size=WINDOW), "sssp", 0, method="cqrs_ell"
+    )
+    ref = [np.asarray(ref_sq.results).copy()]
+    for d in pending:
+        ref_sq.advance(d)
+        ref.append(np.asarray(ref_sq.results).copy())
+
+    slog, _ = hash_slog(base, deltas)
+    sq = StreamingQuery(
+        ShardedWindowView(slog, size=WINDOW), "sssp", 0, method="cqrs_ell"
+    )
+    sq.results
+    sq.advance(pending[0])
+    sq.reshard()
+    sq.advance(pending[1])
+    tree, extra = streaming_state(sq)
+    restored = resume_streaming(tree, extra)
+    np.testing.assert_array_equal(np.asarray(restored.results), ref[2])
+    for j, d in enumerate(pending[2:], start=2):
+        restored.advance(d)
+        sq.advance(d)
+        np.testing.assert_array_equal(np.asarray(sq.results), ref[j + 1])
+        np.testing.assert_array_equal(
+            np.asarray(restored.results), ref[j + 1],
+            err_msg=f"restored replica diverged at slide {j}",
+        )
+
+
+def test_delta_encoded_window_payload():
+    """``encoding="delta"`` stores O(window·batch) instead of O(window·E),
+    rebuilds the identical window (membership, weights, extrema), and the
+    legacy ``"full"`` layout keeps restoring."""
+    from repro.checkpoint.streamstate import rebuild_view, window_payload
+
+    base, deltas = make_stream(seed=13, num_snapshots=8, batch_size=12)
+    log = SnapshotLog.from_stream(base, deltas, V)
+    view = WindowView(log, size=5)
+    view.slide_to_tip()
+
+    with pytest.raises(ValueError, match="encoding"):
+        window_payload(view, encoding="zstd")
+
+    outs = {}
+    for enc in ("delta", "full"):
+        tree, meta = window_payload(view, encoding=enc)
+        assert meta["encoding"] == enc
+        rv = rebuild_view(tree, meta)
+        outs[enc] = sum(a.nbytes for a in tree.values())
+        # the rebuilt log reproduces window weight extrema exactly
+        ref = EvolvingQuery(view.materialize(), "sswp", 5).evaluate("cqrs")
+        got = EvolvingQuery(rv.materialize(), "sswp", 5).evaluate("cqrs")
+        np.testing.assert_array_equal(got, ref)
+    assert outs["delta"] < outs["full"], outs
+
+    # sharded views delta-encode too (global ids concatenated across shards)
+    slog = ShardedSnapshotLog.from_stream(base, deltas, V, n_shards=4,
+                                          capacity=64)
+    sview = ShardedWindowView(slog, size=5)
+    sview.slide_to_tip()
+    tree, meta = window_payload(sview)
+    assert meta["encoding"] == "delta" and meta["sharded"]
+    rv = rebuild_view(tree, meta)
+    ref = EvolvingQuery(sview.materialize(), "sssp", 0).evaluate("cqrs")
+    got = EvolvingQuery(rv.materialize(), "sssp", 0).evaluate("cqrs")
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_background_checkpoint_never_blocks_serving():
+    """``checkpoint_state_async`` returns immediately even while the worker
+    is busy — serialization rides the FIFO pipeline; the serve thread never
+    waits on it — and yields the same payload as the synchronous path."""
+    base, deltas = make_stream(seed=14)
+    slog, pending = hash_slog(base, deltas)
+    sview = ShardedWindowView(slog, size=WINDOW)
+    qb = QueryBatcher()
+    qb.watch(sview, "sssp", 0)
+    try:
+        qb.advance_window(sview, pending[0])
+        gate = threading.Event()
+        qb._ensure_executor().submit(gate.wait)  # occupy the worker
+        fut = qb.checkpoint_state_async(sview)   # must NOT block here
+        assert not fut.done()  # queued behind the gate, not run inline
+        gate.set()
+        tree, extra = fut.result(timeout=60)
+        ref_tree, ref_extra = qb.checkpoint_state(sview)
+        assert extra == ref_extra
+        assert set(tree) == set(ref_tree)
+        for k in tree:
+            np.testing.assert_array_equal(tree[k], ref_tree[k], err_msg=k)
+        # the captured state restores into a serving batcher that picks the
+        # stream back up bit-for-bit
+        qb2, view2 = QueryBatcher.resume(tree, extra)
+        want = qb.advance_window(sview, pending[1])
+        got = qb2.advance_window(view2, pending[1])
+        np.testing.assert_array_equal(got[("sssp", 0)], want[("sssp", 0)])
+        qb2.close()
+    finally:
+        qb.close()
+
+
+# ========================================================= first-boot ladder
+def test_observed_ell_ladder_checkpointed():
+    """The packer records every sticky row class it enters; ``ladder_specs``
+    turns that into grid points and ``grid.json`` round-trips them — a
+    first boot pre-traces the data-dependent ladder a prior run walked."""
+    from repro.graph.ell import StableEllPacker
+    from repro.serving.warmstart import (
+        grid_for,
+        ladder_specs,
+        load_grid,
+        observed_ell_ladder,
+        save_grid,
+    )
+
+    p = StableEllPacker(16, slot_width=4, row_align=2)
+    p.pack([0, 1], [2, 3], [1.0, 1.0])
+    first = p.num_rows
+    p.pack(list(range(12)), [i % 16 for i in range(12)],
+           [1.0] * 12)  # forces a class transition
+    assert p.class_history[0] == first
+    assert p.class_history == sorted(set(p.class_history))
+    assert len(p.class_history) >= 2
+
+    base, deltas = make_stream(seed=15)
+    slog, pending = hash_slog(base, deltas)
+    sq = StreamingQuery(
+        ShardedWindowView(slog, size=WINDOW), "sssp", 0, method="cqrs_ell"
+    )
+    sq.results
+    for d in pending:
+        sq.advance(d)
+    ladder = observed_ell_ladder(sq)
+    assert ladder, "live cqrs_ell query recorded no ELL classes"
+    specs = ladder_specs(sq)
+    assert specs[0] == grid_for(sq)
+    spec_rows = {s.ell_rows for s in specs}
+    assert set(ladder) <= spec_rows
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        save_grid(specs, d)
+        loaded = load_grid(d)
+        assert [s.key() for s in loaded] == [s.key() for s in specs]

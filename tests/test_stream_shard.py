@@ -346,7 +346,7 @@ def _run(check: str):
 @pytest.mark.parametrize(
     "check",
     ["equivalence", "growth", "serving", "shard_local", "qbatch",
-     "collectives", "ell", "rebalance", "warmstart"],
+     "collectives", "ell", "rebalance", "warmstart", "reshard"],
 )
 def test_stream_shard_mesh(check):
     _run(check)
