@@ -27,7 +27,11 @@
              with --warmstart, cold vs warm time-to-first-served-slide for
              a restarted replica (AOT kernel-grid manifest replay against a
              persistent executable cache + streaming checkpoint resume) —
-             bit-for-bit asserted, warm ≥3x cold (≥1.5x with --fast)
+             bit-for-bit asserted, warm ≥3x cold (≥1.5x with --fast);
+             with --chaos, fault-injected serving: seeded multi-fault
+             schedules replayed bit-for-bit vs a fault-free reference,
+             rollback/recovery latency percentiles, and the disarmed
+             injection-hook overhead asserted ≤3% of the per-slide p50
   roofline — summary of dry-run-derived roofline terms (if present)
 
 --json PATH writes the run as a structured BENCH payload (CSV rows +
@@ -1042,6 +1046,139 @@ def bench_reshard(fast: bool):
     )
 
 
+def bench_chaos(fast: bool):
+    """Chaos-hardened serving: recovery latency + disarmed-hook inertness.
+
+    **Schedule track.**  Seeded multi-fault schedules (``FaultPlan.seeded``)
+    replayed through :class:`~repro.ft.chaos.ChaosHarness`: each row is one
+    schedule's wall time with its fired/quarantined/degraded accounting, and
+    every schedule is asserted to converge **bit-for-bit** with the
+    fault-free reference after drain.  One extra schedule bit-flips a
+    committed checkpoint payload and asserts the newest-verifiable fallback
+    restores bit-for-bit.
+
+    **Recovery track.**  A warm ``QueryBatcher`` on a zero-backoff clock is
+    faulted on alternating slides, one advance phase per round: the rows are
+    p50/p99 of the *rollback* (the failed, transactionally-rolled-back
+    advance serving last-good rows), the *recovery* (the catch-up retry),
+    and the *clean advance* baseline — all on the same stream, every slide's
+    rows asserted equal to the fault-free reference.
+
+    **Inert track.**  With no plan armed every injection hook is one
+    host-side ``is None`` test; the row times the disarmed
+    ``fault_point``/``corrupt_point`` pair directly and prices a generous
+    16-hooks-per-slide budget against the clean advance p50 (a conservative
+    stand-in for the pipelined p50 — the sync path is the shorter
+    denominator).  Asserted ≤3% — the criterion that armed-off chaos
+    support costs serving nothing.
+    """
+    import shutil
+    import tempfile
+
+    from repro.ft.chaos import ChaosHarness
+    from repro.ft.faultinject import (
+        ADVANCE_SITES, FaultPlan, FaultSpec, active_injector,
+        corrupt_point, fault_point, inject,
+    )
+    from repro.serving.scheduler import QueryBatcher
+
+    if fast:
+        stream = dict(num_snapshots=8)
+        seeds = range(3)
+    else:
+        stream = dict(num_vertices=96, num_edges=384, num_snapshots=12,
+                      batch_size=30)
+        seeds = range(6)
+
+    # -- schedule track: seeded schedules, bit-for-bit after drain ----------
+    h = ChaosHarness(**stream)
+    for seed in seeds:
+        t0 = time.perf_counter()
+        rep = h.run(seed=seed, n_faults=2)
+        dt = time.perf_counter() - t0
+        assert rep["converged"], f"seed {seed} diverged: {rep['mismatches']}"
+        emit(f"chaos/schedule/seed{seed}", dt * 1e6,
+             f"faults={rep['faults_fired']};quarantined={rep['quarantined']};"
+             f"degraded_slides={rep['degraded_slides']};"
+             f"drain_rounds={rep['drain_rounds']};"
+             f"max_behind={rep['max_behind']};bit_for_bit=1")
+
+    work = tempfile.mkdtemp(prefix="chaos-bench-")
+    try:
+        hc = ChaosHarness(**stream, ckpt_every=2, ckpt_dir=work)
+        t0 = time.perf_counter()
+        rep = hc.run(FaultPlan(specs=(
+            FaultSpec(site="ckpt_payload", slide=1, mode="bitflip"),
+            FaultSpec(site="advance_eval", slide=2),
+        )))
+        dt = time.perf_counter() - t0
+        assert rep["converged"], rep["mismatches"]
+        assert rep.get("ckpt_restore_ok"), "corrupt-step fallback failed"
+        emit("chaos/schedule/ckpt_bitflip", dt * 1e6,
+             f"faults={rep['faults_fired']};"
+             f"degraded_slides={rep['degraded_slides']};"
+             f"ckpt_restore_ok=1;bit_for_bit=1")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    # -- recovery track: rollback / catch-up wall times ---------------------
+    ref_rows = h._reference["rows"]
+    now = [0.0]
+    _, view = h._fresh_view()
+    qb = QueryBatcher(clock=lambda: now[0], retry_budget=8,
+                      backoff_base=0.0, backoff_cap=0.0)
+    for q_, s_ in h.watchers:
+        qb.watch(view, q_, s_)
+    clean_ts, rollback_ts, recover_ts = [], [], []
+    for k, d in enumerate(h.serve_deltas):
+        if k % 2 == 0:
+            site = ADVANCE_SITES[(k // 2) % len(ADVANCE_SITES)]
+            with inject(FaultPlan(specs=(FaultSpec(site=site),))) as inj:
+                t0 = time.perf_counter()
+                out = qb.advance_window(view, d)
+                rollback_ts.append(time.perf_counter() - t0)
+            assert inj.faults_fired == 1, f"{site} never fired"
+            assert out.degraded and max(out.slides_behind.values()) == 1
+            t0 = time.perf_counter()
+            out = qb.advance_window(view, None)
+            recover_ts.append(time.perf_counter() - t0)
+            assert not out.degraded, f"retry did not recover slide {k}"
+        else:
+            t0 = time.perf_counter()
+            out = qb.advance_window(view, d)
+            clean_ts.append(time.perf_counter() - t0)
+            assert not out.degraded
+        for key, val in ref_rows[k].items():
+            assert np.array_equal(out[key], val), \
+                f"chaos recovery != reference on slide {k} lane {key}"
+    for name, ts in (("clean_advance", clean_ts), ("rollback", rollback_ts),
+                     ("recovery", recover_ts)):
+        ms = np.asarray(ts) * 1e3
+        emit(f"chaos/recovery/{name}", float(np.median(ts)) * 1e6,
+             f"p50_ms={float(np.percentile(ms, 50)):.2f};"
+             f"p99_ms={float(np.percentile(ms, 99)):.2f};n={len(ts)};"
+             f"bit_for_bit=1")
+
+    # -- inert track: disarmed hooks priced against the serving p50 ---------
+    assert active_injector() is None
+    reps = 20_000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fault_point("advance_eval")
+        corrupt_point("ingest", None, num_vertices=0)
+    hook_us = (time.perf_counter() - t0) / reps / 2 * 1e6
+    per_slide_us = hook_us * 16  # ingest + shards + 4 phases + ckpt + stall
+    p50_clean_us = float(np.percentile(np.asarray(clean_ts), 50)) * 1e6
+    frac = per_slide_us / p50_clean_us
+    emit("chaos/inert/hook_overhead", hook_us,
+         f"per_slide_us={per_slide_us:.3f};frac_of_p50={frac:.6f};"
+         f"p50_clean_ms={p50_clean_us / 1e3:.2f};hooks_per_slide=16")
+    assert frac <= 0.03, (
+        f"disarmed injection hooks cost {frac * 100:.2f}% of the per-slide "
+        f"p50 (contract: <=3%)"
+    )
+
+
 def bench_roofline_summary(fast: bool):
     pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
     files = sorted(glob.glob(pat))
@@ -1086,6 +1223,11 @@ def main() -> None:
                          "online layout occupancy spread over a hub-drift "
                          "stream (online tail spread <=2x asserted) plus a "
                          "live-migration pause row, bit-for-bit asserted")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run evolving-stream in chaos mode: seeded fault "
+                         "schedules bit-for-bit vs a fault-free reference, "
+                         "rollback/recovery latency p50/p99, disarmed-hook "
+                         "overhead asserted <=3% of the per-slide p50")
     ap.add_argument("--out", default=None, help="also write the CSV to this path")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a structured BENCH payload (CSV rows + "
@@ -1096,7 +1238,9 @@ def main() -> None:
     args = ap.parse_args()
     global METRICS_JSONL
     METRICS_JSONL = args.metrics_jsonl
-    if args.reshard:
+    if args.chaos:
+        stream_bench = bench_chaos
+    elif args.reshard:
         stream_bench = bench_reshard
     elif args.warmstart:
         stream_bench = bench_warmstart

@@ -1,4 +1,9 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    array_checksums,
+    verify_checksums,
+)
 from repro.checkpoint.streamstate import (
     replay_log,
     rebuild_query,
@@ -10,7 +15,10 @@ from repro.checkpoint.streamstate import (
 )
 
 __all__ = [
+    "CheckpointCorruptError",
     "CheckpointManager",
+    "array_checksums",
+    "verify_checksums",
     "replay_log",
     "rebuild_query",
     "rebuild_view",

@@ -17,9 +17,44 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 
 import jax
 import numpy as np
+
+from repro.ft.faultinject import fault_file_point, fault_point
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step failed integrity verification (checksum mismatch,
+    truncated archive, or missing payload keys)."""
+
+
+def array_checksums(host: dict) -> dict:
+    """Per-key CRC32 of a flat ``{key: array}`` payload (JSON-able ints)."""
+    return {
+        k: int(zlib.crc32(np.ascontiguousarray(np.asarray(v)).tobytes()))
+        for k, v in host.items()
+    }
+
+
+def verify_checksums(arrays: dict, sums: dict, *, where: str = "") -> None:
+    """Raise :class:`CheckpointCorruptError` on any missing/mismatched key."""
+    bad = []
+    for key, want in sums.items():
+        arr = arrays.get(key)
+        if arr is None:
+            bad.append(f"{key} (missing)")
+            continue
+        got = int(zlib.crc32(np.ascontiguousarray(np.asarray(arr)).tobytes()))
+        if got != int(want):
+            bad.append(f"{key} (crc {got} != {int(want)})")
+    if bad:
+        raise CheckpointCorruptError(
+            f"checkpoint payload corrupt{' in ' + where if where else ''}: "
+            + ", ".join(bad[:4])
+            + (f" … +{len(bad) - 4} more" if len(bad) > 4 else "")
+        )
 
 
 def _flatten_with_paths(tree):
@@ -75,9 +110,14 @@ class CheckpointManager:
         flat, _ = _flatten_with_paths(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        # torn-write site: a fault here simulates a crash after the payload
+        # hits disk but before the manifest commit — the .tmp dir never
+        # becomes visible and _sweep_orphans reclaims it
+        fault_point("ckpt_torn")
         manifest = {
             "step": int(step),
             "keys": sorted(host.keys()),
+            "checksums": array_checksums(host),
             "extra": extra or {},
             "format": 1,
         }
@@ -89,6 +129,9 @@ class CheckpointManager:
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic commit
         self._gc()
+        # silent-corruption site: bit-flip/truncate a COMMITTED payload —
+        # only load-time checksum verification can catch this one
+        fault_file_point("ckpt_payload", os.path.join(final, "arrays.npz"))
         return final
 
     # ------------------------------------------------------------- restore
@@ -117,18 +160,69 @@ class CheckpointManager:
         Unlike :meth:`restore` no target tree is needed — the checkpoint's
         own key set is returned as a flat dict.  The resolved step is pinned
         against ``keep``-pruning for the manager's lifetime.
+
+        Every read verifies the manifest's per-key CRC32 checksums (written
+        by :meth:`save`).  An explicit ``step`` that fails verification
+        raises :class:`CheckpointCorruptError`; with ``step=None`` a corrupt
+        or truncated step is *skipped* — a ``checkpoint_corrupt_steps_total``
+        counter and ``ckpt_corrupt`` event record it — and the newest older
+        step that verifies is returned instead.
         """
         from repro.obs.metrics import get_registry
 
-        step = self._resolve(step)
-        path = os.path.join(self.directory, f"step_{step:09d}")
-        with get_registry().timer(
+        reg = get_registry()
+        if step is not None:
+            s = self._resolve(step)
+            with reg.timer(
+                "checkpoint_read_seconds", "manager.load disk read wall time"
+            ):
+                return self._read_step(s)
+        candidates = sorted(self.steps(), reverse=True)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        last_exc: Exception | None = None
+        with reg.timer(
             "checkpoint_read_seconds", "manager.load disk read wall time"
         ):
-            with open(os.path.join(path, "manifest.json")) as f:
-                manifest = json.load(f)
+            for s in candidates:
+                try:
+                    out = self._read_step(s)
+                except Exception as exc:  # corrupt/truncated: fall back
+                    last_exc = exc
+                    reg.counter(
+                        "checkpoint_corrupt_steps_total",
+                        "checkpoint steps skipped at load (failed verification)",
+                    ).inc()
+                    continue
+                self._protected.add(s)
+                return out
+        raise CheckpointCorruptError(
+            f"no verifiable checkpoint in {self.directory} "
+            f"(tried {len(candidates)} steps)"
+        ) from last_exc
+
+    def _read_step(self, step: int):
+        """Read + verify one committed step; raises on any corruption."""
+        path = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        try:
             with np.load(os.path.join(path, "arrays.npz")) as data:
                 arrays = {k: data[k] for k in data.files}
+        except CheckpointCorruptError:
+            raise
+        except Exception as exc:  # zip CRC failure, truncation, bad magic …
+            raise CheckpointCorruptError(
+                f"step {step} payload unreadable: {exc}"
+            ) from exc
+        missing = [k for k in manifest.get("keys", []) if k not in arrays]
+        if missing:
+            raise CheckpointCorruptError(
+                f"step {step} payload missing keys: {missing[:4]}"
+            )
+        sums = manifest.get("checksums")
+        if sums:
+            verify_checksums(arrays, sums, where=f"step {step}")
         return arrays, manifest
 
     def restore(self, target_tree, step: int | None = None, shardings=None):

@@ -170,7 +170,9 @@ def query_payload(sq, *, prefix: str = "") -> tuple[dict, dict]:
     for i, row in enumerate(sq._rows):
         tree[f"{prefix}rows/{i}"] = np.asarray(row)
     if bounds.lane_supersteps is not None:
-        tree[f"{prefix}lane_supersteps"] = np.asarray(
+        # np.array, not np.asarray: the live counter is mutated in place on
+        # every advance, and an aliased capture would drift after the fact
+        tree[f"{prefix}lane_supersteps"] = np.array(
             bounds.lane_supersteps, np.int64
         )
     batched = bounds.batched
@@ -208,15 +210,23 @@ def streaming_state(sq) -> tuple[dict, dict]:
     """Full checkpoint of one ``StreamingQuery``/``StreamingQueryBatch``.
 
     Returns ``(tree, extra)`` for
-    :meth:`repro.checkpoint.manager.CheckpointManager.save`.
+    :meth:`repro.checkpoint.manager.CheckpointManager.save`.  Every payload
+    section carries a CRC32 in ``extra["checksums"]`` so
+    :func:`resume_streaming` can reject a corrupt step before replaying it
+    (the manager's manifest-level checksums cover the same bytes, but the
+    extra travels with the state even through out-of-band transports).
     """
+    from repro.checkpoint.manager import array_checksums
+
     wtree, wmeta = window_payload(sq.view)
     qtree, qmeta = query_payload(sq)
-    return {**wtree, **qtree}, {
+    tree = {**wtree, **qtree}
+    return tree, {
         "format": STATE_FORMAT,
         "state": "streaming-query",
         "window_meta": wmeta,
         "query_meta": qmeta,
+        "checksums": array_checksums(tree),
     }
 
 
@@ -479,6 +489,11 @@ def resume_streaming(arrays: dict, extra: dict, *,
     """
     if int(extra.get("format", 0)) != STATE_FORMAT:
         raise ValueError(f"unsupported checkpoint format: {extra.get('format')}")
+    sums = extra.get("checksums")
+    if sums:
+        from repro.checkpoint.manager import verify_checksums
+
+        verify_checksums(arrays, sums, where="streaming state")
     qmeta = dict(extra["query_meta"])
     if method is not None:
         qmeta["method"] = method

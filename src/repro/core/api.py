@@ -73,10 +73,83 @@ from repro.core.bounds import StreamingBounds, compute_bounds
 from repro.core.engine import incremental_fixpoint
 from repro.core.qrs import PatchableQRS, build_qrs
 from repro.core.semiring import Semiring, get_semiring
+from repro.ft.faultinject import DeadLetterLog, InjectedFault, fault_point
 from repro.graph.structures import EvolvingGraph
 from repro.graph.stream import SnapshotLog, WindowView
 from repro.obs.stability import record_slide
 from repro.obs.trace import mark_ready, span
+
+# Attributes staged by REFERENCE during a transactional advance: shared
+# substrate (view/log), immutable config, and mesh handles are never part
+# of a slide's mutation set, so copying them would only alias-break the
+# sharing contracts (e.g. a QueryBatcher's common WindowView).  The
+# observability sinks (events, dead letters) must survive a rollback —
+# un-recording a quarantine would hide the fault the rollback answers.
+_STAGE_SKIP = frozenset({
+    "view", "log", "sr", "semiring", "mesh", "assign",
+    "events", "dead_letters",
+})
+
+
+def _copy_leaf(v):
+    """Rollback-safe copy of one attribute value.
+
+    Host numpy arrays are the only state mutated in place by the warm
+    layers; containers get a fresh spine (depth 1) so element rebinds roll
+    back; everything else — ints, jax arrays (immutable), meshes — is safe
+    by reference.
+    """
+    if isinstance(v, np.ndarray):
+        return v.copy()
+    if isinstance(v, list):
+        return [x.copy() if isinstance(x, np.ndarray) else x for x in v]
+    if isinstance(v, tuple):
+        return tuple(x.copy() if isinstance(x, np.ndarray) else x for x in v)
+    if isinstance(v, dict):
+        return {
+            k: (x.copy() if isinstance(x, np.ndarray) else x)
+            for k, x in v.items()
+        }
+    if isinstance(v, (set, frozenset)):
+        return set(v)
+    return v
+
+
+def _snapshot_state(obj, *, _depth: int = 0) -> dict:
+    """Copy-snapshot ``obj.__dict__`` for transactional rollback.
+
+    Engine sub-objects (``repro.*`` types: the warm bounds, the patchable
+    QRS) are recursed ONE level so their own numpy state is captured;
+    deeper derived caches are not snapshotted — rollback re-seeds them
+    (:meth:`StreamingQuery._reset_eval_caches`), which is exactly the move
+    live resharding already proved bit-for-bit safe.
+    """
+    snap = {}
+    for name, v in obj.__dict__.items():
+        if name in _STAGE_SKIP:
+            snap[name] = ("ref", v)
+        elif (
+            _depth == 0
+            and hasattr(v, "__dict__")
+            and type(v).__module__.startswith("repro.")
+        ):
+            snap[name] = ("obj", v, _snapshot_state(v, _depth=1))
+        else:
+            snap[name] = ("val", _copy_leaf(v))
+    return snap
+
+
+def _restore_state(obj, snap: dict) -> None:
+    """Put ``obj.__dict__`` back exactly as :func:`_snapshot_state` saw it."""
+    for name in list(obj.__dict__):
+        if name not in snap:
+            del obj.__dict__[name]
+    for name, entry in snap.items():
+        if entry[0] == "obj":
+            _restore_state(entry[1], entry[2])
+            obj.__dict__[name] = entry[1]
+        else:
+            obj.__dict__[name] = entry[1]
 
 
 class EvolvingQuery:
@@ -296,6 +369,11 @@ class StreamingQuery:
         # caller's host thread can route/pack the next slide while devices
         # run this one; results/`_materialize_rows` is the sync point
         self._defer_fetch = False
+        # poisoned delta batches rejected by log validation land here
+        # instead of failing the slide; `events` (an obs EventLog) is set
+        # by serving layers that want quarantine/rollback events
+        self.dead_letters = DeadLetterLog()
+        self.events = None
 
     # -- staged accessors -----------------------------------------------------
     @property
@@ -360,7 +438,17 @@ class StreamingQuery:
         """
         with span("delta_route"):
             if delta is not None:
-                self.view.log.append_snapshot(*delta)
+                try:
+                    self.view.log.append_snapshot(*delta)
+                except (ValueError, KeyError) as exc:
+                    # poisoned batch: validation rejected it BEFORE any log
+                    # mutation, so quarantining it and sliding on is exact
+                    self._quarantine_delta(delta, exc)
+                except InjectedFault:
+                    # torn cross-shard append: the sharded log self-heals
+                    # (the batch is fully committed) before surfacing the
+                    # fault, so the slide proceeds over durable state
+                    self._note_ingest_fault()
             if self._bounds is None:
                 self._ensure_primed()
                 return
@@ -386,15 +474,20 @@ class StreamingQuery:
         steps = 0
         patch_stats: dict = {}
         weights_dirty = False
+        staged = self._stage_slide() if pending else None
         try:
+            if pending:
+                fault_point("advance_delta_route")
             # each slide folds in against ITS window's masks, not the final
             # window's (rolling_masks reconstructs the intermediate states)
             for diff, (union, inter) in zip(
                 pending, view.rolling_masks(pending)
             ):
                 with span("bounds_refresh"):
+                    fault_point("advance_bounds_refresh")
                     steps += self._bounds.apply_slide(diff, inter, union)
                 with span("qrs_patch"):
+                    fault_point("advance_qrs_patch")
                     ps = self._qrs.apply_slide(
                         diff, np.asarray(self._bounds.uvv), union_mask=union
                     )
@@ -409,6 +502,7 @@ class StreamingQuery:
                 )
                 self._slides += 1
             if pending:
+                fault_point("advance_eval")
                 k = len(pending)
                 if weights_dirty or k >= view.size:
                     survivors: list[np.ndarray] = []
@@ -421,9 +515,15 @@ class StreamingQuery:
                     steps += it
                     self._rows.append(row)
         except BaseException:
-            # warm state is half-folded; poison it so the next call re-primes
-            # instead of serving from a partially-updated window
-            self._bounds = None
+            # transactional slide: restore the pre-slide fixpoint state so
+            # the query keeps serving (and can retry the fold) bit-for-bit;
+            # _diff_pos is untouched, so a retry replays the same diffs via
+            # rolling_masks.  Failures outside a staged fold (catch-up from
+            # a cold prime) still poison → re-prime.
+            if staged is not None:
+                self._rollback_slide(staged)
+            else:
+                self._bounds = None
             raise
         self._diff_pos = view.history_end
         if self._owns_view:
@@ -433,6 +533,101 @@ class StreamingQuery:
             advanced=len(pending), **patch_stats,
         )
         self._publish_metrics()
+
+    # -- transactional slide --------------------------------------------------
+    def _stage_slide(self) -> dict:
+        """Snapshot every mutable warm structure before folding a slide in.
+
+        The copies cover the bounds arrays (fixpoints, parents, witness/lane
+        accounting), the QRS slot tables and free list, the cached result
+        rows, and the slide counters — everything ``apply_slide``/eval can
+        touch.  Derived device caches (ELL packs, presence planes) are NOT
+        staged; rollback re-seeds them instead.
+        """
+        return _snapshot_state(self)
+
+    def _rollback_slide(self, staged: dict) -> None:
+        """Restore the pre-slide fixpoint state captured by `_stage_slide`.
+
+        After the restore the query serves the pre-slide window bit-for-bit
+        and — because ``_diff_pos`` rolled back with it — a later advance
+        retries the same diffs.  Derived eval caches are re-seeded at their
+        sticky capacities so no compiled launch shapes change.
+        """
+        t0 = time.perf_counter()
+        _restore_state(self, staged)
+        self._reset_eval_caches()
+        from repro.obs.metrics import get_registry
+
+        reg = get_registry()
+        reg.counter(
+            "advance_rollbacks_total",
+            "failed slide advances rolled back to the pre-slide fixpoint",
+        ).inc()
+        reg.histogram(
+            "advance_rollback_seconds", "slide rollback wall time"
+        ).observe(time.perf_counter() - t0)
+        if self.events is not None:
+            self.events.emit(
+                "rollback", diff_pos=int(self._diff_pos),
+                slides=int(self._slides),
+            )
+
+    def _reset_eval_caches(self) -> None:
+        """Re-seed derived eval caches after a rollback (sticky shapes kept).
+
+        The presence planes and the ELL pack key on pack epochs that moved
+        with the failed fold; rebuilding them from the restored slot tables
+        is bit-for-bit safe (row-split min/max reductions are order-exact)
+        and is the same move live resharding performs on every migration.
+        """
+        self._presence = {}
+        if self._qrs is None or not hasattr(self._qrs, "_ell_packer"):
+            return  # sharded QRS masks keep their packers in _ell_cache
+        from repro.graph.ell import StableEllPacker
+
+        old = self._qrs._ell_packer
+        fresh = StableEllPacker(
+            old.num_vertices, slot_width=old.slot_width,
+            row_align=old.row_align,
+        )
+        fresh.num_rows = old.num_rows  # sticky capacity: no recompiles
+        fresh.class_history = list(old.class_history)
+        self._qrs._ell_packer = fresh
+        self._qrs._ell = None
+        self._qrs._ell_version = -1
+
+    def _quarantine_delta(self, delta, exc) -> None:
+        """Dead-letter a poisoned delta batch and keep serving.
+
+        Log validation rejects a bad batch BEFORE any mutation, so the tip
+        is exactly as if the batch never arrived; the slide proceeds over
+        the durable snapshots and a cleaned redelivery converges bit-for-bit.
+        """
+        snapshot = int(self.view.log.num_snapshots)
+        self.dead_letters.record(delta, exc, {"snapshot": snapshot})
+        from repro.obs.metrics import get_registry
+
+        get_registry().counter(
+            "delta_quarantined_total",
+            "delta batches rejected by log validation and dead-lettered",
+        ).inc()
+        if self.events is not None:
+            self.events.emit(
+                "quarantine", error=str(exc), snapshot=snapshot,
+            )
+
+    def _note_ingest_fault(self) -> None:
+        from repro.obs.metrics import get_registry
+
+        get_registry().counter(
+            "ingest_faults_total",
+            "ingest faults absorbed by the serving path",
+        ).inc()
+        if self.events is not None:
+            self.events.emit(
+                "ingest_fault", snapshot=int(self.view.log.num_snapshots),
+            )
 
     def _make_bounds(self):
         """Streaming bounds maintainer (overridden by the sharded subclass)."""
@@ -446,6 +641,14 @@ class StreamingQuery:
 
     def _prime(self):
         """Cold start: full bounds + QRS build + one solve per window snapshot."""
+        try:
+            self._prime_inner()
+        except BaseException:
+            # a half-built cold start must not masquerade as warm state
+            self._bounds = None
+            raise
+
+    def _prime_inner(self):
         t0 = time.perf_counter()
         self._bounds = self._make_bounds()
         self._qrs = self._make_qrs()

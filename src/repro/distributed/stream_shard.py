@@ -1122,6 +1122,16 @@ class _ShardedEllMixin:
             self.model_axis, default_interpret(),
         )
 
+    def _reset_eval_caches(self) -> None:
+        """Rollback hook: rebuild the per-shard ELL cache at its sticky row
+        class (the exact move :meth:`reshard` performs on every migration,
+        proven bit-for-bit), on top of the base presence-plane reset."""
+        super()._reset_eval_caches()
+        if getattr(self, "_ell_cache", None) is not None:
+            self._ell_cache = self._make_ell_cache(
+                row_cap=self._ell_cache._row_cap
+            )
+
     # -- live migration (layout epochs) ---------------------------------------
     def reshard(self, assignment=None, *, degree_hist=None,
                 mesh: Optional[Mesh] = None) -> dict:

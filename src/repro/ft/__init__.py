@@ -1,10 +1,31 @@
-from repro.ft.straggler import StragglerDetector
-from repro.ft.heartbeat import HeartbeatMonitor
-from repro.ft.recovery import ServeSupervisor, TrainSupervisor
+"""Fault tolerance: stragglers, heartbeats, supervisors, fault injection.
 
-__all__ = [
-    "StragglerDetector",
-    "HeartbeatMonitor",
-    "ServeSupervisor",
-    "TrainSupervisor",
-]
+Submodules are loaded lazily (PEP 562): :mod:`repro.ft.faultinject` has no
+``repro`` dependencies and is imported by the delta log / query layers, so
+eagerly pulling in :mod:`repro.ft.recovery` here (→ checkpoint → graph)
+would close an import cycle.
+"""
+import importlib
+
+_LAZY = {
+    "StragglerDetector": "repro.ft.straggler",
+    "HeartbeatMonitor": "repro.ft.heartbeat",
+    "ServeSupervisor": "repro.ft.recovery",
+    "TrainSupervisor": "repro.ft.recovery",
+    "FaultSpec": "repro.ft.faultinject",
+    "FaultPlan": "repro.ft.faultinject",
+    "FaultInjector": "repro.ft.faultinject",
+    "InjectedFault": "repro.ft.faultinject",
+    "DeadLetterLog": "repro.ft.faultinject",
+    "inject": "repro.ft.faultinject",
+    "ChaosHarness": "repro.ft.chaos",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.ft' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,359 @@
+"""Deterministic fault injection for the ingest→serve→checkpoint stack.
+
+The module is intentionally dependency-free (no ``repro.*`` imports) so any
+layer — delta log, query advance, checkpoint manager, pipelined executor —
+can thread an injection point through its hot path without import cycles.
+
+Design mirrors ``obs/trace.py``: a module-global active injector that every
+``*_point`` helper checks first.  When no injector is armed the helpers are
+a single ``is None`` test on the host, so the serving path pays nothing and
+no traced/JIT'd computation ever sees the fault layer (zero new
+collectives by construction).
+
+Fault sites are plain strings; each site keeps a per-``(site, shard)``
+occurrence counter, and a :class:`FaultSpec` selects the *n-th occurrence*
+of a site (``slide``), optionally restricted to one shard.  This makes a
+plan deterministic under replay: the same seeded schedule fires at the
+same phase of the same slide every run.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "InjectedFault",
+    "FaultSpec",
+    "FaultPlan",
+    "FaultInjector",
+    "DeadLetterLog",
+    "inject",
+    "active_injector",
+    "fault_point",
+    "corrupt_point",
+    "stall_point",
+    "fault_file_point",
+]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by :func:`fault_point` when a planned fault fires."""
+
+
+# Injection sites threaded through the stack.  Grouped here so seeded plans
+# can draw from the full space; the strings are the single source of truth.
+INGEST_SITES = ("ingest", "ingest_shard")
+ADVANCE_SITES = (
+    "advance_delta_route",
+    "advance_bounds_refresh",
+    "advance_qrs_patch",
+    "advance_eval",
+)
+CHECKPOINT_SITES = ("ckpt_torn", "ckpt_payload")
+EXECUTOR_SITES = ("executor_stall",)
+ALL_SITES = INGEST_SITES + ADVANCE_SITES + CHECKPOINT_SITES + EXECUTOR_SITES
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault.
+
+    ``slide``
+        Which occurrence of ``site`` (per shard) fires, counted from 0 by
+        the injector.  ``-1`` means every occurrence.
+    ``shard``
+        Restrict to one shard index; ``-1`` matches any shard (including
+        unsharded sites, which report shard ``-1``).
+    ``mode``
+        Site-specific detail: an ingest corruption kind (``"range"`` /
+        ``"malformed"`` / ``"duplicate"``), a file corruption kind
+        (``"bitflip"`` / ``"truncate"``), free-form otherwise.
+    ``payload``
+        Numeric knob (stall seconds for ``executor_stall``).
+    ``times``
+        How many matching occurrences fire; ``-1`` = persistent.
+    """
+
+    site: str
+    slide: int = 0
+    shard: int = -1
+    mode: str = ""
+    payload: float = 0.0
+    times: int = 1
+
+
+@dataclass
+class FaultPlan:
+    """A deterministic schedule of :class:`FaultSpec`s."""
+
+    specs: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        self.specs = tuple(self.specs)
+
+    @classmethod
+    def seeded(
+        cls,
+        seed: int,
+        *,
+        n_faults: int = 2,
+        n_slides: int = 6,
+        n_shards: int = 0,
+        sites=None,
+    ) -> "FaultPlan":
+        """Draw a random multi-fault schedule from ``seed``.
+
+        Sites are drawn from ``sites`` (default: every ingest + advance
+        site), occurrence indices from ``[0, n_slides)``, shards from
+        ``[0, n_shards)`` when sharded.  Ingest faults get a random
+        corruption mode.  Deterministic: same seed → same plan.
+        """
+        rng = np.random.default_rng(seed)
+        pool = tuple(sites) if sites is not None else INGEST_SITES[:1] + ADVANCE_SITES
+        specs = []
+        for _ in range(int(n_faults)):
+            site = pool[int(rng.integers(len(pool)))]
+            slide = int(rng.integers(n_slides)) if n_slides > 0 else 0
+            # only per-shard sites report a shard index; everything else
+            # reports -1 and a pinned shard would never match
+            shard = (
+                int(rng.integers(n_shards))
+                if n_shards > 0 and site == "ingest_shard" else -1
+            )
+            mode = ""
+            if site in INGEST_SITES:
+                mode = ("range", "malformed", "duplicate")[int(rng.integers(3))]
+            elif site == "ckpt_payload":
+                mode = ("bitflip", "truncate")[int(rng.integers(2))]
+            specs.append(FaultSpec(site=site, slide=slide, shard=shard, mode=mode))
+        return cls(specs=tuple(specs), seed=int(seed))
+
+
+class FaultInjector:
+    """Evaluates a :class:`FaultPlan` against live occurrence counters."""
+
+    def __init__(self, plan: FaultPlan, events=None):
+        self.plan = plan
+        self.events = events
+        self._lock = threading.Lock()
+        # (site, shard) → next occurrence index
+        self._counts: dict = {}
+        # id(spec) → times fired so far
+        self._fired: dict = {}
+        self.fired_log: list = []
+
+    # ------------------------------------------------------------- core
+    def _match(self, site: str, shard: int):
+        """Advance the (site, shard) counter; return the firing spec or None."""
+        with self._lock:
+            key = (site, shard)
+            occ = self._counts.get(key, 0)
+            self._counts[key] = occ + 1
+            for spec in self.plan.specs:
+                if spec.site != site:
+                    continue
+                if spec.shard != -1 and spec.shard != shard:
+                    continue
+                if spec.slide != -1 and spec.slide != occ:
+                    continue
+                fired = self._fired.get(id(spec), 0)
+                if spec.times != -1 and fired >= spec.times:
+                    continue
+                self._fired[id(spec)] = fired + 1
+                rec = {
+                    "site": site,
+                    "shard": shard,
+                    "occurrence": occ,
+                    "mode": spec.mode,
+                }
+                self.fired_log.append(rec)
+                if self.events is not None:
+                    self.events.emit("fault_injected", **rec)
+                return spec
+        return None
+
+    @property
+    def faults_fired(self) -> int:
+        return len(self.fired_log)
+
+
+# ------------------------------------------------------------------ global
+_ACTIVE: FaultInjector | None = None
+_ACTIVE_LOCK = threading.Lock()
+
+
+def active_injector() -> FaultInjector | None:
+    return _ACTIVE
+
+
+@contextmanager
+def inject(plan: FaultPlan, events=None):
+    """Arm ``plan`` for the dynamic extent of the block.
+
+    Yields the :class:`FaultInjector` so callers can inspect
+    ``faults_fired`` / ``fired_log`` afterwards.  Nested arming raises —
+    overlapping chaos schedules would make occurrence counting ambiguous.
+    """
+    global _ACTIVE
+    inj = FaultInjector(plan, events=events)
+    with _ACTIVE_LOCK:
+        if _ACTIVE is not None:
+            raise RuntimeError("a FaultPlan is already armed")
+        _ACTIVE = inj
+    try:
+        yield inj
+    finally:
+        with _ACTIVE_LOCK:
+            _ACTIVE = None
+
+
+# ------------------------------------------------------------------ points
+def fault_point(site: str, shard: int = -1) -> None:
+    """Raise :class:`InjectedFault` if the armed plan targets this site."""
+    inj = _ACTIVE
+    if inj is None:
+        return
+    spec = inj._match(site, shard)
+    if spec is not None:
+        raise InjectedFault(f"injected fault at {site} (shard {shard})")
+
+
+def corrupt_point(site: str, value, *, num_vertices: int = 0, shard: int = -1):
+    """Return ``value`` or a corrupted copy if the armed plan fires here.
+
+    Used on delta batches before validation: the corruption modes are all
+    guaranteed-rejected by ``_validate_delta``, so a fired corruption turns
+    into a clean validation error the quarantine path can absorb.
+    """
+    inj = _ACTIVE
+    if inj is None:
+        return value
+    spec = inj._match(site, shard)
+    if spec is None:
+        return value
+    return _corrupt_delta(value, spec.mode or "malformed", num_vertices)
+
+
+def stall_point(site: str, shard: int = -1) -> float:
+    """Sleep ``spec.payload`` seconds if the armed plan fires here."""
+    inj = _ACTIVE
+    if inj is None:
+        return 0.0
+    spec = inj._match(site, shard)
+    if spec is None:
+        return 0.0
+    delay = float(spec.payload) if spec.payload else 0.05
+    time.sleep(delay)
+    return delay
+
+
+def fault_file_point(site: str, path: str, shard: int = -1) -> bool:
+    """Corrupt the file at ``path`` in place if the armed plan fires here.
+
+    Modes: ``"bitflip"`` flips one bit mid-file; ``"truncate"`` halves it.
+    Returns True when a corruption was applied.
+    """
+    inj = _ACTIVE
+    if inj is None:
+        return False
+    spec = inj._match(site, shard)
+    if spec is None:
+        return False
+    size = os.path.getsize(path)
+    if size == 0:
+        return False
+    if (spec.mode or "bitflip") == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(1, size // 2))
+    else:
+        off = size // 2
+        with open(path, "r+b") as f:
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0x40]))
+    return True
+
+
+# ------------------------------------------------------------------ corrupt
+def _corrupt_delta(delta, mode: str, num_vertices: int):
+    """Produce a delta batch that ``_validate_delta`` must reject.
+
+    ``delta`` is the ``(add_src, add_dst, add_w, del_src, del_dst)`` tuple
+    (weights possibly absent).  The input arrays are never mutated.
+    """
+    parts = [np.asarray(p).copy() for p in delta]
+    while len(parts) < 5:
+        parts.append(np.zeros(0, dtype=parts[0].dtype if parts else np.int64))
+    a_src, a_dst, a_w, d_src, d_dst = parts[:5]
+
+    if mode == "duplicate" and len(d_src) == 0:
+        mode = "malformed"  # no deletion to duplicate → fall back
+
+    if mode == "range":
+        if len(a_src):
+            a_dst = a_dst.copy()
+            a_dst[0] = num_vertices + 7
+        else:
+            a_src = np.array([0], dtype=np.int64)
+            a_dst = np.array([num_vertices + 7], dtype=np.int64)
+            a_w = np.array([1.0], dtype=np.float64)
+    elif mode == "duplicate":
+        d_src = np.concatenate([d_src, d_src[:1]])
+        d_dst = np.concatenate([d_dst, d_dst[:1]])
+    else:  # malformed: length mismatch between add columns
+        a_src = np.concatenate([a_src, np.array([0], dtype=a_src.dtype)])
+
+    return (a_src, a_dst, a_w, d_src, d_dst)
+
+
+# ------------------------------------------------------------------ DLQ
+@dataclass
+class DeadLetter:
+    delta: object
+    error: str
+    context: dict = field(default_factory=dict)
+    ts: float = 0.0
+
+
+class DeadLetterLog:
+    """Bounded quarantine log for rejected delta batches."""
+
+    def __init__(self, maxlen: int = 256):
+        self._entries: deque = deque(maxlen=maxlen)
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def record(self, delta, error, context: dict | None = None) -> DeadLetter:
+        entry = DeadLetter(
+            delta=delta,
+            error=f"{type(error).__name__}: {error}",
+            context=dict(context or {}),
+            ts=time.time(),
+        )
+        with self._lock:
+            self._entries.append(entry)
+            self.total += 1
+        return entry
+
+    @property
+    def entries(self) -> list:
+        with self._lock:
+            return list(self._entries)
+
+    def drain(self) -> list:
+        with self._lock:
+            out = list(self._entries)
+            self._entries.clear()
+            return out
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

@@ -28,11 +28,19 @@ class HeartbeatMonitor:
     timeout: float = 60.0
     clock: Callable[[], float] = time.monotonic
     events: Optional[EventLog] = None
+    # flapping-worker readmission backoff: a worker that died k times inside
+    # ``flap_window`` waits min(readmit_base·2^(k-1), readmit_cap) seconds
+    # before rejoining — a crash-looping replica can't churn the membership
+    readmit_base: float = 1.0
+    readmit_cap: float = 60.0
+    flap_window: float = 300.0
 
     def __post_init__(self):
         now = self.clock()
         self.last_beat = {w: now for w in range(self.num_workers)}
         self.declared_dead: set[int] = set()
+        self._deaths: dict[int, list[float]] = {}
+        self._pending: dict[int, float] = {}  # worker → readmit-ready time
         reg = get_registry()
         gauge = reg.gauge(
             "heartbeat_last_beat_age_seconds",
@@ -58,6 +66,7 @@ class HeartbeatMonitor:
         for w, t in self.last_beat.items():
             if w not in self.declared_dead and now - t > self.timeout:
                 self.declared_dead.add(w)
+                self._deaths.setdefault(w, []).append(now)
                 get_registry().counter(
                     "heartbeat_missed_beats_total",
                     "workers declared dead by beat timeout",
@@ -67,12 +76,56 @@ class HeartbeatMonitor:
                         "missed_beat", worker=w, age=now - t,
                         timeout=self.timeout,
                     )
+        # release parked readmissions whose backoff has elapsed
+        for w, ready in list(self._pending.items()):
+            if now >= ready:
+                del self._pending[w]
+                self._readmit_now(w, now)
         return set(self.declared_dead)
 
     def alive_count(self) -> int:
         return self.num_workers - len(self.dead_workers())
 
-    def readmit(self, worker: int):
-        """Supervisor-controlled rejoin after recovery."""
+    def _readmit_now(self, worker: int, now: float) -> None:
         self.declared_dead.discard(worker)
-        self.last_beat[worker] = self.clock()
+        self.last_beat[worker] = now
+        get_registry().gauge(
+            "heartbeat_readmit_backoff_seconds",
+            "remaining readmission backoff per worker (0 = admitted)",
+        ).set(0.0, worker=str(worker))
+
+    def readmit(self, worker: int) -> float:
+        """Supervisor-controlled rejoin after recovery.
+
+        A worker with a single recent death rejoins immediately.  A flapping
+        worker — ``k`` deaths inside ``flap_window`` — is parked for
+        ``min(readmit_base · 2^(k-1), readmit_cap)`` seconds: it stays in
+        ``declared_dead`` (beats are ignored) and :meth:`dead_workers`
+        admits it automatically once the backoff elapses.  Returns the wait
+        in seconds (0.0 = admitted now).
+        """
+        now = self.clock()
+        deaths = [
+            t for t in self._deaths.get(worker, ())
+            if now - t <= self.flap_window
+        ]
+        self._deaths[worker] = deaths
+        k = len(deaths)
+        wait = (
+            0.0 if k <= 1
+            else min(self.readmit_base * (2.0 ** (k - 1)), self.readmit_cap)
+        )
+        if wait > 0.0 and worker in self.declared_dead:
+            self._pending[worker] = now + wait
+            get_registry().gauge(
+                "heartbeat_readmit_backoff_seconds",
+                "remaining readmission backoff per worker (0 = admitted)",
+            ).set(wait, worker=str(worker))
+            if self.events is not None:
+                self.events.emit(
+                    "readmit_backoff", worker=worker, flaps=k, wait=wait,
+                )
+            return wait
+        self._pending.pop(worker, None)
+        self._readmit_now(worker, now)
+        return 0.0

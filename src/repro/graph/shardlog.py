@@ -40,6 +40,7 @@ from typing import Iterator, Optional, Sequence, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.faultinject import InjectedFault, corrupt_point, fault_point
 from repro.graph.stream import STREAM_ALIGN, SlideDiff, SnapshotLog, WindowView
 from repro.graph.structures import EvolvingGraph, PAD_ALIGN, pack_presence
 from repro.utils.padding import pad_to, round_up
@@ -474,6 +475,11 @@ class ShardedSnapshotLog:
         Shards receiving no edges still append an (empty) snapshot so
         per-shard snapshot indices stay aligned with the global log.
         """
+        add_src, add_dst, add_w, del_src, del_dst = corrupt_point(
+            "ingest",
+            (add_src, add_dst, add_w, del_src, del_dst),
+            num_vertices=self.num_vertices,
+        )
         n_add = len(np.asarray(add_src).ravel())
         if (n_add != len(np.asarray(add_dst).ravel())
                 or n_add != len(np.asarray(add_w).ravel())):
@@ -495,8 +501,19 @@ class ShardedSnapshotLog:
             for s in range(self.n_shards)
         ]
         t = -1
-        for s, p in enumerate(prepared):
-            t = self.shards[s].commit_delta(p)
+        s = 0
+        try:
+            for s, p in enumerate(prepared):
+                fault_point("ingest_shard", shard=s)
+                t = self.shards[s].commit_delta(p)
+        except InjectedFault:
+            # torn cross-shard append: the prepared tokens stay valid (the
+            # per-shard logs are independent and nothing else intervened),
+            # so finish committing the remaining shards before surfacing
+            # the fault — the log is all-or-nothing either way, never torn.
+            for s2 in range(s, self.n_shards):
+                t = self.shards[s2].commit_delta(prepared[s2])
+            raise
         return t
 
     @classmethod
@@ -771,6 +788,12 @@ class ShardedWindowView:
         ]
         self._history_offset = self.history_end
         self.history = []
+        # the rebuilt per-shard views must stay on the same absolute slide
+        # axis as this view: prune_history forwards absolute positions, and
+        # a shard view restarting at 0 would over-prune by the cut amount —
+        # retiring snapshot ids a post-reshard rollback still replays
+        for v in self.views:
+            v._history_offset = self._history_offset
         return installed
 
     # -- sliding --------------------------------------------------------------

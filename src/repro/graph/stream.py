@@ -48,6 +48,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.faultinject import corrupt_point
 from repro.graph.structures import EvolvingGraph, PAD_ALIGN, pack_presence
 from repro.utils.padding import pad_to, round_up
 
@@ -268,6 +269,11 @@ class SnapshotLog:
         Validates the whole batch before touching the tip, so a bad delta
         cannot leave the log half-mutated with no snapshot recorded.
         """
+        add_src, add_dst, add_w, del_src, del_dst = corrupt_point(
+            "ingest",
+            (add_src, add_dst, add_w, del_src, del_dst),
+            num_vertices=self.num_vertices,
+        )
         return self.commit_delta(
             self.prepare_delta(add_src, add_dst, add_w, del_src, del_dst)
         )

@@ -131,6 +131,14 @@ class EventLog:
         with self._lock:
             return [e for e in self.events if e["event"] == kind]
 
+    def counts(self) -> dict:
+        """``{event kind: occurrences}`` over the in-memory history."""
+        out: dict[str, int] = {}
+        with self._lock:
+            for e in self.events:
+                out[e["event"]] = out.get(e["event"], 0) + 1
+        return out
+
 
 def serve_prometheus(
     port: int,

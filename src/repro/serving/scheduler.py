@@ -40,13 +40,45 @@ from typing import Callable, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.faultinject import DeadLetterLog, stall_point
 from repro.obs.metrics import get_registry
 from repro.obs.trace import mark_ready, span
 
 StreamCacheInfo = namedtuple(
     "StreamCacheInfo",
-    ["hits", "misses", "evictions", "currsize", "maxsize", "lane_supersteps"],
+    # trailing degraded-serving fields keep positional unpacking of the
+    # original six stable
+    ["hits", "misses", "evictions", "currsize", "maxsize", "lane_supersteps",
+     "degraded", "slides_behind"],
 )
+
+
+class AdvanceRetryExhausted(RuntimeError):
+    """A group's advance kept failing past the batcher's retry budget.
+
+    Raised out of the serving path ONLY after ``retry_budget`` consecutive
+    failed advances of one watcher group — the escalation signal
+    :class:`~repro.ft.recovery.ServeSupervisor` answers with a checkpoint
+    restore.  Until then failures degrade to last-good results.
+    """
+
+
+class WindowResults(dict):
+    """``{(query, source): (S, V) rows}`` plus staleness metadata.
+
+    A plain dict (existing consumers index it unchanged) carrying the
+    degraded-mode contract: ``degraded`` is True when any served group
+    returned last-good rows instead of folding the newest slide in, and
+    ``slides_behind`` maps every watcher to how many window slides its rows
+    lag the log tip (0 = fresh).  ``retries`` totals the failed advance
+    attempts currently outstanding across the window's groups.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.degraded: bool = False
+        self.slides_behind: dict = {}
+        self.retries: int = 0
 
 
 @dataclasses.dataclass
@@ -229,11 +261,18 @@ class QueryBatcher:
         pipelined: bool = False,
         quarantine_factor: Optional[float] = None,
         reshard_policy: Optional[ReshardPolicy] = None,
+        retry_budget: int = 8,
+        backoff_base: float = 0.05,
+        backoff_cap: float = 2.0,
+        advance_timeout: Optional[float] = None,
+        events=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if stream_capacity < 1:
             raise ValueError("stream_capacity must be >= 1")
+        if retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
         self.max_batch = max_batch
         self.method = method
         self.stream_capacity = stream_capacity
@@ -254,6 +293,20 @@ class QueryBatcher:
         # (pipelined-executor) window job — serving lanes keep draining
         self.reshard_policy = reshard_policy
         self._reshard_state: dict = {}  # id(view) → {"slides", "e_cap"}
+        # degraded-mode serving: a group whose advance fails is rolled back
+        # (transactional slide) and served from its last-good fixpoint with
+        # staleness metadata; the advance is retried with capped exponential
+        # backoff and escalates (AdvanceRetryExhausted) only once
+        # `retry_budget` consecutive attempts failed.  `advance_timeout`
+        # flags slow-but-successful advances (metrics only, never degraded).
+        self.retry_budget = int(retry_budget)
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.advance_timeout = advance_timeout
+        self.events = events
+        self._degraded: dict = {}  # gkey → {"failures", "next_retry"}
+        # poisoned delta batches rejected by log validation (ingest path)
+        self.dead_letters = DeadLetterLog()
         self._clock = clock
         self._executor: Optional[ThreadPoolExecutor] = None
         self.queue: deque[QueryRequest] = deque()
@@ -399,6 +452,7 @@ class QueryBatcher:
                     view, str(query), [int(source)], method=method
                 )
                 batch._defer_fetch = self.pipelined
+                batch.events = self.events
                 batch.results  # prime eagerly: pay the cold solve pre-traffic
                 self._batches[gkey] = batch
             else:
@@ -436,6 +490,7 @@ class QueryBatcher:
             batch.remove_source(entry.sq.source)
         else:
             del self._batches[gkey]  # last lane: drop the whole group
+            self._degraded.pop(gkey, None)
 
     def watching(self, view=None) -> list:
         """Warm streaming queries (optionally restricted to one view)."""
@@ -460,6 +515,15 @@ class QueryBatcher:
             for s, steps in batch.lane_supersteps.items():
                 key = (batch.semiring.name, s)
                 lanes[key] = max(lanes.get(key, 0), steps)
+        behind: dict = {}
+        for gkey in self._degraded:
+            batch = self._batches.get(gkey)
+            if batch is None:
+                continue
+            lag = max(0, batch.view.history_end - batch.diff_pos)
+            for e in self._streams.values():
+                if e.gkey == gkey:
+                    behind[(e.sq.semiring.name, e.sq.source)] = lag
         return StreamCacheInfo(
             hits=self._stream_hits,
             misses=self._stream_misses,
@@ -467,6 +531,8 @@ class QueryBatcher:
             currsize=len(self._streams),
             maxsize=self.stream_capacity,
             lane_supersteps=lanes,
+            degraded=bool(self._degraded),
+            slides_behind=behind,
         )
 
     def _is_divergent(self, sq) -> bool:
@@ -556,22 +622,18 @@ class QueryBatcher:
             return self.advance_window_async(view, delta).result()
         with span("delta_route"):
             self._evict_stale(exempt_view=view)
-            if delta is not None:
-                view.log.append_snapshot(*delta)
+            self._ingest(view, delta)
             view.slide_to_tip()
-        out = {}
+        out = WindowResults()
         served = []
-        for batch in list(self._batches.values()):
+        for gkey, batch in list(self._batches.items()):
             if batch.view is not view:
                 continue
-            batch.advance()  # one launch for the whole (query, method) group
+            # one launch for the whole (query, method) group; a failed
+            # advance rolls back and serves last-good rows (degraded mode)
+            g = self._serve_group(gkey, batch)
             served.append(batch)
-            res = batch.results  # (Q, S, V), stacked once per group
-            lanes = {s: i for i, s in enumerate(batch.sources)}
-            for e in self._streams.values():
-                sq = e.sq
-                if sq.batch is batch:
-                    out[(sq.semiring.name, sq.source)] = res[lanes[sq.source]]
+            self._fold_group(out, g)
             # deliberately NOT a recency touch: serving a watcher says nothing
             # about whether any client still reads it — idleness (TTL) and
             # LRU order are stamped only by client-side watch() calls, so an
@@ -580,8 +642,158 @@ class QueryBatcher:
         self._quarantine_pathological(view)
         self._maybe_reshard(view)
         if served:
+            # min over ALL groups, degraded included: a lagging group's
+            # unconsumed diffs must stay replayable for its retries
             view.prune_history(min(b.diff_pos for b in served))
         return out
+
+    @staticmethod
+    def _fold_group(out: WindowResults, g: "_GroupResult") -> None:
+        """Merge one group's (possibly degraded) serve into the window dict."""
+        out.update(g.materialize())
+        out.degraded |= g.degraded
+        out.retries += g.retries
+        for qs in g.watchers:
+            out.slides_behind[qs] = g.slides_behind
+
+    # -- degraded-mode serving ------------------------------------------------
+    def _ingest(self, view, delta) -> None:
+        """Append a delta batch, absorbing poisoned/torn-append faults.
+
+        The log's validate-before-mutate contract (and the sharded log's
+        torn-append self-heal) makes every append all-or-nothing, so the
+        serving path can always proceed over durable state: a rejected
+        batch is quarantined to the dead-letter log (clean redelivery
+        converges bit-for-bit), any other ingest fault is recorded and the
+        slide serves whatever committed.  No exception escapes.
+        """
+        if delta is None:
+            return
+        try:
+            view.log.append_snapshot(*delta)
+        except (ValueError, KeyError) as exc:
+            snapshot = int(view.log.num_snapshots)
+            self.dead_letters.record(delta, exc, {"snapshot": snapshot})
+            self._obs.counter(
+                "delta_quarantined_total",
+                "delta batches rejected by log validation and dead-lettered",
+            ).inc()
+            if self.events is not None:
+                self.events.emit(
+                    "quarantine", error=str(exc), snapshot=snapshot,
+                )
+        except Exception as exc:
+            self._obs.counter(
+                "ingest_faults_total",
+                "ingest faults absorbed by the serving path",
+            ).inc()
+            if self.events is not None:
+                self.events.emit("ingest_fault", error=str(exc))
+
+    def _serve_group(self, gkey: tuple, batch) -> "_GroupResult":
+        """Advance one group; never raises within the retry budget.
+
+        On success the freshly folded rows are captured; on failure the
+        transactional advance has already rolled the group back to its
+        pre-slide fixpoint, so last-good rows are simply the group's CURRENT
+        rows, tagged with how many slides they lag (``diff_pos`` rolled back
+        with them, so the lag is exact and the next call retries the same
+        diffs).  Consecutive failures back off exponentially (capped) and
+        raise :class:`AdvanceRetryExhausted` past ``retry_budget``.
+        """
+        st = self._degraded.get(gkey)
+        now = self._clock()
+        if st is not None and now < st["next_retry"]:
+            # still backing off: don't hammer a failing fold every slide
+            return self._stale_result(gkey, batch, st)
+        try:
+            stall_point("executor_stall")
+            t0 = time.perf_counter()
+            if self.pipelined:  # dispatch only; the fetch is the consumer's
+                batch.advance_nowait()
+            else:
+                batch.advance()
+            elapsed = time.perf_counter() - t0
+        except Exception as exc:
+            return self._note_advance_failure(gkey, batch, exc)
+        if self.advance_timeout is not None and elapsed > self.advance_timeout:
+            # slow but successful: flag it, never degrade fresh results
+            self._obs.counter(
+                "serving_slow_advances_total",
+                "group advances exceeding the advance timeout",
+            ).inc()
+            if self.events is not None:
+                self.events.emit(
+                    "slow_advance", gkey=str(gkey), seconds=elapsed,
+                )
+        if st is not None:
+            self._degraded.pop(gkey, None)
+            self._obs.counter(
+                "serving_recoveries_total",
+                "degraded groups recovered within the retry budget",
+            ).inc()
+            if self.events is not None:
+                self.events.emit(
+                    "recovered", gkey=str(gkey), retries=st["failures"],
+                )
+        return self._capture_group(batch)
+
+    def _note_advance_failure(self, gkey: tuple, batch, exc) -> "_GroupResult":
+        st = self._degraded.get(gkey)
+        failures = (st["failures"] if st else 0) + 1
+        if failures > self.retry_budget:
+            self._obs.counter(
+                "serving_retry_exhausted_total",
+                "groups escalated after exhausting the retry budget",
+            ).inc()
+            if self.events is not None:
+                self.events.emit(
+                    "retry_exhausted", gkey=str(gkey), retries=failures - 1,
+                    error=str(exc),
+                )
+            raise AdvanceRetryExhausted(
+                f"group {gkey} failed {failures - 1} retries "
+                f"(budget {self.retry_budget}): {exc}"
+            ) from exc
+        wait = min(self.backoff_base * (2 ** (failures - 1)), self.backoff_cap)
+        st = {"failures": failures, "next_retry": self._clock() + wait}
+        self._degraded[gkey] = st
+        if failures > 1:
+            self._obs.counter(
+                "serving_retries_total", "failed advance retry attempts"
+            ).inc()
+        if self.events is not None:
+            self.events.emit(
+                "degraded", gkey=str(gkey), failures=failures,
+                backoff=wait, error=str(exc),
+            )
+        return self._stale_result(gkey, batch, st)
+
+    def _stale_result(self, gkey: tuple, batch, st: dict) -> "_GroupResult":
+        self._obs.counter(
+            "serving_degraded_slides_total",
+            "group serves answered with last-good (stale) rows",
+        ).inc()
+        return self._capture_group(
+            batch, degraded=True, retries=st["failures"],
+        )
+
+    def _capture_group(self, batch, *, degraded: bool = False,
+                       retries: int = 0) -> "_GroupResult":
+        watchers = [
+            (e.sq.semiring.name, e.sq.source)
+            for e in self._streams.values() if e.sq.batch is batch
+        ]
+        return _GroupResult(
+            rows=list(batch._rows),
+            sources=list(batch.sources),
+            watchers=watchers,
+            degraded=degraded,
+            slides_behind=max(
+                0, batch.view.history_end - batch.diff_pos
+            ) if degraded else 0,
+            retries=retries,
+        )
 
     def _maybe_reshard(self, view) -> Optional[dict]:
         """Check the reshard policy for one served view; migrate if it fires.
@@ -674,43 +886,38 @@ class QueryBatcher:
         """
         with span("delta_route"):
             self._evict_stale(exempt_view=view)
-            if delta is not None:
-                view.log.append_snapshot(*delta)
+            self._ingest(view, delta)
             view.slide_to_tip()
-        groups = [b for b in self._batches.values() if b.view is view]
+        items = [(k, b) for k, b in self._batches.items() if b.view is view]
         futs = []
-        for b in groups:
+        for gkey, b in items:
             f: Future = Future()
             futs.append(f)
             try:
-                f.set_result(self._advance_group(b))
+                f.set_result(self._advance_group(gkey, b))
             except BaseException as exc:  # surfaced at the group's .result()
                 f.set_exception(exc)
         post: Future = Future()
         try:
-            post.set_result(self._post_advance(view, groups))
+            post.set_result(
+                self._post_advance(view, [b for _, b in items])
+            )
         except BaseException as exc:
             post.set_exception(exc)
         return futs, post
 
-    def _advance_group(self, batch):
-        """Advance one group; capture its rows WITHOUT fetching them."""
+    def _advance_group(self, gkey, batch):
+        """Advance one group; capture its rows WITHOUT fetching them.
+
+        Rides the same transactional/degraded machinery as the synchronous
+        path (:meth:`_serve_group`); rows are captured by reference (device
+        arrays are immutable, host rows are only ever written at lanes past
+        the captured count), so the snapshot stays exact even if the group
+        advances again before the consumer materializes it.
+        """
         if not any(b is batch for b in self._batches.values()):
             return None  # evicted after submission (sweep won the race)
-        batch.advance_nowait()
-        watchers = [
-            (e.sq.semiring.name, e.sq.source)
-            for e in self._streams.values() if e.sq.batch is batch
-        ]
-        # rows are captured by reference (device arrays are immutable, host
-        # rows are only ever written at lanes past the captured count), so
-        # this snapshot stays exact even if the group advances again before
-        # the consumer materializes it
-        return _GroupResult(
-            rows=list(batch._rows),
-            sources=list(batch.sources),
-            watchers=watchers,
-        )
+        return self._serve_group(gkey, batch)
 
     def _post_advance(self, view, groups) -> None:
         """Worker-side epilogue: QoS quarantine + resharding + pruning."""
@@ -748,6 +955,7 @@ class QueryBatcher:
                     view, batch.semiring.name, [int(s)], method=batch.method
                 )
                 solo._defer_fetch = self.pipelined
+                solo.events = self.events
                 solo.results  # prime the dedicated group eagerly
                 gkey = (id(view), batch.semiring.name, batch.method, "q", s)
                 self._batches[gkey] = solo
@@ -799,6 +1007,7 @@ class QueryBatcher:
         )
 
     def _checkpoint_state_sync(self, view) -> tuple[dict, dict]:
+        from repro.checkpoint.manager import array_checksums
         from repro.checkpoint.streamstate import (
             STATE_FORMAT, query_payload, window_payload,
         )
@@ -825,6 +1034,7 @@ class QueryBatcher:
             "window_meta": wmeta,
             "groups": gmetas,
             "watchers": watchers,
+            "checksums": array_checksums(tree),
         }
         return tree, extra
 
@@ -854,6 +1064,11 @@ class QueryBatcher:
             )
         if extra.get("state") != "query-batcher":
             raise ValueError(f"not a batcher checkpoint: {extra.get('state')}")
+        sums = extra.get("checksums")
+        if sums:
+            from repro.checkpoint.manager import verify_checksums
+
+            verify_checksums(arrays, sums, where="batcher state")
         self = cls(**kwargs)
         view = rebuild_view(
             arrays, extra["window_meta"], prefix="window/", n_shards=n_shards
@@ -866,6 +1081,7 @@ class QueryBatcher:
             # the batcher prunes shared-view history itself (min over groups)
             b._owns_view = False
             b._defer_fetch = self.pipelined
+            b.events = self.events
             groups.append(b)
         now = self._clock()
         for w in extra["watchers"]:
@@ -913,8 +1129,13 @@ class _GroupResult:
     rows: list
     sources: list
     watchers: list  # (query_name, source) pairs served from this group
+    degraded: bool = False  # rows are last-good, not this slide's fold
+    slides_behind: int = 0  # window slides these rows lag the log tip
+    retries: int = 0  # outstanding failed advance attempts for the group
 
     def materialize(self) -> dict:
+        if not self.rows:  # degraded before ever priming: nothing to serve
+            return {}
         with span("fetch"):
             stacked = np.stack(
                 [np.asarray(r) for r in self.rows], axis=1
@@ -954,12 +1175,27 @@ class PendingWindow:
     def result(self) -> dict:
         if self._out is None:
             futs, post = self._pre.result()
-            out: dict = {}
+            out = WindowResults()
+            first_exc: Optional[BaseException] = None
+            # consume EVERY sibling future before surfacing any error: one
+            # group's failure must not strand the others' results (they
+            # advanced on the worker regardless) or wedge later windows
             for f in futs:
-                g = f.result()
+                try:
+                    g = f.result()
+                except BaseException as exc:
+                    if first_exc is None:
+                        first_exc = exc
+                    continue
                 if g is not None:  # None: group evicted mid-flight
-                    out.update(g.materialize())
-            post.result()  # surface epilogue errors (quarantine/prune)
+                    QueryBatcher._fold_group(out, g)
+            try:
+                post.result()  # surface epilogue errors (quarantine/prune)
+            except BaseException as exc:
+                if first_exc is None:
+                    first_exc = exc
+            if first_exc is not None:
+                raise first_exc  # original traceback, siblings materialized
             self._out = out
         return self._out
 

@@ -10,9 +10,11 @@ window slides, shard-capacity growth under a live query, shard-locality of
 appends/trims, SPMD window serving through ``QueryBatcher``, the per-shard
 SPMD ELL path (``ell``: Pallas vrelax inside shard_map, scalar + Q-folded),
 skew-aware shard assignments (``rebalance``: balanced/hash bit-for-bit plus
-the ≤2x occupancy-spread bound), and the one-collective-per-superstep
+the ≤2x occupancy-spread bound), the one-collective-per-superstep
 invariant checked against the lowered HLO (``collectives``, including the
-ELL kernels).
+ELL kernels), and a chaos schedule under live resharding (``chaos``: torn
+cross-shard append + advance fault adjacent to 8→4→8 migrations, bit-for-bit
+vs a fault-free reference of the same reshard schedule).
 """
 from __future__ import annotations
 
@@ -615,6 +617,43 @@ def check_reshard():
     assert counts.get("all-reduce", 0) == 1, counts
     assert counts.get("all-to-all", 0) == 0, counts
     assert counts.get("collective-permute", 0) == 0, counts
+    print("CHECK_OK")
+
+
+def check_chaos():
+    """Chaos under live resharding on the REAL 8-device mesh: a torn
+    cross-shard append self-heals, the serving group is migrated 8→4 shards
+    mid-stream, an advance fault under the shrunk layout rolls back
+    transactionally (degraded slide, then retry), the group regrows 4→8 —
+    and every post-drain slide is bit-for-bit equal to a fault-free run of
+    the SAME reshard schedule."""
+    from repro.ft.chaos import ChaosHarness
+    from repro.ft.faultinject import FaultPlan, FaultSpec
+
+    def on_slide(i, view, qb):
+        n_to = {1: 4, 2: 8}.get(i)
+        if n_to is None:
+            return
+        log = view.log
+        target = log.assignment.resize(n_to, log.live_degree_histogram())
+        for b in {id(x): x for x in qb._batches.values()
+                  if x.view is view}.values():
+            b.reshard(target)
+        assert log.n_shards == n_to
+
+    h = ChaosHarness(num_snapshots=9, n_shards=N_SHARDS, on_slide=on_slide)
+    plan = FaultPlan(specs=(
+        # torn cross-shard append on shard 3, first served slide
+        FaultSpec(site="ingest_shard", slide=0, shard=3),
+        # advance fault on the slide right after the 8→4 migration
+        FaultSpec(site="advance_qrs_patch", slide=2),
+    ))
+    report = h.run(plan)
+    assert report["faults_fired"] == 2, report["fired"]
+    assert report["converged"], report["mismatches"]
+    assert report["degraded_slides"] >= 1, report
+    assert report["events"].get("ingest_fault", 0) == 1, report["events"]
+    assert report["events"].get("rollback", 0) >= 1, report["events"]
     print("CHECK_OK")
 
 

@@ -1,0 +1,423 @@
+"""Chaos-hardening suite: seeded fault schedules, degraded serving, DLQ,
+checkpoint integrity, heartbeat flap backoff, async error propagation.
+
+The seed sweep drives ≥20 deterministic :class:`FaultPlan` schedules across
+ingest / advance-phase / checkpoint / executor sites, three semirings, both
+streaming engines, and sync / pipelined / sharded serving — every schedule
+must recover bit-for-bit against the fault-free reference (monotone
+fixpoints are unique; the transactional slide makes retries re-fold the
+same diffs).
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.ft.chaos import ChaosHarness
+from repro.ft.faultinject import (
+    ADVANCE_SITES,
+    EXECUTOR_SITES,
+    INGEST_SITES,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    active_injector,
+    corrupt_point,
+    fault_point,
+    inject,
+)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+STREAM = dict(num_snapshots=8)  # 5 served slides per run
+
+
+# =========================================================================
+# Seed sweep: ≥20 schedules × engines × semirings × serving modes
+# =========================================================================
+SWEEP_CONFIGS = {
+    "sync-cqrs-sssp": (dict(method="cqrs"), dict()),
+    "sync-cqrs_ell-sssp": (dict(method="cqrs_ell"), dict()),
+    "pipelined-cqrs-sssp": (
+        dict(method="cqrs", pipelined=True),
+        dict(sites=INGEST_SITES[:1] + ADVANCE_SITES + EXECUTOR_SITES),
+    ),
+    "sharded1-cqrs-sssp": (
+        dict(method="cqrs", n_shards=1),
+        dict(sites=INGEST_SITES + ADVANCE_SITES),
+    ),
+    "sync-cqrs-sswp": (
+        dict(method="cqrs", watchers=(("sswp", 0), ("sswp", 7))), dict(),
+    ),
+    "sync-cqrs-ssnp": (
+        dict(method="cqrs", watchers=(("ssnp", 0), ("ssnp", 7))), dict(),
+    ),
+    "sync-two-groups": (
+        dict(method="cqrs", watchers=(("sssp", 0), ("sswp", 7))),
+        dict(n_faults=3),
+    ),
+}
+SWEEP_CASES = [
+    (cfg, seed)
+    for cfg, seeds in [
+        ("sync-cqrs-sssp", (0, 1, 2, 3)),
+        ("sync-cqrs_ell-sssp", (4, 5)),
+        ("pipelined-cqrs-sssp", (6, 7)),
+        ("sharded1-cqrs-sssp", (8, 9)),
+        ("sync-cqrs-sswp", (10, 11)),
+        ("sync-cqrs-ssnp", (12, 13)),
+        ("sync-two-groups", (14, 15)),
+    ]
+    for seed in seeds
+]
+
+_HARNESSES: dict = {}
+
+
+def _harness(cfg: str) -> ChaosHarness:
+    if cfg not in _HARNESSES:
+        kwargs, _ = SWEEP_CONFIGS[cfg]
+        _HARNESSES[cfg] = ChaosHarness(**STREAM, **kwargs)
+    return _HARNESSES[cfg]
+
+
+@pytest.mark.parametrize("cfg,seed", SWEEP_CASES)
+def test_seeded_schedule_recovers_bit_for_bit(cfg, seed):
+    h = _harness(cfg)
+    _, run_kwargs = SWEEP_CONFIGS[cfg]
+    report = h.run(seed=seed, **run_kwargs)
+    assert report["converged"], (cfg, seed, report["mismatches"], report["fired"])
+    assert report["faults_fired"] >= 1, (cfg, seed, report)
+    assert not report["cache_degraded"]
+
+
+def test_checkpoint_site_schedules_recover():
+    """Torn writes + committed-payload corruption during a chaotic run."""
+    with tempfile.TemporaryDirectory() as d:
+        h = ChaosHarness(num_snapshots=10, ckpt_every=2, ckpt_dir=d)
+        plan = FaultPlan(specs=(
+            FaultSpec(site="ckpt_torn", slide=1),
+            FaultSpec(site="ckpt_payload", slide=2, mode="bitflip"),
+            FaultSpec(site="advance_eval", slide=3),
+        ))
+        report = h.run(plan)
+        assert report["converged"], report["mismatches"]
+        assert report["torn_ckpts"] == 1
+        assert report["ckpt_restore_ok"]
+    with tempfile.TemporaryDirectory() as d:
+        h = ChaosHarness(num_snapshots=10, ckpt_every=2, ckpt_dir=d)
+        plan = FaultPlan(specs=(
+            FaultSpec(site="ckpt_payload", slide=0, mode="truncate"),
+            FaultSpec(site="ingest", slide=2, mode="duplicate"),
+        ))
+        report = h.run(plan)
+        assert report["converged"], report["mismatches"]
+        assert report["ckpt_restore_ok"]
+
+
+def test_executor_stall_schedule_converges():
+    h = ChaosHarness(**STREAM, pipelined=True)
+    plan = FaultPlan(specs=(
+        FaultSpec(site="executor_stall", slide=1, payload=0.02, times=2),
+    ))
+    report = h.run(plan)
+    assert report["converged"]
+    assert report["faults_fired"] >= 1
+
+
+def test_torn_cross_shard_append_self_heals():
+    h = ChaosHarness(**STREAM, n_shards=1)
+    plan = FaultPlan(specs=(FaultSpec(site="ingest_shard", slide=2, shard=0),))
+    report = h.run(plan)
+    assert report["converged"], report["mismatches"]
+    assert report["faults_fired"] == 1
+    # the torn append self-healed: nothing was quarantined, nothing degraded
+    assert report["quarantined"] == 0
+
+
+# =========================================================================
+# Degraded-mode serving contract
+# =========================================================================
+def _serving_fixture(**qb_kwargs):
+    from repro.graph.stream import SnapshotLog, WindowView
+    from repro.obs.export import EventLog
+    from repro.serving.scheduler import QueryBatcher
+
+    h = ChaosHarness(**STREAM)
+    log = SnapshotLog(h.num_vertices, capacity=512)
+    log.append_snapshot(*h.base)
+    for d in h.prime_deltas:
+        log.append_snapshot(*d)
+    view = WindowView(log, size=h.window)
+    now = [0.0]
+    ev = EventLog()
+    qb = QueryBatcher(
+        clock=lambda: now[0], events=ev, backoff_base=0.25, backoff_cap=1.0,
+        **qb_kwargs,
+    )
+    qb.watch(view, "sssp", 0)
+    qb.watch(view, "sssp", 7)
+    return h, view, qb, now, ev
+
+
+def _clean_rows():
+    """Fault-free per-slide rows for the default stream/watcher config."""
+    h = _harness("sync-cqrs-sssp")
+    if h._reference is None:
+        h._reference = h._run(None)
+    return h._reference["rows"]
+
+
+def test_persistent_fault_serves_last_good_with_accurate_lag():
+    """Advance keeps failing → stale rows with exact slides_behind; recovery
+    clears degraded within the budget; no exception escapes."""
+    h, view, qb, now, ev = _serving_fixture(retry_budget=16)
+    clean = _clean_rows()
+
+    plan = FaultPlan(specs=(
+        FaultSpec(site="advance_bounds_refresh", slide=-1, times=3),
+    ))
+    with inject(plan, events=ev) as inj:
+        out0 = qb.advance_window(view, h.serve_deltas[0])   # fail 1
+        assert out0.degraded
+        assert set(out0.slides_behind.values()) == {1}
+        assert qb.cache_info().degraded
+        assert qb.cache_info().slides_behind[("sssp", 0)] == 1
+
+        # next slide arrives while still degraded (backoff passed): the lag
+        # grows and the served rows are still the pre-fault fixpoint
+        now[0] += 10.0
+        out1 = qb.advance_window(view, h.serve_deltas[1])   # fail 2
+        assert out1.degraded
+        assert max(out1.slides_behind.values()) == 2
+
+        now[0] += 10.0
+        out2 = qb.advance_window(view, h.serve_deltas[2])   # fail 3 (last)
+        assert out2.degraded
+        assert max(out2.slides_behind.values()) == 3
+
+        # fault exhausted: the retry catches up all pending diffs at once
+        now[0] += 10.0
+        out3 = qb.advance_window(view, h.serve_deltas[3])
+        assert not out3.degraded
+        assert not qb.cache_info().degraded
+        assert inj.faults_fired == 3
+    for k, v in out3.items():
+        assert np.array_equal(v, clean[3][k]), k
+    kinds = ev.counts()
+    assert kinds.get("rollback", 0) >= 3
+    assert kinds.get("degraded", 0) == 3
+    assert kinds.get("recovered") == 1
+
+
+def test_retry_exhausted_escalates_after_budget():
+    h, view, qb, now, ev = _serving_fixture(retry_budget=2)
+    from repro.serving.scheduler import AdvanceRetryExhausted
+
+    plan = FaultPlan(specs=(
+        FaultSpec(site="advance_qrs_patch", slide=-1, times=-1),
+    ))
+    with inject(plan, events=ev):
+        out = qb.advance_window(view, h.serve_deltas[0])    # failure 1
+        assert out.degraded
+        now[0] += 10.0
+        out = qb.advance_window(view, None)                 # failure 2
+        assert out.degraded
+        now[0] += 10.0
+        with pytest.raises(AdvanceRetryExhausted) as ei:    # budget exhausted
+            qb.advance_window(view, None)
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    assert ev.counts().get("retry_exhausted") == 1
+
+
+def test_poisoned_delta_quarantined_then_redelivered():
+    h, view, qb, now, ev = _serving_fixture()
+    clean = _clean_rows()
+    plan = FaultPlan(specs=(FaultSpec(site="ingest", slide=0, mode="range"),))
+    with inject(plan, events=ev) as inj:
+        out = qb.advance_window(view, h.serve_deltas[0])
+        assert inj.faults_fired == 1
+        assert qb.dead_letters.total == 1
+        assert not out.degraded  # the slide proceeded over durable state
+        entry = qb.dead_letters.entries[0]
+        assert "outside [0," in entry.error
+        # clean redelivery of the SAME batch converges bit-for-bit
+        out = qb.advance_window(view, h.serve_deltas[0])
+    for k, v in out.items():
+        assert np.array_equal(v, clean[0][k]), k
+    assert ev.counts().get("quarantine") == 1
+
+
+# =========================================================================
+# Pipelined async error propagation
+# =========================================================================
+def test_pending_window_propagates_group_failure_without_wedging():
+    """One group's terminal failure fails that window's result with the
+    original cause; the executor survives and the next window is clean."""
+    from repro.serving.scheduler import AdvanceRetryExhausted
+
+    h, view, qb, now, ev = _serving_fixture(retry_budget=0, pipelined=True)
+    qb.watch(view, "sswp", 3)  # sibling group on the same view
+
+    plan = FaultPlan(specs=(FaultSpec(site="advance_eval", slide=0),))
+    with inject(plan, events=ev):
+        pw = qb.advance_window_async(view, h.serve_deltas[0])
+        with pytest.raises(AdvanceRetryExhausted) as ei:
+            pw.result()
+    assert isinstance(ei.value.__cause__, InjectedFault)
+
+    # not wedged: the failed group was rolled back, so the NEXT window
+    # advances everything (the failed group re-folds both pending slides)
+    out = qb.advance_window_async(view, h.serve_deltas[1]).result()
+    assert not out.degraded
+    assert ("sssp", 0) in out and ("sswp", 3) in out
+    assert all(np.isfinite(np.asarray(v)).any() for v in out.values())
+
+
+# =========================================================================
+# Checkpoint integrity
+# =========================================================================
+def test_checkpoint_bitflip_falls_back_to_verifiable_step(tmp_path):
+    from repro.checkpoint import (
+        CheckpointCorruptError, CheckpointManager, resume_streaming,
+        streaming_state,
+    )
+    from repro.core.api import StreamingQuery
+    from repro.graph.stream import SnapshotLog, WindowView
+
+    h = ChaosHarness(**STREAM)
+    log = SnapshotLog(h.num_vertices, capacity=512)
+    log.append_snapshot(*h.base)
+    for d in h.prime_deltas:
+        log.append_snapshot(*d)
+    view = WindowView(log, size=h.window)
+    sq = StreamingQuery(view, "sssp", 0, method="cqrs")
+    ref = np.asarray(sq.results).copy()
+
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, *streaming_state(sq))
+    log.append_snapshot(*h.serve_deltas[0])
+    sq.advance()
+    # step 2's committed payload is bit-flipped mid-file after the rename
+    plan = FaultPlan(specs=(
+        FaultSpec(site="ckpt_payload", slide=0, mode="bitflip"),
+    ))
+    with inject(plan):
+        mgr.save(2, *streaming_state(sq))
+
+    arrays, manifest = mgr.load()        # falls back past the corrupt step
+    assert manifest["step"] == 1
+    resumed = resume_streaming(arrays, manifest["extra"])
+    assert np.array_equal(ref, np.asarray(resumed.results))
+    with pytest.raises(CheckpointCorruptError):
+        mgr.load(2)                      # explicit step: surfaced, not hidden
+    # tampering with a section after load is caught by the extra's checksums
+    bad = dict(arrays)
+    bad["rows/0"] = np.asarray(bad["rows/0"]).copy()
+    bad["rows/0"][0] += 1
+    with pytest.raises(CheckpointCorruptError):
+        resume_streaming(bad, manifest["extra"])
+
+
+def test_supervisor_restores_through_corrupt_checkpoint(tmp_path):
+    """Regression: bit-flip the newest checkpoint mid-payload, crash the
+    replica — ServeSupervisor still restores (from the older verifiable
+    step) and the re-served slides stay bit-for-bit."""
+    from repro.core.api import StreamingQuery
+    from repro.checkpoint import CheckpointManager
+    from repro.ft.recovery import ServeSupervisor
+    from repro.graph.stream import SnapshotLog, WindowView
+
+    h = ChaosHarness(num_snapshots=10)
+
+    def build():
+        log = SnapshotLog(h.num_vertices, capacity=512)
+        log.append_snapshot(*h.base)
+        for d in h.prime_deltas:
+            log.append_snapshot(*d)
+        view = WindowView(log, size=h.window)
+        return StreamingQuery(view, "sssp", 0, method="cqrs")
+
+    ref_replica = build()
+    expect = []
+    for d in h.serve_deltas:
+        ref_replica.advance(d)
+        expect.append(np.asarray(ref_replica.results).copy())
+
+    sup = ServeSupervisor(
+        manager=CheckpointManager(str(tmp_path), keep=0), ckpt_every=2,
+    )
+    # ckpt saves happen at slides 2, 4, 6 (and the final); flip the slide-4
+    # payload (occurrence 2 of ckpt_payload counting the step-0 prime save),
+    # then crash the replica at slide 5 → restore must skip back to slide 2
+    plan = FaultPlan(specs=(
+        FaultSpec(site="ckpt_payload", slide=2, mode="bitflip"),
+        FaultSpec(site="advance_eval", slide=4),
+    ))
+    with inject(plan) as inj:
+        _, served, stats = sup.run(build(), h.serve_deltas)
+    assert inj.faults_fired == 2
+    assert stats["restarts"] == 1
+    for i, (got, want) in enumerate(zip(served, expect)):
+        assert np.array_equal(got, want), f"slide {i} diverged after restore"
+
+
+# =========================================================================
+# Heartbeat flap backoff
+# =========================================================================
+def test_heartbeat_flapping_worker_backs_off():
+    from repro.ft.heartbeat import HeartbeatMonitor
+    from repro.obs.export import EventLog
+
+    t = [0.0]
+    ev = EventLog()
+    hb = HeartbeatMonitor(
+        2, timeout=10.0, clock=lambda: t[0], events=ev,
+        readmit_base=1.0, readmit_cap=8.0, flap_window=1000.0,
+    )
+
+    def die_and_readmit(wait_prev):
+        if wait_prev:  # release the parked readmission first
+            t[0] += wait_prev
+            assert 0 not in hb.dead_workers()
+        t[0] += 11.0
+        assert 0 in hb.dead_workers()
+        return hb.readmit(0)
+
+    waits = []
+    w = 0.0
+    for _ in range(6):
+        w = die_and_readmit(w)
+        waits.append(w)
+    # k deaths in the window → base·2^(k-1), capped
+    assert waits == [0.0, 2.0, 4.0, 8.0, 8.0, 8.0]
+    # while parked the worker stays dead and beats are ignored
+    assert 0 in hb.declared_dead
+    hb.beat(0)
+    assert 0 in hb.declared_dead
+    # flap-window expiry resets the penalty
+    t[0] += 5000.0
+    hb.dead_workers()
+    t[0] += 11.0
+    hb.dead_workers()
+    assert hb.readmit(0) == 0.0
+    flaps = [e["flaps"] for e in ev.of_kind("readmit_backoff")]
+    assert flaps == [2, 3, 4, 5, 6]
+
+
+# =========================================================================
+# Injection is inert when disarmed
+# =========================================================================
+def test_injection_points_are_noops_when_disarmed():
+    assert active_injector() is None
+    fault_point("advance_eval")          # no raise
+    delta = (np.array([0]), np.array([1]), np.array([1.0]))
+    assert corrupt_point("ingest", delta, num_vertices=4) is delta
+    with inject(FaultPlan()) as inj:
+        with pytest.raises(RuntimeError):
+            with inject(FaultPlan()):    # nested arming is ambiguous
+                pass
+        assert inj.faults_fired == 0
+    assert active_injector() is None

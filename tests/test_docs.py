@@ -131,6 +131,18 @@ def test_architecture_covers_online_resharding():
         assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
 
 
+def test_architecture_covers_failure_model():
+    """The failure-model section and its entry points are on the map."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## Failure model & degraded serving" in text
+    for sym in ("FaultPlan", "FaultSpec", "inject", "fault_point",
+                "corrupt_point", "DeadLetterLog", "ChaosHarness",
+                "AdvanceRetryExhausted", "slides_behind", "retry_budget",
+                "CheckpointCorruptError", "array_checksums",
+                "verify_checksums", "readmit", "flap_window"):
+        assert sym in text, f"ARCHITECTURE.md does not mention {sym}"
+
+
 def test_architecture_covers_warm_start_and_recovery():
     """The warm-start/recovery section and its entry points are on the map."""
     text = (REPO / "docs" / "ARCHITECTURE.md").read_text()

@@ -10,8 +10,9 @@ Two layers of coverage:
   ``xla_force_host_platform_device_count`` must be set before jax
   initializes): bit-for-bit advance equivalence across semirings × slides,
   capacity growth under a live query, SPMD serving via ``QueryBatcher``,
-  shard-locality of appends, and the one-collective-per-superstep HLO
-  invariant — see ``tests/_stream_shard_checks.py``.
+  shard-locality of appends, the one-collective-per-superstep HLO
+  invariant, and a fault-during-reshard chaos schedule — see
+  ``tests/_stream_shard_checks.py``.
 """
 from __future__ import annotations
 
@@ -346,7 +347,7 @@ def _run(check: str):
 @pytest.mark.parametrize(
     "check",
     ["equivalence", "growth", "serving", "shard_local", "qbatch",
-     "collectives", "ell", "rebalance", "warmstart", "reshard"],
+     "collectives", "ell", "rebalance", "warmstart", "reshard", "chaos"],
 )
 def test_stream_shard_mesh(check):
     _run(check)
